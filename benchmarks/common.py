@@ -1,0 +1,48 @@
+"""Shared benchmark utilities."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import numpy as np
+
+from repro.core import Executor, PredTrace
+from repro.core.table import Table
+from repro.tpch import ALL_QUERIES, generate
+
+# scale factors: PredTrace-only benches run bigger; baseline comparisons use a
+# smaller SF so the (intentionally slow) lazy baselines stay tractable.
+SF_MAIN = 0.02
+SF_BASELINE = 0.005
+
+_dbs: Dict[float, Dict[str, Table]] = {}
+
+
+def db(sf: float) -> Dict[str, Table]:
+    if sf not in _dbs:
+        _dbs[sf] = generate(sf=sf, seed=1)
+    return _dbs[sf]
+
+
+def time_ms(fn: Callable, repeat: int = 3) -> float:
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e3
+
+
+def emit(rows: List[tuple]):
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+def prepared_predtrace(dbv, qname: str) -> PredTrace:
+    plan = ALL_QUERIES[qname](dbv)
+    res = Executor(dbv).run(plan)
+    pt = PredTrace(dbv, plan)
+    pt.infer(stats=res.stats)
+    pt.run()
+    return pt

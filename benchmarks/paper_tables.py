@@ -1,0 +1,253 @@
+"""Benchmarks reproducing each paper table/figure.
+
+Every ``bench_*`` returns CSV rows ``(name, us_per_call, derived)``.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import Executor, PredTrace
+from repro.core.baselines import (
+    PandaBaseline, RewriteBaseline, TraceBaseline, Unsupported,
+)
+from repro.core.eager import EagerExecutor, oracle_lineage_for_values
+from repro.tpch import ALL_QUERIES
+
+from .common import SF_BASELINE, SF_MAIN, db, prepared_predtrace, time_ms
+
+
+# --------------------------------------------------------------------------- #
+# Table 4: coverage
+# --------------------------------------------------------------------------- #
+
+
+def bench_coverage() -> List[tuple]:
+    d = db(SF_BASELINE)
+    rows = []
+    n_pt = n_tr = n_pd = n_gp = 0
+    for name, qf in ALL_QUERIES.items():
+        plan = qf(d)
+        try:
+            PredTrace(d, plan).infer()
+            n_pt += 1
+        except Exception:
+            pass
+        n_tr += TraceBaseline(d, plan).supports()
+        n_pd += PandaBaseline(d, plan).supports()
+        n_gp += RewriteBaseline(d, plan).supports()
+    rows.append(("coverage.predtrace", 0.0, f"{n_pt}/22 (paper 22)"))
+    rows.append(("coverage.gprom", 0.0, f"{n_gp}/22 (paper 20: Q17/Q20 timeout)"))
+    rows.append(("coverage.trace", 0.0, f"{n_tr}/22 (paper 12)"))
+    rows.append(("coverage.panda", 0.0, f"{n_pd}/22 (paper 5)"))
+    return rows
+
+
+# --------------------------------------------------------------------------- #
+# Figures 5-8: execution-time + storage overhead of materialization
+# --------------------------------------------------------------------------- #
+
+
+def bench_overhead() -> List[tuple]:
+    d = db(SF_MAIN)
+    rows = []
+    added_ms, added_bytes = [], []
+    n_no_inter = 0
+    for name, qf in ALL_QUERIES.items():
+        plan = qf(d)
+        res_plain = Executor(d).run(plan)
+        pt = PredTrace(d, plan)
+        pt.infer(stats=res_plain.stats)
+        t_plain = time_ms(lambda: Executor(d).run(plan))
+        t_mat = time_ms(lambda: Executor(d).run(plan, materialize=pt.lineage_plan.materialize))
+        res_mat = Executor(d).run(plan, materialize=pt.lineage_plan.materialize)
+        storage = sum(t.nbytes() for t in res_mat.materialized.values())
+        n_stages = len(pt.lineage_plan.stages)
+        if n_stages == 0:
+            n_no_inter += 1
+        added_ms.append(max(t_mat - t_plain, 0.0))
+        added_bytes.append(storage)
+        rows.append(
+            (f"overhead.{name}", max(t_mat - t_plain, 0.0) * 1e3,
+             f"stages={n_stages} storage_kb={storage/1024:.1f}")
+        )
+    rows.append(("overhead.avg_ms", float(np.mean(added_ms)) * 1e3,
+                 f"paper avg 34.7ms@1GB; {n_no_inter} queries save nothing"))
+    rows.append(("overhead.avg_storage_kb", float(np.mean(added_bytes)) / 1024,
+                 "paper avg 4531KB@1GB"))
+    return rows
+
+
+# --------------------------------------------------------------------------- #
+# Figures 9-10: lineage query time vs lazy baselines
+# --------------------------------------------------------------------------- #
+
+
+def bench_query_time() -> List[tuple]:
+    d = db(SF_BASELINE)
+    rows = []
+    sums = {"predtrace": [], "gprom": [], "trace": [], "panda": []}
+    for name, qf in ALL_QUERIES.items():
+        plan = qf(d)
+        out = Executor(d).run(plan).output
+        if out.nrows == 0:
+            continue
+        pt = prepared_predtrace(d, name)
+        t_pt = time_ms(lambda: pt.query(0), repeat=2)
+        sums["predtrace"].append(t_pt)
+        derived = [f"predtrace={t_pt:.1f}ms"]
+        for cls, tag in ((RewriteBaseline, "gprom"), (TraceBaseline, "trace"),
+                         (PandaBaseline, "panda")):
+            b = cls(d, plan)
+            if not b.supports():
+                derived.append(f"{tag}=n/a")
+                continue
+            try:
+                if hasattr(b, "prepare"):
+                    b.prepare()
+                t = time_ms(lambda: b.query(out, 0), repeat=1)
+                sums[tag].append(t)
+                derived.append(f"{tag}={t:.1f}ms")
+            except Unsupported as e:
+                derived.append(f"{tag}=budget")
+        rows.append((f"query_time.{name}", t_pt * 1e3, " ".join(derived)))
+    for tag, vals in sums.items():
+        if vals:
+            rows.append((f"query_time.avg.{tag}", float(np.mean(vals)) * 1e3,
+                         f"n={len(vals)}"))
+    if sums["predtrace"] and sums["gprom"]:
+        speedup = np.mean(sums["gprom"]) / np.mean(sums["predtrace"])
+        rows.append(("query_time.speedup_vs_gprom", 0.0,
+                     f"{speedup:.1f}x (paper: 98x vs best lazy)"))
+    return rows
+
+
+def bench_query_scaling() -> List[tuple]:
+    """PredTrace-vs-rewrite gap grows with data size (paper's 98x is at 1 GB;
+    full-scale is out of CPU budget here — the trend is the evidence)."""
+    from repro.tpch import generate
+
+    rows = []
+    for sf in (0.002, 0.01, 0.05):
+        d = generate(sf=sf, seed=1)
+        plan = ALL_QUERIES["q4"](d)
+        out = Executor(d).run(plan).output
+        pt = prepared_predtrace(d, "q4")
+        t_pt = time_ms(lambda: pt.query(0), repeat=2)
+        b = RewriteBaseline(d, plan)
+        b.prepare()
+        t_gp = time_ms(lambda: b.query(out, 0), repeat=1)
+        rows.append(
+            (f"query_scaling.sf{sf}", t_pt * 1e3,
+             f"lineitem={d['lineitem'].nrows} predtrace={t_pt:.1f}ms "
+             f"gprom={t_gp:.1f}ms ratio={t_gp/max(t_pt,1e-9):.1f}x")
+        )
+    return rows
+
+
+# --------------------------------------------------------------------------- #
+# Table 5: intermediate-result optimization
+# --------------------------------------------------------------------------- #
+
+
+def bench_inter_opt() -> List[tuple]:
+    d = db(SF_MAIN)
+    rows = []
+    for name in ("q3", "q5", "q7", "q19"):
+        plan = ALL_QUERIES[name](d)
+        res = Executor(d).run(plan)
+        if res.output.nrows == 0:
+            continue
+        # naive: materialize at the failure operator, no deferral/projection
+        pt_naive = PredTrace(d, plan, optimize_placement=False)
+        pt_naive.infer()
+        for s in pt_naive.lineage_plan.stages:
+            s.keep_cols = None  # disable column projection
+        pt_naive.run()
+        naive_bytes = sum(t.nbytes() for t in pt_naive.exec_result.materialized.values())
+        naive_rows = sum(t.nrows for t in pt_naive.exec_result.materialized.values())
+        t_naive = time_ms(lambda: pt_naive.query(0), repeat=2)
+
+        pt_opt = prepared_predtrace(d, name)
+        opt_bytes = sum(t.nbytes() for t in pt_opt.exec_result.materialized.values())
+        opt_rows = sum(t.nrows for t in pt_opt.exec_result.materialized.values())
+        t_opt = time_ms(lambda: pt_opt.query(0), repeat=2)
+        red = 100 * (1 - opt_bytes / max(naive_bytes, 1))
+        rows.append(
+            (f"inter_opt.{name}", t_opt * 1e3,
+             f"naive_rows={naive_rows} opt_rows={opt_rows} "
+             f"size_reduction={red:.1f}% query_speedup={t_naive/max(t_opt,1e-9):.1f}x "
+             f"(paper: 95-99%, 2-270x)")
+        )
+    return rows
+
+
+# --------------------------------------------------------------------------- #
+# Table 6: FPR — naive pushdown vs iterative refinement
+# --------------------------------------------------------------------------- #
+
+
+def bench_fpr() -> List[tuple]:
+    d = db(SF_MAIN)
+    rows = []
+    f_n, f_i = [], []
+    for name, qf in ALL_QUERIES.items():
+        plan = qf(d)
+        pt = PredTrace(d, plan)
+        pt.infer_iterative()
+        pt.run_unmodified()
+        if pt.exec_result.output.nrows == 0:
+            continue
+        a3 = pt.query_iterative(0)
+        an = pt.query_naive(0)
+        values = {c: pt.exec_result.output.cols[c][0] for c in pt.exec_result.output.columns}
+        oracle = oracle_lineage_for_values(d, plan, values)
+        want = {k: set(v) for k, v in oracle.items()}
+
+        def fpr(ans):
+            got = {k: set(v.tolist()) for k, v in ans.lineage.items()}
+            tp = sum(len(got.get(k, set()) & want.get(k, set())) for k in set(got) | set(want))
+            fp = sum(len(got.get(k, set()) - want.get(k, set())) for k in set(got) | set(want))
+            return fp / max(tp + fp, 1)
+
+        fn_, fi_ = fpr(an), fpr(a3)
+        f_n.append(fn_)
+        f_i.append(fi_)
+        rows.append((f"fpr.{name}", a3.seconds * 1e6,
+                     f"naive={fn_:.1%} iterative={fi_:.1%} iters={a3.detail['iterations']}"))
+    rows.append(("fpr.avg", 0.0,
+                 f"naive={np.mean(f_n):.1%} iterative={np.mean(f_i):.1%} "
+                 f"(paper: 70.7% -> 6.6%)"))
+    return rows
+
+
+# --------------------------------------------------------------------------- #
+# Figure 11: query time with vs without intermediate results
+# --------------------------------------------------------------------------- #
+
+
+def bench_no_inter() -> List[tuple]:
+    d = db(SF_MAIN)
+    rows = []
+    t_p, t_i = [], []
+    for name, qf in ALL_QUERIES.items():
+        plan = qf(d)
+        out = Executor(d).run(plan).output
+        if out.nrows == 0:
+            continue
+        pt = prepared_predtrace(d, name)
+        tp = time_ms(lambda: pt.query(0), repeat=2)
+        pt2 = PredTrace(d, plan)
+        pt2.infer_iterative()
+        pt2.run_unmodified()
+        ti = time_ms(lambda: pt2.query_iterative(0), repeat=2)
+        t_p.append(tp)
+        t_i.append(ti)
+        rows.append((f"no_inter.{name}", ti * 1e3, f"precise={tp:.1f}ms iterative={ti:.1f}ms"))
+    rows.append(("no_inter.avg", 0.0,
+                 f"precise={np.mean(t_p):.1f}ms iterative={np.mean(t_i):.1f}ms "
+                 f"(paper: 226.6ms vs 3852.1ms)"))
+    return rows

@@ -1,0 +1,43 @@
+"""§Roofline: read the dry-run artifacts and emit the per-cell table."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import List
+
+DRYRUN_DIR = Path(__file__).resolve().parent.parent / "experiments" / "dryrun"
+
+
+def bench_roofline() -> List[tuple]:
+    rows: List[tuple] = []
+    summary = DRYRUN_DIR / "summary.json"
+    if not summary.exists():
+        rows.append(("roofline.missing", 0.0,
+                     "run: PYTHONPATH=src python -m repro.launch.dryrun --all --both-meshes"))
+        return rows
+    cells = json.loads(summary.read_text())
+    n_ok = n_skip = n_fit = 0
+    for c in cells:
+        tag = f"roofline.{c['arch']}.{c['shape']}.{c['mesh']}"
+        if c["status"] == "skipped":
+            n_skip += 1
+            rows.append((tag, 0.0, f"skipped: {c['reason'][:60]}"))
+            continue
+        if c["status"] != "ok":
+            rows.append((tag, 0.0, f"ERROR {c.get('error','')[:60]}"))
+            continue
+        n_ok += 1
+        r = c["roofline"]
+        bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        frac = r["compute_s"] / bound if bound else 0.0
+        n_fit += bool(c.get("fits_hbm"))
+        rows.append(
+            (tag, bound * 1e6,
+             f"dom={r['dominant']} comp={r['compute_s']:.4f}s mem={r['memory_s']:.4f}s "
+             f"coll={r['collective_s']:.4f}s roofline_frac={frac:.3f} "
+             f"fits={c.get('fits_hbm')} mfr={c.get('model_flops_ratio', 0) or 0:.2f}")
+        )
+    rows.append(("roofline.summary", 0.0,
+                 f"{n_ok} compiled, {n_skip} documented skips, {n_fit} fit 16GiB HBM"))
+    return rows

@@ -1,0 +1,53 @@
+# One function per paper table. Prints ``name,us_per_call,derived`` CSV.
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", type=str, default=None,
+                    help="comma-separated bench names (default: all)")
+    args = ap.parse_args()
+
+    from .common import emit
+    from .kernels_bench import bench_kernels
+    from .paper_tables import (
+        bench_coverage, bench_fpr, bench_inter_opt, bench_no_inter,
+        bench_overhead, bench_query_scaling, bench_query_time,
+    )
+    from .pipelines import bench_pipelines
+    from .roofline_bench import bench_roofline
+
+    benches = {
+        "coverage": bench_coverage,       # paper Table 4
+        "overhead": bench_overhead,       # paper Figures 5-8
+        "query_time": bench_query_time,   # paper Figures 9-10
+        "query_scaling": bench_query_scaling,  # 98x-claim scaling evidence
+        "inter_opt": bench_inter_opt,     # paper Table 5
+        "fpr": bench_fpr,                 # paper Table 6
+        "no_inter": bench_no_inter,       # paper Figure 11
+        "pipelines": bench_pipelines,     # paper Figure 12 / Table 7
+        "kernels": bench_kernels,         # kernel-path scans
+        "roofline": bench_roofline,       # §Roofline (reads dry-run artifacts)
+    }
+    selected = args.only.split(",") if args.only else list(benches)
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in selected:
+        t0 = time.time()
+        try:
+            rows = benches[name]()
+            emit(rows)
+            print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+            print(f"{name}.FAILED,0,exception")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,56 @@
+"""Quickstart: row-level lineage via predicate pushdown (the paper's Q4).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core import Executor, PredTrace
+from repro.tpch import ALL_QUERIES, generate
+
+
+def main():
+    print("== generating TPC-H (dbgen-lite, sf=0.01) ==")
+    db = generate(sf=0.01, seed=1)
+    plan = ALL_QUERIES["q4"](db)
+
+    print("\n== logical lineage inference (once per query, data-free) ==")
+    res = Executor(db).run(plan)
+    pt = PredTrace(db, plan)
+    lp = pt.infer(stats=res.stats)
+    print(lp.describe())
+
+    print("\n== pipeline execution phase (materializes what the plan needs) ==")
+    pt.run()
+    for nid, t in pt.exec_result.materialized.items():
+        print(f"  intermediate at node {nid}: {t.nrows} rows x {t.columns} "
+              f"({t.nbytes()/1024:.1f} KiB after column projection)")
+    out = pt.exec_result.output
+    print("\nquery output:")
+    for r in out.to_pylist(limit=3):
+        print("  ", r)
+
+    print("\n== lineage querying phase ==")
+    ans = pt.query(0)  # first output row
+    print(f"lineage of output row 0 (in {ans.seconds*1e3:.1f} ms):")
+    for tab, rids in ans.lineage.items():
+        print(f"  {tab}: {len(rids)} source rows, e.g. {rids[:6].tolist()}")
+
+    print("\n== without intermediate results (Algorithm 3) ==")
+    pt2 = PredTrace(db, plan)
+    pt2.infer_iterative()
+    pt2.run_unmodified()
+    a3 = pt2.query_iterative(0)
+    print(f"iterative lineage ({a3.detail['iterations']} fixpoint iterations, "
+          f"{a3.seconds*1e3:.1f} ms):")
+    for tab, rids in a3.lineage.items():
+        print(f"  {tab}: {len(rids)} source rows")
+    same = all(
+        np.array_equal(np.sort(ans.lineage[t]), np.sort(a3.lineage[t]))
+        for t in ans.lineage
+    )
+    print(f"matches the precise answer: {same}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""Batched serving (prefill + decode with KV cache) on a reduced config.
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch mixtral-8x22b]
+"""
+
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+    if "--smoke" not in argv:
+        argv += ["--smoke"]
+    main(argv)

@@ -1,0 +1,17 @@
+"""End-to-end LM training on the lineage-aware data pipeline (reduced config
+on CPU; the same driver lowers full configs on the production mesh).
+
+    PYTHONPATH=src python examples/train_lm.py [--arch qwen2-0.5b] [--steps 50]
+"""
+
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+    if "--smoke" not in argv:
+        argv += ["--smoke"]
+    if not any(a.startswith("--steps") for a in argv):
+        argv += ["--steps", "50"]
+    main(argv)

@@ -1,0 +1,19 @@
+# The paper's primary contribution: row-level lineage inference via predicate
+# pushdown (PredTrace).  See DESIGN.md for the module map.
+from . import ops
+from .eager import EagerExecutor, oracle_lineage_for_values
+from .executor import ExecResult, Executor
+from .expr import Col, Expr, IsIn, Lit, Param, ParamSet, land, lnot, lor
+from .iterative import IterativeInference, refine
+from .lineage import LineageAnswer, PredTrace
+from .plan import LineageInference, LineagePlan
+from .pushdown import Pushdown
+from .table import Table
+
+__all__ = [
+    "ops", "Col", "Expr", "IsIn", "Lit", "Param", "ParamSet", "land", "lnot",
+    "lor", "Table", "Executor", "ExecResult", "EagerExecutor",
+    "oracle_lineage_for_values", "PredTrace", "LineageAnswer",
+    "LineageInference", "LineagePlan", "Pushdown", "IterativeInference",
+    "refine",
+]

@@ -1,0 +1,175 @@
+"""Distributed lineage scans: Algorithm 3's fixpoint on a sharded mesh.
+
+Source tables shard row-wise over the (``pod``, ``data``) mesh axes.  Each
+refinement iteration is:
+
+  1. a *local* fused predicate scan per shard (jit'd ``eval_jnp``; the Pallas
+     ``pred_filter`` / ``membership`` kernels are the TPU codegen for the
+     same predicates),
+  2. an **all-gather of V-set deltas** across shards (here: host-side unique
+     of the globally-addressable masked values; on a multi-host fleet this is
+     ``jax.lax.all_gather`` over (pod, data) of fixed-capacity V-set
+     buffers).
+
+Iterations are bounded by the longest join chain (paper §6.2), so collective
+cost is O(iters x |V|) — independent of table size.  V-sets use fixed-capacity
+sentinel-padded buffers so the per-iteration step stays jit-compiled once.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from .expr import Expr, eval_jnp, paramsets_of
+from .iterative import IterativePlan
+from .lineage import LineageAnswer
+from .table import Table
+
+SENTINEL = np.int64(-(2**62))
+
+
+def _pad_rows(n: int, shards: int) -> int:
+    return ((n + shards - 1) // shards) * shards
+
+
+class ShardedCatalog:
+    """Device-resident, row-sharded numeric views of the catalog columns."""
+
+    def __init__(self, catalog: Dict[str, Table], mesh: Mesh,
+                 axes: Tuple[str, ...] = ("data",)):
+        self.mesh = mesh
+        self.axes = tuple(a for a in axes if a in mesh.axis_names)
+        shards = 1
+        for a in self.axes:
+            shards *= mesh.shape[a]
+        self.nrows: Dict[str, int] = {}
+        self.padded: Dict[str, int] = {}
+        self.cols: Dict[str, Dict[str, jax.Array]] = {}
+        sh = NamedSharding(mesh, P(self.axes if len(self.axes) > 1 else self.axes[0]))
+        for name, t in catalog.items():
+            n = t.nrows
+            npad = _pad_rows(max(n, shards), shards)
+            self.nrows[name] = n
+            self.padded[name] = npad
+            cols = {}
+            for c in t.columns:
+                arr = np.asarray(t.cols[c])
+                if arr.dtype.kind == "f":
+                    arr = arr.astype(np.float64)
+                    pad_val = np.nan
+                else:
+                    arr = arr.astype(np.int64)
+                    pad_val = SENTINEL
+                padded = np.full(npad, pad_val, arr.dtype)
+                padded[:n] = arr
+                cols[c] = jax.device_put(padded, sh)
+            self.cols[name] = cols
+
+    def scan(self, table: str, pred: Expr, binding: Dict[str, object]) -> np.ndarray:
+        """Jit-compiled predicate scan over the sharded columns -> host mask.
+        V-set bindings are padded to the next power of two with a sentinel so
+        shrinking sets between iterations don't retrace the jit."""
+        env = self.cols[table]
+        b = {}
+        for k, v in binding.items():
+            if isinstance(v, np.ndarray):
+                cap = 1 << max(int(np.ceil(np.log2(max(len(v), 1)))), 0)
+                if v.dtype.kind == "f":
+                    padded = np.full(cap, np.nan, np.float64)
+                else:
+                    padded = np.full(cap, SENTINEL, np.int64)
+                padded[: len(v)] = v
+                b[k] = jnp.asarray(padded)
+            else:
+                b[k] = v
+        mask = _scan_jit(pred, env, b)
+        m = np.asarray(mask)
+        if m.ndim == 0:  # constant predicate (True/False)
+            m = np.broadcast_to(m, (self.padded[table],))
+        return m[: self.nrows[table]]
+
+
+def _scan_jit(pred: Expr, env, binding):
+    # jit with pred as static closure: cache per predicate structure
+    key = id(pred)
+    fn = _SCAN_CACHE.get(key)
+    if fn is None:
+        def run(env, binding):
+            return eval_jnp(pred, env, binding)
+
+        fn = jax.jit(run)
+        _SCAN_CACHE[key] = fn
+    return fn(env, binding)
+
+
+_SCAN_CACHE: Dict[int, object] = {}
+
+
+def distributed_refine(
+    ip: IterativePlan,
+    catalog: Dict[str, Table],
+    binding: Dict[str, object],
+    mesh: Mesh,
+    max_iters: int = 32,
+) -> LineageAnswer:
+    """Algorithm 3 phase 4 with device-sharded scans."""
+    import time
+
+    t0 = time.perf_counter()
+    shards = ShardedCatalog(catalog, mesh)
+    used = set()
+    for _, pred in ip.g3.values():
+        used |= paramsets_of(pred)
+
+    vv: Dict[str, object] = dict(binding)
+    masks: Dict[int, np.ndarray] = {}
+    for sid, (tab, pred) in ip.g1.items():
+        masks[sid] = shards.scan(tab, pred, vv)
+
+    def update_vsets():
+        for name, (sid, col) in ip.vsets.items():
+            if name not in used or sid not in ip.g1:
+                continue
+            tab = ip.g1[sid][0]
+            vals = np.asarray(catalog[tab].cols[col])[masks[sid]]
+            vv[name] = np.unique(vals)
+        for name, (sid, col, pred) in getattr(ip, "branch_vsets", {}).items():
+            if name not in used or sid not in ip.g1:
+                continue
+            tab = ip.g1[sid][0]
+            from .expr import eval_np
+
+            m = masks[sid] & np.asarray(
+                eval_np(pred, catalog[tab].cols, vv, n=catalog[tab].nrows), bool
+            )
+            vv[name] = np.unique(np.asarray(catalog[tab].cols[col])[m])
+
+    update_vsets()
+    iters = 0
+    for _ in range(max_iters):
+        iters += 1
+        changed = False
+        for sid, (tab, pred) in ip.g3.items():
+            m = shards.scan(tab, pred, vv) & masks[sid]
+            if m.sum() != masks[sid].sum():
+                changed = True
+            masks[sid] = m
+        update_vsets()
+        if not changed:
+            break
+
+    lineage: Dict[str, np.ndarray] = {}
+    for sid, (tab, _) in ip.g1.items():
+        rids = catalog[tab].rids()[masks[sid]]
+        lineage[tab] = (
+            np.union1d(lineage[tab], rids) if tab in lineage else np.unique(rids)
+        )
+    ans = LineageAnswer(lineage, time.perf_counter() - t0)
+    ans.detail["iterations"] = iters
+    return ans

@@ -1,0 +1,337 @@
+"""PredTrace facade: the three-phase workflow of paper Algorithm 1.
+
+* ``infer()``      — logical lineage inference (once per pipeline, data-free
+                     apart from optional size stats for Algorithm 2).
+* ``run()``        — pipeline execution phase: executes the (possibly
+                     modified) pipeline, saving column-projected intermediate
+                     results where the plan requires them.
+* ``query(...)``   — lineage querying phase: concretize the pushed-down
+                     predicates from a target output row and run them on the
+                     intermediates + source tables.
+* ``query_iterative(...)`` — Algorithm 3 (no intermediate results).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from . import ops as O
+from .executor import ExecResult, Executor
+from .expr import (
+    BinOp, Expr, FALSE, IsIn, Param, conjuncts, eval_np, params_of,
+    substitute_params,
+)
+from .iterative import IterativeInference, IterativePlan, RefineResult, refine
+from .plan import LineageInference, LineagePlan, SourcePred, Stage
+from .table import Table
+
+
+def _eq_only_params(pred: Expr) -> set:
+    """Params that appear exclusively as ``col == $p`` / ``$p == col`` /
+    ``col IN $p`` atoms — for these, array bindings have exact
+    set-membership semantics per atom."""
+    eq, non_eq = set(), set()
+    for a in conjuncts(pred):
+        a_params = params_of(a)
+        if isinstance(a, BinOp) and a.op == "==" and (
+            isinstance(a.left, Param) or isinstance(a.right, Param)
+        ) and len(a_params) == 1:
+            eq |= a_params
+        elif isinstance(a, IsIn) and isinstance(a.values, Param):
+            eq |= a_params
+        else:
+            non_eq |= a_params
+    return eq - non_eq
+
+
+def _eval_pred(pred: Expr, table: Table, binding: Dict[str, object],
+               param_stage: Dict[str, int], stage_sel: Dict[int, Table],
+               param_col: Dict[str, str]) -> np.ndarray:
+    """Evaluate a concretized predicate.
+
+    Array-bound params appearing only in equality atoms keep set semantics
+    (exact per atom).  Params from the *same* materialized stage that appear
+    in non-equality atoms, or co-occur (cross-product hazard), are bound
+    PER STAGE ROW and the masks OR'd — the paper's "replace variables with
+    the corresponding rows"."""
+    used = params_of(pred)
+    eq_ok = _eq_only_params(pred)
+    # group array-bound stage params needing row-wise treatment
+    by_stage: Dict[int, List[str]] = {}
+    for p in used:
+        v = binding.get(p)
+        if not isinstance(v, np.ndarray):
+            continue
+        sid = param_stage.get(p)
+        if sid is None:
+            continue
+        by_stage.setdefault(sid, []).append(p)
+    tuple_groups: Dict[int, List[str]] = {}
+    rowwise: Dict[int, List[str]] = {}
+    for sid, plist in by_stage.items():
+        if any(p not in eq_ok for p in plist):
+            rowwise[sid] = plist  # non-equality use: bind per stage row
+        elif len(plist) >= 2:
+            tuple_groups[sid] = plist  # multi-column: zip (tuple) semantics
+    if not rowwise and not tuple_groups:
+        return np.asarray(eval_np(pred, table.cols, binding, n=table.nrows), bool)
+
+    mask = np.ones(table.nrows, dtype=bool)
+    consumed_atoms = []
+
+    # composite-tuple membership: exact — independent per-atom value sets
+    # would be a cross-product superset.  Evaluation narrows progressively
+    # (first atoms are usually keys), then verifies tuple consistency on the
+    # few surviving candidates.
+    from .expr import cols_of as _cols_of
+
+    for sid, plist in tuple_groups.items():
+        from .executor import composite_codes
+
+        sel = stage_sel[sid]
+        atoms = []
+        for a in conjuncts(pred):
+            ap = params_of(a)
+            if len(ap) == 1 and next(iter(ap)) in plist and isinstance(a, BinOp):
+                p = next(iter(ap))
+                lhs = a.left if isinstance(a.right, Param) else a.right
+                atoms.append((lhs, np.asarray(sel.cols[param_col[p]])))
+                consumed_atoms.append(a)
+        idx = np.arange(table.nrows)
+        lhs_vals = []
+        for lhs, sel_vals in atoms:
+            env = {c: table.cols[c][idx] for c in _cols_of(lhs)}
+            v = np.asarray(eval_np(lhs, env, {}, n=len(idx)))
+            keep = np.isin(v, np.unique(sel_vals))
+            idx = idx[keep]
+            lhs_vals = [lv[keep] for lv in lhs_vals]
+            lhs_vals.append(v[keep])
+        if len(atoms) > 1 and len(idx):
+            ct, cs = composite_codes(lhs_vals, [sv for _, sv in atoms])
+            idx = idx[np.isin(ct, cs)]
+        gmask = np.zeros(table.nrows, dtype=bool)
+        gmask[idx] = True
+        mask &= gmask
+
+    rest = [a for a in conjuncts(pred) if a not in consumed_atoms]
+    rest_params = set()
+    for a in rest:
+        rest_params |= params_of(a)
+    rowwise_params = [p for plist in rowwise.values() for p in plist]
+    if not (rest_params & set(rowwise_params)):
+        if rest:
+            from .expr import land
+
+            mask &= np.asarray(
+                eval_np(land(*rest), table.cols, binding, n=table.nrows), bool
+            )
+        return mask
+
+    # non-equality params (window ranges etc.): bind per stage row and OR
+    assert len(rowwise) == 1, (
+        "row-wise binding across multiple stages is not supported; "
+        "plan inference should not produce this shape"
+    )
+    (sid, plist), = rowwise.items()
+    sel = stage_sel[sid]
+    cols = [param_col[p] for p in plist]
+    rows = np.unique(np.stack([np.asarray(sel.cols[c]) for c in cols], axis=1), axis=0)
+    rmask = np.zeros(table.nrows, dtype=bool)
+    from .expr import land
+
+    rest_pred = land(*rest)
+    for r in rows:
+        b2 = dict(binding)
+        for p, val in zip(plist, r):
+            b2[p] = val.item() if hasattr(val, "item") else val
+        rmask |= np.asarray(eval_np(rest_pred, table.cols, b2, n=table.nrows), bool)
+    return mask & rmask
+
+
+@dataclass
+class LineageAnswer:
+    lineage: Dict[str, np.ndarray]  # table -> source row ids
+    seconds: float = 0.0
+    detail: Dict[str, object] = field(default_factory=dict)
+
+    def total_rows(self) -> int:
+        return int(sum(len(v) for v in self.lineage.values()))
+
+
+def _is_null(v) -> bool:
+    try:
+        return (isinstance(v, float) and np.isnan(v)) or int(v) == -1
+    except (TypeError, ValueError):
+        return False
+
+
+def _clean_binding_value(v):
+    """Normalize a bound value: drop null sentinels from arrays, collapse
+    singleton arrays to scalars."""
+    if isinstance(v, np.ndarray):
+        if v.dtype.kind == "f":
+            v = v[~np.isnan(v)]
+        elif v.dtype.kind in "iu":
+            v = v[v != -1]
+        if len(v) == 1:
+            return v[0].item()
+        return v
+    return v
+
+
+class PredTrace:
+    def __init__(
+        self,
+        catalog: Dict[str, Table],
+        plan: O.Node,
+        optimize_placement: bool = True,
+        precise_minmax: bool = False,
+    ):
+        self.catalog = catalog
+        self.plan = plan
+        self.optimize_placement = optimize_placement
+        self.precise_minmax = precise_minmax
+        self.executor = Executor(catalog)
+        self.lineage_plan: Optional[LineagePlan] = None
+        self.iter_plan: Optional[IterativePlan] = None
+        self.exec_result: Optional[ExecResult] = None
+        self.infer_seconds: float = 0.0
+
+    # ------------------------------------------------------------------ #
+    def infer(self, stats: Optional[Dict] = None) -> LineagePlan:
+        t0 = time.perf_counter()
+        inf = LineageInference(
+            self.plan,
+            self.executor.schemas(),
+            stats=stats,
+            optimize_placement=self.optimize_placement and stats is not None,
+            precise_minmax=self.precise_minmax,
+        )
+        self.lineage_plan = inf.infer()
+        self.infer_seconds = time.perf_counter() - t0
+        return self.lineage_plan
+
+    def infer_iterative(self) -> IterativePlan:
+        t0 = time.perf_counter()
+        self.iter_plan = IterativeInference(self.plan, self.executor.schemas()).infer()
+        self.infer_seconds = time.perf_counter() - t0
+        return self.iter_plan
+
+    # ------------------------------------------------------------------ #
+    def run(self) -> ExecResult:
+        """Pipeline execution phase (materializes what the plan requires)."""
+        if self.lineage_plan is None:
+            self.infer()
+        self.exec_result = self.executor.run(
+            self.plan, materialize=self.lineage_plan.materialize
+        )
+        return self.exec_result
+
+    def run_unmodified(self) -> ExecResult:
+        """Run the pipeline as-is (no intermediate results)."""
+        self.exec_result = self.executor.run(self.plan)
+        return self.exec_result
+
+    # ------------------------------------------------------------------ #
+    def _output_binding(self, t_o: Union[int, Dict[str, object]]) -> Dict[str, object]:
+        assert self.exec_result is not None, "run() first"
+        out = self.exec_result.output
+        lp_params = (
+            self.lineage_plan.out_params if self.lineage_plan else self.iter_plan.out_params
+        )
+        binding: Dict[str, object] = {}
+        if isinstance(t_o, int):
+            row = {c: out.cols[c][t_o] for c in out.columns}
+        else:
+            row = {c: out.encode_value(c, v) if isinstance(v, str) else v for c, v in t_o.items()}
+        for p, col in lp_params.items():
+            if col in row:
+                v = row[col]
+                binding[p] = v.item() if hasattr(v, "item") else v
+        return binding
+
+    def query(self, t_o: Union[int, Dict[str, object]]) -> LineageAnswer:
+        """Precise lineage via materialized intermediates (Algorithm 1)."""
+        assert self.lineage_plan is not None and self.exec_result is not None
+        t0 = time.perf_counter()
+        binding = self._output_binding(t_o)
+
+        # walk the stage chain, binding parameters from selected rows
+        param_stage: Dict[str, int] = {}
+        param_col: Dict[str, str] = {}
+        stage_sel: Dict[int, Table] = {}
+        for si, st in enumerate(self.lineage_plan.stages):
+            table = self.exec_result.materialized[st.node_id]
+            pred = st.run_pred
+            if any(_guard_dead(binding.get(g)) for g in st.guards):
+                sel = table.mask(np.zeros(table.nrows, dtype=bool))
+            else:
+                m = _eval_pred(pred, table, binding, param_stage, stage_sel, param_col)
+                sel = table.mask(m)
+            stage_sel[si] = sel
+            for p, colname in st.params_out.items():
+                if colname in sel.cols:
+                    binding[p] = _clean_binding_value(np.unique(sel.cols[colname]))
+                    param_stage[p] = si
+                    param_col[p] = colname
+
+        lineage: Dict[str, np.ndarray] = {}
+        for sp in self.lineage_plan.source_preds:
+            t = self.catalog[sp.table]
+            if sp.pred == FALSE or any(_guard_dead(binding.get(g)) for g in sp.guards):
+                rids = np.array([], dtype=np.int64)
+            else:
+                m = _eval_pred(sp.pred, t, binding, param_stage, stage_sel, param_col)
+                rids = t.rids()[m]
+            lineage[sp.table] = (
+                np.union1d(lineage[sp.table], rids) if sp.table in lineage else np.unique(rids)
+            )
+        return LineageAnswer(lineage, time.perf_counter() - t0)
+
+    # ------------------------------------------------------------------ #
+    def query_iterative(
+        self, t_o: Union[int, Dict[str, object]], max_iters: int = 32, scan=None
+    ) -> LineageAnswer:
+        """Algorithm 3: no intermediate results; may return a superset."""
+        if self.iter_plan is None:
+            self.infer_iterative()
+        if self.exec_result is None:
+            self.run_unmodified()
+        t0 = time.perf_counter()
+        binding = self._output_binding(t_o)
+        rr: RefineResult = refine(self.iter_plan, self.catalog, binding, max_iters, scan=scan)
+        ans = LineageAnswer(rr.lineage, time.perf_counter() - t0)
+        ans.detail["iterations"] = rr.iterations
+        ans.detail["masks"] = rr.masks
+        ans.detail["naive_masks"] = rr.naive_masks
+        return ans
+
+    def query_naive(self, t_o: Union[int, Dict[str, object]]) -> LineageAnswer:
+        """Naive pushdown baseline for Table 6: phase-1 predicates only."""
+        if self.iter_plan is None:
+            self.infer_iterative()
+        if self.exec_result is None:
+            self.run_unmodified()
+        t0 = time.perf_counter()
+        binding = self._output_binding(t_o)
+        lineage: Dict[str, np.ndarray] = {}
+        for sid, (tab, pred) in self.iter_plan.g1.items():
+            t = self.catalog[tab]
+            m = np.asarray(eval_np(pred, t.cols, binding, n=t.nrows), dtype=bool)
+            rids = t.rids()[m]
+            lineage[tab] = (
+                np.union1d(lineage[tab], rids) if tab in lineage else np.unique(rids)
+            )
+        return LineageAnswer(lineage, time.perf_counter() - t0)
+
+
+def _guard_dead(v) -> bool:
+    if v is None:
+        return False
+    if isinstance(v, np.ndarray):
+        return len(v) == 0
+    return _is_null(v)

@@ -1,0 +1,430 @@
+"""Operator / plan IR for PredTrace — the operator set of paper Table 2.
+
+Plans are trees of ``Node``s with ``Source`` leaves.  Sub-queries (semi/anti
+joins, correlated scalar sub-queries, grouped maps) hold their inner plan as a
+child subtree, mirroring the paper's pipeline syntax for TPC-H Q4 (Figure 1).
+
+Static schema inference (``schema``) is provided so the pushdown engine can
+reason about plans without executing them.
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .expr import Col, Expr, Lit, cols_of
+
+_node_ids = itertools.count()
+
+
+class Node:
+    """Base plan node."""
+
+    def __post_init__(self):
+        object.__setattr__(self, "id", next(_node_ids))
+
+    @property
+    def children(self) -> List["Node"]:
+        out = []
+        for f in getattr(self, "__dataclass_fields__", {}):
+            v = getattr(self, f)
+            if isinstance(v, Node):
+                out.append(v)
+            elif isinstance(v, (list, tuple)) and v and isinstance(v[0], Node):
+                out.extend(v)
+        return out
+
+    # ``main_child`` is the input that carries the pipeline's main dataflow
+    # (the paper's operator sequence); side inputs are sub-query plans.
+    @property
+    def main_child(self) -> Optional["Node"]:
+        ch = self.children
+        return ch[0] if ch else None
+
+    def __repr_args__(self) -> str:
+        return ""
+
+    def __repr__(self):
+        return f"{type(self).__name__}#{self.id}({self.__repr_args__()})"
+
+
+@dataclass(frozen=True, eq=False)
+class Agg:
+    fn: str  # sum | count | min | max | mean | count_distinct | any | udf:<name>
+    expr: Optional[Expr] = None  # None for count(*)
+
+    def __repr__(self):
+        return f"{self.fn}({self.expr if self.expr is not None else '*'})"
+
+
+@dataclass(eq=False)
+class Source(Node):
+    table: str
+
+    def __post_init__(self):
+        Node.__post_init__(self)
+
+    def __repr_args__(self):
+        return self.table
+
+
+@dataclass(eq=False)
+class Filter(Node):
+    child: Node
+    pred: Expr
+
+    def __post_init__(self):
+        Node.__post_init__(self)
+
+    def __repr_args__(self):
+        return str(self.pred)
+
+
+@dataclass(eq=False)
+class Project(Node):
+    """DropColumn in the paper: keep only ``keep`` columns."""
+
+    child: Node
+    keep: List[str]
+
+    def __post_init__(self):
+        Node.__post_init__(self)
+
+    def __repr_args__(self):
+        return ",".join(self.keep)
+
+
+@dataclass(eq=False)
+class RowTransform(Node):
+    """Adds / replaces columns: ``assigns[new_col] = Expr(input cols)``.
+    Covers the paper's RowTransform with embedded (symbolically executable)
+    UDFs — the UDF body *is* the Expr."""
+
+    child: Node
+    assigns: Dict[str, Expr]
+
+    def __post_init__(self):
+        Node.__post_init__(self)
+
+    def __repr_args__(self):
+        return ",".join(self.assigns)
+
+
+@dataclass(eq=False)
+class Alias(Node):
+    """Prefix-rename every column (for self-joins)."""
+
+    child: Node
+    prefix: str
+
+    def __post_init__(self):
+        Node.__post_init__(self)
+
+    def __repr_args__(self):
+        return self.prefix
+
+
+@dataclass(eq=False)
+class InnerJoin(Node):
+    left: Node
+    right: Node
+    on: List[Tuple[str, str]]  # (left_col, right_col) equi-keys
+    pred: Optional[Expr] = None  # extra non-equi condition over merged schema
+
+    def __post_init__(self):
+        Node.__post_init__(self)
+
+    def __repr_args__(self):
+        return ",".join(f"{l}={r}" for l, r in self.on)
+
+
+@dataclass(eq=False)
+class LeftOuterJoin(Node):
+    left: Node
+    right: Node
+    on: List[Tuple[str, str]]
+    pred: Optional[Expr] = None
+
+    def __post_init__(self):
+        Node.__post_init__(self)
+
+    def __repr_args__(self):
+        return ",".join(f"{l}={r}" for l, r in self.on)
+
+
+@dataclass(eq=False)
+class SemiJoin(Node):
+    """EXISTS / IN sub-query.  Keeps outer rows with >=1 match in the inner
+    plan on the equi-keys (plus optional extra predicate over both schemas)."""
+
+    outer: Node
+    inner: Node
+    on: List[Tuple[str, str]]  # (outer_col, inner_col)
+    pred: Optional[Expr] = None
+
+    def __post_init__(self):
+        Node.__post_init__(self)
+
+    def __repr_args__(self):
+        return ",".join(f"{l}={r}" for l, r in self.on)
+
+
+@dataclass(eq=False)
+class AntiJoin(Node):
+    """NOT EXISTS."""
+
+    outer: Node
+    inner: Node
+    on: List[Tuple[str, str]]
+    pred: Optional[Expr] = None
+
+    def __post_init__(self):
+        Node.__post_init__(self)
+
+    def __repr_args__(self):
+        return ",".join(f"{l}={r}" for l, r in self.on)
+
+
+@dataclass(eq=False)
+class GroupBy(Node):
+    child: Node
+    keys: List[str]  # empty => single global group
+    aggs: Dict[str, Agg]
+
+    def __post_init__(self):
+        Node.__post_init__(self)
+
+    def __repr_args__(self):
+        return ",".join(self.keys) + " | " + ",".join(self.aggs)
+
+
+@dataclass(eq=False)
+class Sort(Node):
+    """Reorder / TopK (order-by + LIMIT N)."""
+
+    child: Node
+    by: List[Tuple[str, bool]]  # (col, ascending)
+    limit: Optional[int] = None
+
+    def __post_init__(self):
+        Node.__post_init__(self)
+
+    def __repr_args__(self):
+        lim = f" limit {self.limit}" if self.limit else ""
+        return ",".join(c for c, _ in self.by) + lim
+
+
+@dataclass(eq=False)
+class Union(Node):
+    parts: List[Node]
+
+    def __post_init__(self):
+        Node.__post_init__(self)
+
+
+@dataclass(eq=False)
+class Intersect(Node):
+    left: Node
+    right: Node
+
+    def __post_init__(self):
+        Node.__post_init__(self)
+
+
+@dataclass(eq=False)
+class Pivot(Node):
+    """index x column -> one row per index value, one output column per pivot
+    value.  ``values`` must be declared statically (needed for schema/pushdown
+    without executing)."""
+
+    child: Node
+    index: str
+    column: str
+    value: str
+    agg: str = "sum"
+    values: List = field(default_factory=list)  # distinct pivot values
+
+    def __post_init__(self):
+        Node.__post_init__(self)
+
+    def out_col(self, v) -> str:
+        return f"{self.column}_{v}"
+
+
+@dataclass(eq=False)
+class Unpivot(Node):
+    child: Node
+    index_cols: List[str]
+    value_cols: List[str]
+    var_name: str = "variable"
+    value_name: str = "value"
+
+    def __post_init__(self):
+        Node.__post_init__(self)
+
+
+@dataclass(eq=False)
+class RowExpand(Node):
+    """1-to-k transform: each input row produces ``len(variants)`` rows; each
+    variant assigns output columns from input-column expressions."""
+
+    child: Node
+    variants: List[Dict[str, Expr]]
+
+    def __post_init__(self):
+        Node.__post_init__(self)
+
+
+@dataclass(eq=False)
+class Window(Node):
+    """Rolling window op.  Sorts by ``order_by``, adds ``__pos__`` (position)
+    and per-row aggregates over the trailing ``size`` rows."""
+
+    child: Node
+    order_by: List[str]
+    size: int
+    aggs: Dict[str, Agg]
+
+    def __post_init__(self):
+        Node.__post_init__(self)
+
+
+@dataclass(eq=False)
+class GroupedMap(Node):
+    """Per-group transform (paper: transform grouped sub-tables with a
+    subquery).  ``group_aggs`` compute per-group scalars (broadcast back);
+    ``assigns`` are row-level expressions that may use them — e.g. group-wise
+    normalization ``x_norm = (x - mean_x) / std_x``."""
+
+    child: Node
+    keys: List[str]
+    group_aggs: Dict[str, Agg]
+    assigns: Dict[str, Expr]
+
+    def __post_init__(self):
+        Node.__post_init__(self)
+
+
+@dataclass(eq=False)
+class FilterScalarSub(Node):
+    """Correlated / uncorrelated scalar sub-query filter:
+
+        keep outer rows where  outer_expr  <cmp>  scale * agg(inner group)
+
+    where the inner group matches on ``correlate`` equi-pairs (empty =>
+    uncorrelated global scalar).  Rows with an empty inner group are dropped
+    (SQL NULL comparison semantics)."""
+
+    child: Node
+    inner: Node
+    correlate: List[Tuple[str, str]]  # (outer_col, inner_col)
+    agg: Agg
+    cmp: str  # == != < <= > >=
+    outer_expr: Expr
+    scale: float = 1.0
+
+    def __post_init__(self):
+        Node.__post_init__(self)
+
+
+# --------------------------------------------------------------------------- #
+# plan utilities
+# --------------------------------------------------------------------------- #
+
+
+def walk(node: Node):
+    """Post-order walk (children before parents)."""
+    seen = set()
+
+    def rec(n: Node):
+        if n.id in seen:
+            return
+        seen.add(n.id)
+        for c in n.children:
+            yield from rec(c)
+        yield n
+
+    yield from rec(node)
+
+
+def sources(node: Node) -> List[Source]:
+    return [n for n in walk(node) if isinstance(n, Source)]
+
+
+def main_path(node: Node) -> List[Node]:
+    """The operator sequence along the main dataflow, output-first."""
+    out = []
+    cur: Optional[Node] = node
+    while cur is not None:
+        out.append(cur)
+        cur = cur.main_child
+    return out
+
+
+def schema(node: Node, catalog: Dict[str, List[str]]) -> List[str]:
+    """Static output-column inference."""
+    if isinstance(node, Source):
+        return list(catalog[node.table])
+    if isinstance(node, Filter):
+        return schema(node.child, catalog)
+    if isinstance(node, Project):
+        return list(node.keep)
+    if isinstance(node, RowTransform):
+        base = schema(node.child, catalog)
+        return base + [c for c in node.assigns if c not in base]
+    if isinstance(node, Alias):
+        return [node.prefix + c for c in schema(node.child, catalog)]
+    if isinstance(node, (InnerJoin, LeftOuterJoin)):
+        l = schema(node.left, catalog)
+        r = schema(node.right, catalog)
+        dup = set(l) & set(r)
+        joined_r = [c for c in r if c not in dup]
+        return l + joined_r
+    if isinstance(node, (SemiJoin, AntiJoin)):
+        return schema(node.outer, catalog)
+    if isinstance(node, GroupBy):
+        return list(node.keys) + list(node.aggs)
+    if isinstance(node, Sort):
+        return schema(node.child, catalog)
+    if isinstance(node, Union):
+        return schema(node.parts[0], catalog)
+    if isinstance(node, Intersect):
+        return schema(node.left, catalog)
+    if isinstance(node, Pivot):
+        return [node.index] + [node.out_col(v) for v in node.values]
+    if isinstance(node, Unpivot):
+        return list(node.index_cols) + [node.var_name, node.value_name]
+    if isinstance(node, RowExpand):
+        base = schema(node.child, catalog)
+        extra = sorted({c for v in node.variants for c in v})
+        return base + [c for c in extra if c not in base]
+    if isinstance(node, Window):
+        return schema(node.child, catalog) + ["__pos__"] + list(node.aggs)
+    if isinstance(node, GroupedMap):
+        base = schema(node.child, catalog)
+        return base + [c for c in node.assigns if c not in base]
+    if isinstance(node, FilterScalarSub):
+        return schema(node.child, catalog)
+    raise TypeError(f"schema: unknown node {type(node)}")
+
+
+def validate(node: Node, catalog: Dict[str, List[str]]) -> None:
+    """Sanity-check column references in a plan (raises on error)."""
+    for n in walk(node):
+        cols = set(schema(n, catalog))
+        if isinstance(n, Filter):
+            missing = cols_of(n.pred) - set(schema(n.child, catalog))
+            if missing:
+                raise ValueError(f"{n}: filter references missing columns {missing}")
+        if isinstance(n, (InnerJoin, LeftOuterJoin)):
+            ls, rs = set(schema(n.left, catalog)), set(schema(n.right, catalog))
+            for l, r in n.on:
+                if l not in ls or r not in rs:
+                    raise ValueError(f"{n}: join key {l}={r} missing")
+        if isinstance(n, (SemiJoin, AntiJoin)):
+            ls, rs = set(schema(n.outer, catalog)), set(schema(n.inner, catalog))
+            for l, r in n.on:
+                if l not in ls or r not in rs:
+                    raise ValueError(f"{n}: semi/anti key {l}={r} missing")

@@ -1,0 +1,270 @@
+"""Algorithm 1 — logical lineage inference phase.
+
+Walks the plan output-first, pushing the running predicate through each
+operator (``pushdown.py``).  When a pushdown is not precise, the operator's
+output is marked for materialization and a fresh parameterized row-selection
+predicate is pushed instead (paper Lines 5-7) — which is guaranteed precise
+because a node's own output schema always contains its keys.
+
+Materialization *placement* is then optimized by Algorithm 2
+(``intermediate.py``): defer to a later (closer-to-output) operator when the
+row-selection predicate from there still pushes precisely to all sources
+below, and the (column-projected) result is smaller.
+
+The result is a :class:`LineagePlan` — a data-system-independent artifact
+computed once per pipeline (paper §3.3): parameterized predicates per source
+table plus an ordered chain of (materialized table, predicate, param-binding)
+stages.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from . import ops as O
+from .executor import NodeStats
+from .expr import (
+    FALSE,
+    BinOp,
+    Col,
+    Expr,
+    Param,
+    TRUE,
+    cols_of,
+    params_of,
+    row_selection_for,
+)
+from .pushdown import Push, Pushdown
+
+
+@dataclass
+class Stage:
+    """One materialized intermediate result."""
+
+    node_id: int
+    run_pred: Expr  # F_i: runs on the materialized table (params bound earlier)
+    params_out: Dict[str, str]  # param -> column of this materialized table
+    guards: List[str] = field(default_factory=list)
+    keep_cols: Optional[List[str]] = None  # column projection (Algorithm 2)
+
+
+@dataclass
+class SourcePred:
+    node_id: int  # Source-node occurrence
+    table: str
+    pred: Expr
+    guards: List[str] = field(default_factory=list)
+
+
+@dataclass
+class LineagePlan:
+    plan: O.Node
+    out_params: Dict[str, str]  # param -> output column (F_n^row)
+    stages: List[Stage]  # binding order: output-first
+    source_preds: List[SourcePred]
+
+    @property
+    def materialize(self) -> Dict[int, Optional[List[str]]]:
+        return {s.node_id: s.keep_cols for s in self.stages}
+
+    def describe(self) -> str:  # pragma: no cover - debug aid
+        lines = [f"output params: {self.out_params}"]
+        for s in self.stages:
+            lines.append(f"  materialize node {s.node_id}: run {s.run_pred} -> bind {s.params_out}")
+        for sp in self.source_preds:
+            lines.append(f"  source {sp.table}#{sp.node_id}: {sp.pred}")
+        return "\n".join(lines)
+
+
+class _FailureAt(Exception):
+    def __init__(self, node: O.Node, path: List[O.Node]):
+        self.node = node
+        self.path = path  # root ... node
+
+
+class LineageInference:
+    """Runs Algorithm 1 (+ Algorithm 2 placement optimization)."""
+
+    def __init__(
+        self,
+        plan: O.Node,
+        catalog_schemas: Dict[str, List[str]],
+        stats: Optional[Dict[int, NodeStats]] = None,
+        optimize_placement: bool = True,
+        precise_minmax: bool = False,
+    ):
+        self.plan = plan
+        self.pd = Pushdown(plan, catalog_schemas, precise_minmax=precise_minmax)
+        self.stats = stats or {}
+        self.optimize_placement = optimize_placement
+
+    # ------------------------------------------------------------------ #
+    def infer(self) -> LineagePlan:
+        out_schema = self.pd.schema_of(self.plan)
+        forced: Set[int] = set()
+        while True:
+            try:
+                stages, source_preds, out_params = self._descend_all(forced)
+                break
+            except _FailureAt as f:
+                j = self._choose_placement(f.node, f.path, forced)
+                if j in forced:
+                    raise RuntimeError(
+                        f"lineage inference cannot make progress at node {j}: "
+                        f"row-selection pushdown is imprecise even after "
+                        f"materializing — operator rule bug"
+                    )
+                forced.add(j)
+        lp = LineagePlan(self.plan, out_params, stages, source_preds)
+        self._project_columns(lp)
+        return lp
+
+    # ------------------------------------------------------------------ #
+    def _descend_all(self, forced: Set[int]):
+        Frow, pmap = row_selection_for(self.pd.schema_of(self.plan), stage="out")
+        out_params = {p: c for p, c in pmap.items()}
+        stages: List[Stage] = []
+        source_preds: List[SourcePred] = []
+
+        def rec(node: O.Node, F: Expr, guards: List[str], path: List[O.Node]):
+            if isinstance(node, O.Source):
+                source_preds.append(SourcePred(node.id, node.table, F, list(guards)))
+                return
+            if node.id in forced:
+                Frow_i, pmap_i = row_selection_for(self.pd.schema_of(node), stage=str(node.id))
+                # §5 pruning: push the FULL row-selection once to learn which
+                # pins precision actually requires, then rebuild F^row over
+                # (required params) ∪ (columns the downstream predicate F
+                # uses); the rest of the pins are redundant under set
+                # semantics and only bloat intermediates + source predicates.
+                required = self._collect_required(node, Frow_i)
+                downstream = cols_of(F)
+                keep_params = {
+                    p for p, c in pmap_i.items() if p in required or c in downstream
+                }
+                atoms = [
+                    BinOp("==", Col(c), Param(p, origin=(str(node.id), c)))
+                    for p, c in pmap_i.items()
+                    if p in keep_params
+                ]
+                from .expr import land as _land
+
+                if atoms:
+                    Frow_p = _land(*atoms)
+                    pmap_p = {p: c for p, c in pmap_i.items() if p in keep_params}
+                else:  # degenerate: keep the full row selection
+                    Frow_p, pmap_p = Frow_i, pmap_i
+                # safety: pruned row selection must still push precisely
+                if not self._precise_below(node, Frow_p):
+                    Frow_p, pmap_p = Frow_i, pmap_i
+                stages.append(
+                    Stage(node.id, run_pred=F, params_out=dict(pmap_p),
+                          guards=list(guards))
+                )
+                F = Frow_p
+                guards = []
+            push = self.pd.push_node(node, F)
+            if not push.precise:
+                raise _FailureAt(node, path + [node])
+            for child in node.children:
+                g = push.gs.get(child.id, TRUE)
+                child_guards = guards + push.guards.get(child.id, [])
+                rec(child, g, child_guards, path + [node])
+
+        rec(self.plan, Frow, [], [])
+        return stages, source_preds, out_params
+
+    # ------------------------------------------------------------------ #
+    def _collect_required(self, node: O.Node, F: Expr) -> Set[str]:
+        """Params whose pins the subtree's operators need for precision."""
+        out: Set[str] = set()
+
+        def rec(n: O.Node, f: Expr):
+            if isinstance(n, O.Source):
+                return
+            push = self.pd.push_node(n, f, relaxed=True)
+            out.update(push.required)
+            for c in n.children:
+                rec(c, push.gs.get(c.id, TRUE))
+
+        rec(node, F)
+        return out
+
+    def _precise_below(self, node: O.Node, F: Expr) -> bool:
+        def rec(n: O.Node, f: Expr) -> bool:
+            if isinstance(n, O.Source):
+                return True
+            push = self.pd.push_node(n, f)
+            if not push.precise:
+                return False
+            return all(rec(c, push.gs.get(c.id, TRUE)) for c in n.children)
+
+        return rec(node, F)
+
+    # ------------------------------------------------------------------ #
+    def _subtree_ok(self, j: O.Node, forced: Set[int]) -> bool:
+        """Does a row-selection predicate at ``j`` push precisely through the
+        whole subtree below it (with existing forced stages honored)?"""
+        Frow_j, _ = row_selection_for(self.pd.schema_of(j), stage=f"sim{j.id}")
+
+        def rec(node: O.Node, F: Expr) -> bool:
+            if isinstance(node, O.Source):
+                return True
+            if node.id in forced and node.id != j.id:
+                F, _ = row_selection_for(self.pd.schema_of(node), stage=f"sim{node.id}")
+            push = self.pd.push_node(node, F)
+            if not push.precise:
+                return False
+            return all(rec(c, push.gs.get(c.id, TRUE)) for c in node.children)
+
+        push = self.pd.push_node(j, Frow_j)
+        if not push.precise:
+            return False
+        return all(rec(c, push.gs.get(c.id, TRUE)) for c in j.children)
+
+    def _est_size(self, node: O.Node) -> float:
+        st = self.stats.get(node.id)
+        if st is None:
+            return float("inf")
+        return float(st.nbytes)
+
+    def _choose_placement(self, node: O.Node, path: List[O.Node], forced: Set[int]) -> int:
+        """Algorithm 2 (choice part): candidates are the failure node and its
+        main-path ancestors; walk outward while viable, pick the smallest."""
+        candidates = [node]
+        if self.optimize_placement:
+            # ancestors from nearest to root, but only along the main dataflow
+            for anc in reversed(path[:-1]):
+                if anc.main_child is None:
+                    break
+                candidates.append(anc)
+        best = node.id
+        best_size = self._est_size(node)
+        for cand in candidates[1:]:
+            if cand.id in forced:
+                break
+            if not self._subtree_ok(cand, forced | {cand.id}):
+                break  # paper Algorithm 2 line 10-11: stop at first failure
+            sz = self._est_size(cand)
+            if sz < best_size:
+                best, best_size = cand.id, sz
+        return best
+
+    # ------------------------------------------------------------------ #
+    def _project_columns(self, lp: LineagePlan) -> None:
+        """Algorithm 2 (column projection): keep only (a) columns referenced
+        by the stage's own run-predicate and (b) columns bound to params that
+        actually survive into downstream predicates."""
+        used_params: Set[str] = set()
+        for sp in lp.source_preds:
+            used_params |= params_of(sp.pred)
+        for s in lp.stages:
+            used_params |= params_of(s.run_pred)
+        for s in lp.stages:
+            keep = set(cols_of(s.run_pred))
+            for p, c in s.params_out.items():
+                if p in used_params:
+                    keep.add(c)
+            node_schema = set(self.pd.schemas[s.node_id])
+            s.keep_cols = sorted(keep & node_schema)

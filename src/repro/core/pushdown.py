@@ -1,0 +1,459 @@
+"""Predicate pushdown rules for every PredTrace operator (paper Table 2 + §4).
+
+``push_node`` pushes a predicate ``F`` (on a node's *output*) one operator down,
+returning per-child predicates ``G`` plus a **precision verdict**: does pushing
+``F`` select the *precise* lineage (equivalent to pushing a row-selection
+predicate, paper §4.2)?
+
+The predicate language is closed (see ``expr.py``), which makes the paper's
+symbolic-verification question decidable by structural rules; the Figure-2
+style symbolic row-exist check in ``verify.py`` cross-validates these verdicts
+on join-type operators, and the hypothesis test-suite differentially checks
+both against the eager oracle.
+
+Key transfer: equality / membership pins on one side of an equi-join key are
+mirrored to the other side — this is what exchanges V-sets between tables in
+Algorithm 3 (paper §6.3) and what makes row-selection pushdowns through joins
+precise (paper §5, Q3 example).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from . import ops as O
+from .expr import (
+    FALSE,
+    TRUE,
+    BinOp,
+    Col,
+    Expr,
+    IsIn,
+    Lit,
+    Param,
+    ParamSet,
+    UnaryOp,
+    cols_of,
+    conjuncts,
+    disjuncts,
+    fresh,
+    land,
+    lor,
+    row_selection_for,
+    substitute_cols,
+)
+
+
+def _or_split(atom: Expr, side_cols: Sequence[Set[str]]) -> List[Optional[Expr]]:
+    """Relax a mixed-side disjunction-of-conjunctions into per-side
+    disjunctions of the side-local conjunct projections (sound: implied by
+    the original atom).  This is the relaxation a search-based pushdown
+    module (MagicPush) finds for Q19-style OR conditions."""
+    branches = disjuncts(atom)
+    if len(branches) < 2:
+        return [None] * len(side_cols)
+    outs: List[Optional[Expr]] = []
+    for sc in side_cols:
+        side_branches = []
+        ok = True
+        for b in branches:
+            parts = [c for c in conjuncts(b) if cols_of(c) <= sc]
+            if not parts:
+                ok = False
+                break
+            side_branches.append(land(*parts))
+        outs.append(lor(*side_branches) if ok else None)
+    return outs
+
+
+@dataclass
+class Push:
+    """Result of pushing F through one operator."""
+
+    gs: Dict[int, Expr]  # child node id -> predicate on that child's output
+    precise: bool
+    dropped: List[Expr] = field(default_factory=list)  # atoms dropped (superset)
+    # params whose pins this operator NEEDED for a precise pushdown (join /
+    # group keys, correlates, safe-drop justifications) — drives the paper's
+    # §5 row-selection-predicate pruning / column projection
+    required: Set[str] = field(default_factory=set)
+    # child id -> param names that must bind non-NULL for the predicate to
+    # apply (left-outer-join right side; see plan concretization)
+    guards: Dict[int, List[str]] = field(default_factory=dict)
+
+
+# --------------------------------------------------------------------------- #
+# atom helpers
+# --------------------------------------------------------------------------- #
+
+
+def pins_of(F: Expr) -> Dict[str, Expr]:
+    """col -> rhs for equality pins (``col == Param/Lit``) and membership pins
+    (``col IN set`` / ``col IN ParamSet``)."""
+    out: Dict[str, Expr] = {}
+    for a in conjuncts(F):
+        if isinstance(a, BinOp) and a.op == "==":
+            l, r = a.left, a.right
+            if isinstance(l, Col) and isinstance(r, (Param, Lit)):
+                out.setdefault(l.name, r)
+            elif isinstance(r, Col) and isinstance(l, (Param, Lit)):
+                out.setdefault(r.name, l)
+        elif isinstance(a, IsIn) and isinstance(a.operand, Col):
+            out.setdefault(a.operand.name, a)  # marker: membership pin
+    return out
+
+
+def _pin_param(pin) -> Set[str]:
+    if isinstance(pin, Param):
+        return {pin.name}
+    if isinstance(pin, IsIn):
+        from .expr import params_of as _po
+        return _po(pin)
+    return set()
+
+
+def _pin_atom(col: str, pin: Expr) -> Expr:
+    """Re-materialize a pin as an atom on (possibly another) column ``col``."""
+    if isinstance(pin, IsIn):
+        return IsIn(Col(col), pin.values)
+    return BinOp("==", Col(col), pin)
+
+
+def _split_atoms(F: Expr, side_cols: Sequence[Set[str]]) -> Tuple[List[List[Expr]], List[Expr]]:
+    """Partition conjuncts by which single side's schema covers them.
+    Returns (per-side atom lists, unassignable atoms)."""
+    per = [[] for _ in side_cols]
+    bad: List[Expr] = []
+    for a in conjuncts(F):
+        cols = cols_of(a)
+        placed = False
+        for i, sc in enumerate(side_cols):
+            if cols <= sc:
+                per[i].append(a)
+                placed = True
+                break
+        if not placed:
+            bad.append(a)
+    return per, bad
+
+
+# --------------------------------------------------------------------------- #
+# main entry
+# --------------------------------------------------------------------------- #
+
+
+class Pushdown:
+    """Pushdown engine over a plan with precomputed per-node schemas."""
+
+    def __init__(self, plan: O.Node, catalog_schemas: Dict[str, List[str]],
+                 precise_minmax: bool = False):
+        self.plan = plan
+        self.catalog_schemas = catalog_schemas
+        self.precise_minmax = precise_minmax
+        self.schemas: Dict[int, List[str]] = {}
+        for n in O.walk(plan):
+            self.schemas[n.id] = O.schema(n, catalog_schemas)
+
+    def schema_of(self, n: O.Node) -> List[str]:
+        return self.schemas[n.id]
+
+    # ------------------------------------------------------------------ #
+    def push_node(self, n: O.Node, F: Expr, relaxed: bool = False) -> Push:
+        """Push ``F`` (predicate over ``n``'s output) to ``n``'s children."""
+        if F == FALSE:
+            return Push({c.id: FALSE for c in n.children}, True)
+
+        if isinstance(n, O.Filter):
+            return Push({n.child.id: land(F, n.pred)}, True)
+
+        if isinstance(n, O.Project):
+            return Push({n.child.id: F}, True)
+
+        if isinstance(n, O.RowTransform):
+            g = substitute_cols(F, n.assigns)
+            return Push({n.child.id: g}, True)
+
+        if isinstance(n, O.Alias):
+            p = n.prefix
+            mapping = {p + c: Col(c) for c in self.schema_of(n.child)}
+            return Push({n.child.id: substitute_cols(F, mapping)}, True)
+
+        if isinstance(n, O.Sort):
+            return Push({n.child.id: F}, True)
+
+        if isinstance(n, O.Union):
+            return Push({p.id: F for p in n.parts}, True)
+
+        if isinstance(n, O.Intersect):
+            return Push({n.left.id: F, n.right.id: F}, True)
+
+        if isinstance(n, (O.InnerJoin, O.LeftOuterJoin)):
+            return self._push_join(n, F, relaxed)
+
+        if isinstance(n, (O.SemiJoin, O.AntiJoin)):
+            return self._push_semi(n, F, relaxed)
+
+        if isinstance(n, O.GroupBy):
+            return self._push_groupby(n, F, relaxed)
+
+        if isinstance(n, O.Pivot):
+            keys = {n.index}
+            per, bad = _split_atoms(F, [keys])
+            pins = pins_of(F)
+            precise = n.index in pins
+            req = _pin_param(pins[n.index]) if n.index in pins else set()
+            return Push({n.child.id: land(*per[0])}, precise, dropped=bad,
+                        required=req)
+
+        if isinstance(n, O.Unpivot):
+            return self._push_unpivot(n, F)
+
+        if isinstance(n, O.RowExpand):
+            branches = []
+            base_cols = set(self.schema_of(n.child))
+            ok = True
+            for variant in n.variants:
+                g = substitute_cols(F, variant)
+                if not cols_of(g) <= base_cols:
+                    ok = False
+                    continue
+                branches.append(g)
+            g = lor(*branches) if branches else TRUE
+            return Push({n.child.id: g}, ok and bool(branches))
+
+        if isinstance(n, O.Window):
+            return self._push_window(n, F)
+
+        if isinstance(n, O.GroupedMap):
+            keys = set(n.keys)
+            per, bad = _split_atoms(F, [keys])
+            pins = pins_of(F)
+            precise = all(k in pins for k in n.keys)
+            req = set()
+            for k2 in n.keys:
+                if k2 in pins:
+                    req |= _pin_param(pins[k2])
+            return Push({n.child.id: land(*per[0])}, precise, dropped=bad,
+                        required=req)
+
+        if isinstance(n, O.FilterScalarSub):
+            return self._push_scalar_sub(n, F, relaxed)
+
+        raise TypeError(f"pushdown: unknown node {type(n)}")
+
+    # ------------------------------------------------------------------ #
+    def _push_join(self, n, F: Expr, relaxed: bool) -> Push:
+        lcols = set(self.schema_of(n.left))
+        rcols_full = set(self.schema_of(n.right))
+        # columns visible from the right in the joined output (dups hidden)
+        rcols = rcols_full - lcols
+        (latoms, ratoms), bad = _split_atoms(F, [lcols, rcols])
+        pins = pins_of(F)
+        # OR-split relaxation for mixed-side disjunctions (sound superset)
+        for a in bad:
+            l_part, r_part = _or_split(a, [lcols, rcols])
+            if l_part is not None:
+                latoms.append(l_part)
+            if r_part is not None:
+                ratoms.append(r_part)
+        # key transfer: a pin on either key column mirrors to the other side
+        guards: Dict[int, List[str]] = {}
+        keys_pinned = True
+        for lk, rk in n.on:
+            pin = pins.get(lk) or pins.get(rk)
+            if pin is None:
+                keys_pinned = False
+                continue
+            if lk in pins:
+                ratoms.append(_pin_atom(rk, pins[lk]))
+            if rk in pins and rk in rcols:
+                latoms.append(_pin_atom(lk, pins[rk]))
+            elif rk not in pins and lk in pins:
+                pass
+        g_l, g_r = land(*latoms), land(*ratoms)
+        required: Set[str] = set()
+        for lk, rk in n.on:
+            for c in (lk, rk):
+                if c in pins:
+                    required |= _pin_param(pins[c])
+        # a dropped mixed-side atom is harmless when all its columns are
+        # pinned to scalars: under a real output row's binding it evaluates to
+        # a true constant (e.g. Q7/Q19-style OR conditions over both sides)
+        unsafe_bad = []
+        for a in bad:
+            if all(c in pins and not isinstance(pins[c], IsIn) for c in cols_of(a)):
+                for c in cols_of(a):
+                    required |= _pin_param(pins[c])
+            else:
+                unsafe_bad.append(a)
+        precise = keys_pinned and not unsafe_bad
+        if n.pred is not None:
+            # extra non-equi condition: precise iff all its columns are pinned
+            # to scalars (then the condition holds uniformly for the pinned
+            # values, which came from an actual output row).
+            scalar_pin = all(
+                c in pins and not isinstance(pins[c], IsIn) for c in cols_of(n.pred)
+            )
+            if scalar_pin:
+                for c in cols_of(n.pred):
+                    required |= _pin_param(pins[c])
+            precise = precise and scalar_pin
+        if isinstance(n, O.LeftOuterJoin):
+            # right-side predicate only applies when t_o's right columns are
+            # non-NULL; collect the params that bind from right columns.
+            gp = []
+            for a in conjuncts(g_r):
+                for p in _atom_params(a):
+                    gp.append(p)
+            guards[n.right.id] = gp
+        return Push({n.left.id: g_l, n.right.id: g_r}, precise, dropped=bad,
+                    guards=guards, required=required)
+
+    def _push_semi(self, n, F: Expr, relaxed: bool) -> Push:
+        ocols = set(self.schema_of(n.outer))
+        pins = pins_of(F)
+        inner_atoms: List[Expr] = []
+        keys_pinned = True
+        for ok_, ik in n.on:
+            if ok_ in pins:
+                inner_atoms.append(_pin_atom(ik, pins[ok_]))
+            else:
+                keys_pinned = False
+        pred_ok = True
+        if n.pred is not None:
+            # substitute pinned outer columns into the correlation predicate
+            pcols = cols_of(n.pred) & ocols
+            if all(c in pins for c in pcols):
+                mapping = {c: pins[c] if not isinstance(pins[c], IsIn) else Col(c) for c in pcols}
+                if all(not isinstance(pins[c], IsIn) for c in pcols):
+                    inner_atoms.append(substitute_cols(n.pred, mapping))
+                else:
+                    pred_ok = False
+            else:
+                pred_ok = False
+        required: Set[str] = set()
+        for ok2, ik in n.on:
+            if ok2 in pins:
+                required |= _pin_param(pins[ok2])
+        if n.pred is not None:
+            for c in cols_of(n.pred) & ocols:
+                if c in pins:
+                    required |= _pin_param(pins[c])
+        if isinstance(n, O.AntiJoin):
+            # inner lineage is the empty set (paper Table 2)
+            g_inner = FALSE
+            precise = keys_pinned and (n.pred is None or pred_ok)
+            return Push({n.outer.id: F, n.inner.id: g_inner}, precise, required=required)
+        g_inner = land(*inner_atoms) if (keys_pinned and pred_ok) else (
+            land(*inner_atoms) if inner_atoms else TRUE
+        )
+        precise = keys_pinned and pred_ok
+        return Push({n.outer.id: F, n.inner.id: g_inner}, precise, required=required)
+
+    def _push_groupby(self, n, F: Expr, relaxed: bool) -> Push:
+        keys = set(n.keys)
+        per, bad = _split_atoms(F, [keys])
+        atoms = per[0]
+        pins = pins_of(F)
+        keys_pinned = all(k in pins for k in n.keys)
+        dropped = []
+        for a in bad:
+            acols = cols_of(a)
+            if acols <= keys | set(n.aggs):
+                # atom touching aggregate outputs: droppable (group lineage)
+                if self.precise_minmax and keys_pinned:
+                    ref = _minmax_refine(n, a)
+                    if ref is not None:
+                        atoms.append(ref)
+                        continue
+                dropped.append(a)
+            else:
+                dropped.append(a)
+        required: Set[str] = set()
+        for k2 in n.keys:
+            if k2 in pins:
+                required |= _pin_param(pins[k2])
+        return Push({n.child.id: land(*atoms)}, keys_pinned, dropped=dropped,
+                    required=required)
+
+    def _push_unpivot(self, n, F: Expr) -> Push:
+        pins = pins_of(F)
+        idx_atoms = [a for a in conjuncts(F) if cols_of(a) <= set(n.index_cols)]
+        branches = []
+        for i, vc in enumerate(n.value_cols):
+            mapping = {n.var_name: Lit(i), n.value_name: Col(vc)}
+            sub = substitute_cols(land(*[a for a in conjuncts(F) if not cols_of(a) <= set(n.index_cols)]), mapping)
+            branches.append(sub)
+        g = land(land(*idx_atoms), lor(*branches) if branches else TRUE)
+        precise = all(k in pins for k in n.index_cols)
+        req = set()
+        for k2 in n.index_cols:
+            if k2 in pins:
+                req |= _pin_param(pins[k2])
+        return Push({n.child.id: g}, precise, required=req)
+
+    def _push_window(self, n, F: Expr) -> Push:
+        # Positional/window lineage: precise iff the (unique) order column is
+        # pinned — G selects the trailing window by order-column range.  Our
+        # executor also emits __pos__; pins on __pos__ can't map to input
+        # values without data => imprecise (materialize).
+        idx = n.order_by[0] if n.order_by else None
+        pins = pins_of(F)
+        if idx is None or idx not in pins or isinstance(pins[idx], IsIn):
+            kept = [a for a in conjuncts(F) if cols_of(a) <= set(self.schema_of(n.child))]
+            return Push({n.child.id: land(*kept)}, False,
+                        dropped=[a for a in conjuncts(F) if a not in kept])
+        v = pins[idx]
+        # trailing `size` rows by the order column (dense integer index
+        # contract — documented for pipeline builders)
+        g = land(Col(idx) <= v, Col(idx) > BinOp("-", v, Lit(n.size)))
+        return Push({n.child.id: g}, True, required=_pin_param(v))
+
+    def _push_scalar_sub(self, n, F: Expr, relaxed: bool) -> Push:
+        ocols = set(self.schema_of(n.child))
+        pins = pins_of(F)
+        inner_atoms = []
+        corr_pinned = True
+        for oc, ic in n.correlate:
+            if oc in pins:
+                inner_atoms.append(_pin_atom(ic, pins[oc]))
+            else:
+                corr_pinned = False
+        # outer side keeps F; precise when the correlation keys and the
+        # comparison's outer columns are pinned (comparison outcome is then
+        # uniform across selected rows).
+        expr_pinned = all(c in pins for c in cols_of(n.outer_expr))
+        required: Set[str] = set()
+        for oc, ic in n.correlate:
+            if oc in pins:
+                required |= _pin_param(pins[oc])
+        for c in cols_of(n.outer_expr):
+            if c in pins:
+                required |= _pin_param(pins[c])
+        if not n.correlate:
+            g_inner = TRUE  # whole inner table feeds the global scalar
+            precise = expr_pinned
+        else:
+            g_inner = land(*inner_atoms) if corr_pinned else TRUE
+            precise = corr_pinned and expr_pinned
+        return Push({n.child.id: F, n.inner.id: g_inner}, precise, required=required)
+
+
+def _atom_params(a: Expr) -> List[str]:
+    from .expr import params_of
+
+    return sorted(params_of(a))
+
+
+def _minmax_refine(n: O.GroupBy, atom: Expr) -> Optional[Expr]:
+    """Beyond-paper option: for ``agg_out == v`` with agg min/max, select only
+    the extremal rows (paper default keeps the whole group)."""
+    if isinstance(atom, BinOp) and atom.op == "==":
+        l, r = atom.left, atom.right
+        col, rhs = (l, r) if isinstance(l, Col) else (r, l) if isinstance(r, Col) else (None, None)
+        if col is not None and col.name in n.aggs:
+            agg = n.aggs[col.name]
+            if agg.fn in ("min", "max") and agg.expr is not None:
+                return BinOp("==", agg.expr, rhs)
+    return None

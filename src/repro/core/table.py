@@ -1,0 +1,184 @@
+"""Columnar table abstraction for the PredTrace engine.
+
+Tables are dictionaries of equal-length 1-D numpy arrays.  String columns are
+dictionary-encoded at ingest (codes ``int32`` + a host-side vocabulary), dates
+are ``int32`` day numbers.  Every table carries an internal ``__rid__`` column
+(row ids within the *source* table) used by the eager-tracking oracle and for
+reporting lineage answers; PredTrace itself never relies on it (set semantics,
+paper section 4.3).
+
+The same layout maps 1:1 onto device arrays for the JAX scan path: a column is
+a vector, a table block is a fixed-size slab of rows with a validity mask.
+"""
+
+from __future__ import annotations
+
+import sys
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Mapping, Optional, Sequence
+
+import numpy as np
+
+RID = "__rid__"
+
+
+@dataclass
+class Table:
+    """An immutable columnar table."""
+
+    cols: Dict[str, np.ndarray]
+    # Optional dictionary per string column: code -> string.  Shared (not
+    # copied) across derived tables.
+    dicts: Dict[str, List[str]] = field(default_factory=dict)
+    name: Optional[str] = None
+
+    # ------------------------------------------------------------------ #
+    # constructors
+    # ------------------------------------------------------------------ #
+    @staticmethod
+    def from_dict(
+        data: Mapping[str, Sequence],
+        name: Optional[str] = None,
+        dicts: Optional[Dict[str, List[str]]] = None,
+    ) -> "Table":
+        cols: Dict[str, np.ndarray] = {}
+        out_dicts: Dict[str, List[str]] = dict(dicts or {})
+        n = None
+        for k, v in data.items():
+            arr = np.asarray(v)
+            if arr.dtype.kind in ("U", "S", "O"):
+                # dictionary-encode strings
+                vocab, codes = np.unique(arr.astype(str), return_inverse=True)
+                out_dicts[k] = list(vocab)
+                arr = codes.astype(np.int32)
+            cols[k] = arr
+            if n is None:
+                n = len(arr)
+            elif n != len(arr):
+                raise ValueError(f"column {k} length {len(arr)} != {n}")
+        if n is None:
+            n = 0
+        if RID not in cols:
+            cols[RID] = np.arange(n, dtype=np.int64)
+        return Table(cols=cols, dicts=out_dicts, name=name)
+
+    # ------------------------------------------------------------------ #
+    # basic accessors
+    # ------------------------------------------------------------------ #
+    @property
+    def nrows(self) -> int:
+        for v in self.cols.values():
+            return int(len(v))
+        return 0
+
+    @property
+    def columns(self) -> List[str]:
+        return [c for c in self.cols if c != RID]
+
+    def __getitem__(self, col: str) -> np.ndarray:
+        return self.cols[col]
+
+    def has(self, col: str) -> bool:
+        return col in self.cols
+
+    def rids(self) -> np.ndarray:
+        return self.cols[RID]
+
+    def nbytes(self) -> int:
+        return int(sum(v.nbytes for v in self.cols.values()))
+
+    # ------------------------------------------------------------------ #
+    # derivation helpers (used by the executor)
+    # ------------------------------------------------------------------ #
+    def mask(self, m: np.ndarray) -> "Table":
+        return Table({k: v[m] for k, v in self.cols.items()}, self.dicts, self.name)
+
+    def take(self, idx: np.ndarray) -> "Table":
+        return Table({k: v[idx] for k, v in self.cols.items()}, self.dicts, self.name)
+
+    def with_cols(self, new: Mapping[str, np.ndarray]) -> "Table":
+        cols = dict(self.cols)
+        for k, v in new.items():
+            if len(v) != self.nrows:
+                raise ValueError(f"with_cols: {k} has {len(v)} rows, expected {self.nrows}")
+            cols[k] = np.asarray(v)
+        return Table(cols, self.dicts, self.name)
+
+    def project(self, keep: Iterable[str]) -> "Table":
+        keep = list(keep)
+        cols = {k: self.cols[k] for k in keep}
+        cols[RID] = self.cols[RID]
+        dicts = {k: v for k, v in self.dicts.items() if k in cols}
+        return Table(cols, dicts, self.name)
+
+    def drop(self, cols: Iterable[str]) -> "Table":
+        dead = set(cols)
+        return self.project([c for c in self.columns if c not in dead])
+
+    def rename(self, mapping: Mapping[str, str]) -> "Table":
+        cols = {}
+        dicts = {}
+        for k, v in self.cols.items():
+            nk = mapping.get(k, k)
+            cols[nk] = v
+            if k in self.dicts:
+                dicts[nk] = self.dicts[k]
+        return Table(cols, dicts, self.name)
+
+    def prefix(self, p: str) -> "Table":
+        return self.rename({c: p + c for c in self.columns})
+
+    def head(self, n: int) -> "Table":
+        return Table({k: v[:n] for k, v in self.cols.items()}, self.dicts, self.name)
+
+    # ------------------------------------------------------------------ #
+    # decoding / display
+    # ------------------------------------------------------------------ #
+    def decode(self, col: str) -> np.ndarray:
+        """Return string values for a dictionary-encoded column."""
+        if col in self.dicts:
+            vocab = np.asarray(self.dicts[col], dtype=object)
+            return vocab[self.cols[col]]
+        return self.cols[col]
+
+    def encode_value(self, col: str, value) -> int:
+        """Encode a python string into this column's dictionary code."""
+        if col in self.dicts and isinstance(value, str):
+            try:
+                return self.dicts[col].index(value)
+            except ValueError:
+                return -1  # value not present: predicate can never match
+        return value
+
+    def row(self, i: int, decode: bool = False) -> Dict[str, object]:
+        out = {}
+        for c in self.columns:
+            v = self.cols[c][i]
+            if decode and c in self.dicts:
+                v = self.dicts[c][int(v)]
+            out[c] = v.item() if hasattr(v, "item") and not isinstance(v, str) else v
+        return out
+
+    def to_pylist(self, decode: bool = True, limit: Optional[int] = None) -> List[Dict]:
+        n = self.nrows if limit is None else min(limit, self.nrows)
+        return [self.row(i, decode=decode) for i in range(n)]
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        cols = ", ".join(f"{c}:{self.cols[c].dtype}" for c in self.columns)
+        return f"Table({self.name or '?'}, {self.nrows} rows, [{cols}])"
+
+
+def concat_tables(tables: Sequence[Table]) -> Table:
+    """Concatenate tables with identical schemas (used by Union)."""
+    if not tables:
+        raise ValueError("concat of zero tables")
+    first = tables[0]
+    cols = {}
+    for k in first.cols:
+        cols[k] = np.concatenate([t.cols[k] for t in tables])
+    dicts = dict(first.dicts)
+    return Table(cols, dicts, first.name)
+
+
+def empty_like(t: Table) -> Table:
+    return Table({k: v[:0] for k, v in t.cols.items()}, t.dicts, t.name)

@@ -1,0 +1,1 @@
+from .sharding import axis_rules, shard, spec_for, tree_sharding, DEFAULT_RULES

@@ -1,0 +1,159 @@
+"""Logical-axis sharding rules (MaxText-style, simplified).
+
+Model code annotates tensors with *logical* axis names; a rules table maps
+them to mesh axes.  Swapping the table is the main sharding hillclimb lever —
+no model code changes.
+
+Key helpers
+-----------
+* ``axis_rules(rules)``      — context manager installing a rules table.
+* ``shard(x, *logical)``     — ``with_sharding_constraint`` honoring rules,
+                               with divisibility guards (e.g. 2 KV heads can't
+                               shard over a 16-way model axis -> replicated).
+* ``logical_to_sharding``    — build ``NamedSharding`` for parameter trees
+                               from spec trees, with optional FSDP: the largest
+                               unsharded dim of every parameter is sharded over
+                               the FSDP axes (ZeRO-3 layout).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+Logical = Optional[Union[str, Tuple[str, ...]]]
+
+# default rules: data-parallel batch, tensor-parallel heads/mlp/vocab
+DEFAULT_RULES: Dict[str, Logical] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": None,
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "experts": None,  # "model" => expert parallelism
+    "kv_seq": "model",  # decode KV-cache sequence sharding (when heads can't)
+    "seq_act": None,  # residual-stream sequence sharding between blocks (SP)
+    "state": None,
+    "conv": None,
+}
+
+_local = threading.local()
+
+
+def current_rules() -> Dict[str, Logical]:
+    return getattr(_local, "rules", DEFAULT_RULES)
+
+
+@contextlib.contextmanager
+def axis_rules(rules: Dict[str, Logical]):
+    old = current_rules()
+    merged = dict(old)
+    merged.update(rules)
+    _local.rules = merged
+    try:
+        yield merged
+    finally:
+        _local.rules = old
+
+
+def _mesh_axes(mesh: Mesh, logical: Logical) -> Tuple[str, ...]:
+    if logical is None:
+        return ()
+    rules = current_rules()
+    resolved = rules.get(logical, None) if isinstance(logical, str) else logical
+    if resolved is None:
+        return ()
+    if isinstance(resolved, str):
+        resolved = (resolved,)
+    return tuple(a for a in resolved if a in mesh.axis_names)
+
+
+def _axis_size(mesh: Mesh, axes: Tuple[str, ...]) -> int:
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return size
+
+
+def spec_for(mesh: Mesh, shape: Sequence[int], logical: Sequence[Logical]) -> P:
+    """PartitionSpec with divisibility guards."""
+    entries = []
+    used = set()
+    for dim, name in zip(shape, logical):
+        axes = _mesh_axes(mesh, name)
+        axes = tuple(a for a in axes if a not in used)
+        if axes and dim % _axis_size(mesh, axes) == 0:
+            entries.append(axes if len(axes) > 1 else axes[0])
+            used.update(axes)
+        else:
+            entries.append(None)
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def shard(x, *logical: Logical):
+    """Apply a sharding constraint inside jit when a mesh is active."""
+    mesh = _current_mesh()
+    if mesh is None or mesh.empty:
+        return x
+    spec = spec_for(mesh, x.shape, logical)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def _current_mesh() -> Optional[Mesh]:
+    try:
+        from jax._src import mesh as mesh_lib
+
+        m = mesh_lib.thread_resources.env.physical_mesh
+        return m
+    except Exception:
+        return None
+
+
+# --------------------------------------------------------------------------- #
+# parameter shardings (with FSDP)
+# --------------------------------------------------------------------------- #
+
+
+def tree_sharding(mesh: Mesh, shapes, specs, fsdp: bool = False,
+                  fsdp_axes: Tuple[str, ...] = ("pod", "data")):
+    """Like logical_to_sharding but specs is a pytree whose leaves are tuples
+    (one logical name per dim)."""
+    flat_shapes, treedef = jax.tree.flatten(shapes)
+    flat_specs = treedef.flatten_up_to(specs)
+    fsdp_ax = tuple(a for a in fsdp_axes if a in mesh.axis_names)
+
+    out = []
+    for sh, sp in zip(flat_shapes, flat_specs):
+        shape = sh.shape
+        spec = list(spec_for(mesh, shape, sp))
+        spec += [None] * (len(shape) - len(spec))
+        if fsdp and fsdp_ax:
+            used = set()
+            for e in spec:
+                if e is None:
+                    continue
+                used.update(e if isinstance(e, tuple) else (e,))
+            if not (set(fsdp_ax) & used):
+                size = _axis_size(mesh, fsdp_ax)
+                cands = [
+                    (shape[i], i)
+                    for i in range(len(shape))
+                    if spec[i] is None and shape[i] % size == 0
+                ]
+                if cands:
+                    _, i = max(cands)
+                    spec[i] = fsdp_ax if len(fsdp_ax) > 1 else fsdp_ax[0]
+        while spec and spec[-1] is None:
+            spec.pop()
+        out.append(NamedSharding(mesh, P(*spec)))
+    return jax.tree.unflatten(treedef, out)

@@ -1,0 +1,3 @@
+from .flash_attn import flash_attention
+from .ops import mha_flash, mha_ref
+from .ref import attention_ref

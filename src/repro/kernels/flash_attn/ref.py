@@ -1,0 +1,24 @@
+"""Pure-jnp oracle: causal (optionally sliding-window) attention."""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, window: Optional[int] = None):
+    """q,k,v: [BH, S, D] -> [BH, S, D]."""
+    BH, S, D = q.shape
+    scale = 1.0 / math.sqrt(D)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None], s, -1e30)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

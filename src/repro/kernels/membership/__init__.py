@@ -1,0 +1,3 @@
+from .membership import membership
+from .ops import probe
+from .ref import membership_ref

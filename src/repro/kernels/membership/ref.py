@@ -1,0 +1,7 @@
+"""Pure-jnp oracle for the membership probe."""
+
+import jax.numpy as jnp
+
+
+def membership_ref(values, vset):
+    return jnp.isin(values, vset).astype(jnp.int32)

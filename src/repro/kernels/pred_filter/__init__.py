@@ -1,0 +1,3 @@
+from .ops import compile_conjunction, scan_mask
+from .pred_filter import OPS, pred_filter
+from .ref import pred_filter_ref

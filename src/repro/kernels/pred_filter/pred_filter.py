@@ -1,0 +1,79 @@
+"""Fused conjunctive-predicate scan kernel (PredTrace's lineage-query hot path).
+
+A pushed-down predicate is a conjunction of atoms ``col <op> const``.  The
+DBMS equivalent is a sequential scan; on TPU we stream fixed-size columnar row
+blocks HBM->VMEM and evaluate **all atoms in one pass** on the VPU, writing a
+single int32 mask — one read of each referenced column per block, no
+intermediate per-atom masks in HBM.
+
+Layout: a block is ``[C, BN]`` (columns x rows, int32 — dictionary codes,
+YYYYMMDD dates, or fixed-point cents).  The atom structure (which column,
+which comparison) is *static* (baked at trace time per pushed-down predicate —
+PredTrace compiles one kernel per inferred lineage plan); thresholds are a
+runtime ``[K]`` vector so re-binding ``t_o`` does NOT recompile.
+
+Atom ops: 0:== 1:!= 2:< 3:<= 4:> 5:>=
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_ROWS = 1024
+
+OPS = {"==": 0, "!=": 1, "<": 2, "<=": 3, ">": 4, ">=": 5}
+
+
+def _apply_op(op_code: int, col, thr):
+    if op_code == 0:
+        return col == thr
+    if op_code == 1:
+        return col != thr
+    if op_code == 2:
+        return col < thr
+    if op_code == 3:
+        return col <= thr
+    if op_code == 4:
+        return col > thr
+    if op_code == 5:
+        return col >= thr
+    raise ValueError(op_code)
+
+
+def _kernel(cols_ref, thr_ref, out_ref, *, atoms: Tuple[Tuple[int, int], ...]):
+    """atoms: static ((col_idx, op_code), ...)."""
+    acc = jnp.ones((cols_ref.shape[1],), jnp.bool_)
+    for j, (ci, op) in enumerate(atoms):
+        col = cols_ref[ci, :]
+        thr = thr_ref[j]
+        acc = jnp.logical_and(acc, _apply_op(op, col, thr))
+    out_ref[...] = acc.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("atoms", "block_rows", "interpret"))
+def pred_filter(
+    cols: jax.Array,  # [C, N] int32 columnar block-major table slab
+    thresholds: jax.Array,  # [K] int32
+    atoms: Tuple[Tuple[int, int], ...],  # static (col_idx, op_code) per atom
+    block_rows: int = BLOCK_ROWS,
+    interpret: bool = True,
+) -> jax.Array:
+    C, N = cols.shape
+    assert N % block_rows == 0, f"pad N={N} to a multiple of {block_rows}"
+    kern = functools.partial(_kernel, atoms=atoms)
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((N,), jnp.int32),
+        grid=(N // block_rows,),
+        in_specs=[
+            pl.BlockSpec((C, block_rows), lambda i: (0, i)),  # column slab in VMEM
+            pl.BlockSpec((thresholds.shape[0],), lambda i: (0,)),  # thresholds
+        ],
+        out_specs=pl.BlockSpec((block_rows,), lambda i: (i,)),
+        interpret=interpret,
+    )(cols, thresholds)

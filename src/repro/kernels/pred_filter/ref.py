@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the fused predicate scan."""
+
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax.numpy as jnp
+
+
+def pred_filter_ref(cols, thresholds, atoms: Tuple[Tuple[int, int], ...]):
+    acc = jnp.ones((cols.shape[1],), jnp.bool_)
+    for j, (ci, op) in enumerate(atoms):
+        col = cols[ci]
+        t = thresholds[j]
+        cmp = [
+            col == t, col != t, col < t, col <= t, col > t, col >= t,
+        ][op]
+        acc = jnp.logical_and(acc, cmp)
+    return acc.astype(jnp.int32)

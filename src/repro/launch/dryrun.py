@@ -1,0 +1,247 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (JAX locks the device
+# count at first initialization).
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) cell
+on the production meshes and record memory / cost / collective analysis.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3.2-3b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out experiments/dryrun]
+"""
+
+import argparse
+import json
+import time
+import traceback
+from dataclasses import replace
+from pathlib import Path
+
+import jax
+
+from ..configs import REGISTRY, SHAPES, get
+from ..optim import adamw
+from . import roofline as R
+from .mesh import make_production_mesh
+from .steps import build_decode, build_prefill, build_train
+
+# memory ceiling per chip (TPU v5e: 16 GB HBM)
+HBM_PER_CHIP = 16 * 1024**3
+
+# per-arch training overrides: gradient accumulation to bound activation
+# memory on the big models (see EXPERIMENTS.md §Dry-run)
+TRAIN_OVERRIDES = {
+    "mixtral-8x22b": {"accum_steps": 4},
+    "granite-34b": {"accum_steps": 4},
+    "glm4-9b": {"accum_steps": 2},
+    "phi-3-vision-4.2b": {"accum_steps": 2},
+    "llama3.2-3b": {"accum_steps": 2},
+    "hymba-1.5b": {"accum_steps": 4},
+    "seamless-m4t-medium": {"accum_steps": 4},
+    "olmoe-1b-7b": {"accum_steps": 4},
+    "xlstm-125m": {"accum_steps": 8},
+}
+
+# residual-stream sequence sharding (Megatron-SP analogue) for training:
+# bounds the remat-saved layer inputs at [L, B, S/model, d]
+TRAIN_RULES = {"seq_act": "model"}
+
+# analysis layer counts for the unrolled cost lowerings (delta method)
+ANALYSIS_LAYERS = (2, 4)
+
+
+def _lower(mesh, cfg, shape, fsdp):
+    if shape.kind == "train":
+        jitted, (p_shapes, o_shapes, b_specs) = build_train(
+            mesh, cfg, shape, adamw.AdamWConfig(), fsdp=fsdp
+        )
+        return jitted.lower(p_shapes, o_shapes, b_specs)
+    if shape.kind == "prefill":
+        jitted, (p_shapes, b_specs) = build_prefill(mesh, cfg, shape, fsdp=fsdp)
+        return jitted.lower(p_shapes, b_specs)
+    jitted, (p_shapes, s_shapes, tok) = build_decode(mesh, cfg, shape, fsdp=fsdp)
+    return jitted.lower(p_shapes, s_shapes, tok)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, fsdp: bool = True,
+             rules=None, verbose: bool = True, analysis: bool = True,
+             cfg_overrides=None):
+    """Lower + compile one (arch x shape x mesh) cell.
+
+    1. FULL-config lowering: the compile deliverable + memory_analysis
+       (fits-in-HBM) + a baseline cost reading.
+    2. Two reduced-layer lowerings with fully-unrolled scans (L=2, L=4):
+       XLA cost analysis counts scan bodies once regardless of trip count,
+       so per-layer costs come from the unrolled delta and are extrapolated
+       to the full depth (exact for everything that scales with L, including
+       per-layer FSDP collectives).
+    3. Analytic corrections for sequence-recurrent scans (SSM/xLSTM), which
+       can be neither unrolled nor delta-extrapolated.
+    """
+    cfg = get(arch)
+    shape = SHAPES[shape_name]
+    ok, why = cfg.supports_shape(shape_name)
+    mesh_name = "pod2x16x16" if multi_pod else "16x16"
+    cell = {"arch": arch, "shape": shape_name, "mesh": mesh_name, "kind": shape.kind}
+    if not ok:
+        cell["status"] = "skipped"
+        cell["reason"] = why
+        return cell
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    ndev = mesh.size
+    t0 = time.time()
+    from ..distrib.sharding import axis_rules
+
+    over = dict(TRAIN_OVERRIDES.get(arch, {})) if shape.kind == "train" else {}
+    over.update(cfg_overrides or {})
+    cell_rules = dict(TRAIN_RULES) if shape.kind == "train" else {}
+    cell_rules.update(rules or {})
+    tcfg = replace(cfg, **over)
+
+    with mesh, axis_rules(cell_rules):
+        lowered = _lower(mesh, tcfg, shape, fsdp)
+        compiled = lowered.compile()
+        rf_full = R.analyze(compiled, ndev)
+
+        rf = rf_full
+        if analysis and not cfg.xlstm:
+            ls, lb = ANALYSIS_LAYERS
+            cs = R.analyze(
+                _lower(mesh, replace(tcfg, n_layers=ls, scan_unroll=True), shape, fsdp).compile(),
+                ndev,
+            )
+            cb = R.analyze(
+                _lower(mesh, replace(tcfg, n_layers=lb, scan_unroll=True), shape, fsdp).compile(),
+                ndev,
+            )
+            rf = R.combine_delta(cs, cb, ls, lb, cfg.n_layers)
+
+        # the accumulation scan body is counted once: scale by A (the
+        # optimizer epilogue gets scaled too — negligible overcount)
+        A = max(tcfg.accum_steps, 1) if shape.kind == "train" else 1
+
+        # analytic sequence-scan corrections (SSM / xLSTM)
+        batch_shard = 1
+        for ax in ("pod", "data"):
+            if ax in mesh.axis_names:
+                batch_shard *= mesh.shape[ax]
+        model_shard = mesh.shape.get("model", 1)
+        cf, cbts = R.ssm_scan_correction(tcfg, shape, batch_shard, model_shard)
+        rf = R.Roofline(
+            rf.flops * A + cf,
+            rf.bytes_accessed * A + cbts,
+            rf.collective_wire_bytes * A,
+            {k: v * A for k, v in rf.collective_breakdown.items()},
+            rf_full.arg_bytes,
+            rf_full.temp_bytes,
+            rf_full.out_bytes,
+        )
+
+    ma = compiled.memory_analysis()
+    if verbose:
+        print(f"  memory_analysis: {ma}")
+        ca = compiled.cost_analysis()
+        if isinstance(ca, list):
+            ca = ca[0]
+        print(
+            "  cost_analysis(full lowering): flops=%.3e bytes=%.3e "
+            "(corrected per-device: flops=%.3e bytes=%.3e)"
+            % (
+                float(ca.get("flops", 0)), float(ca.get("bytes accessed", 0)),
+                rf.flops, rf.bytes_accessed,
+            )
+        )
+    per_dev = rf.per_device_hbm_bytes
+    cell.update(
+        status="ok",
+        devices=ndev,
+        compile_s=time.time() - t0,
+        roofline=rf.to_dict(),
+        roofline_uncorrected=rf_full.to_dict(),
+        per_device_bytes=per_dev,
+        fits_hbm=bool(per_dev <= HBM_PER_CHIP),
+        model_flops=R.model_flops_per_step(cfg, shape),
+        total_params=R.total_params(cfg),
+        active_params=R.active_params(cfg),
+    )
+    # dominant-term summary + MODEL_FLOPS ratio (global = per-device * ndev)
+    cell["model_flops_ratio"] = (
+        cell["model_flops"] / (rf.flops * ndev) if rf.flops else None
+    )
+    return cell
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--resume", action="store_true",
+                    help="skip cells whose JSON already exists")
+    ap.add_argument("--out", type=str, default="experiments/dryrun")
+    args = ap.parse_args()
+
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    cells = []
+    if args.all:
+        for arch in REGISTRY:
+            for shape in SHAPES:
+                cells.append((arch, shape))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells.append((args.arch, args.shape))
+
+    meshes = [args.multi_pod] if not args.both_meshes else [False, True]
+    results = []
+    for arch, shape in cells:
+        for mp in meshes:
+            tag = f"{arch}_{shape}_{'pod2x16x16' if mp else '16x16'}"
+            path = outdir / f"{tag}.json"
+            if args.resume and path.exists():
+                prev = json.loads(path.read_text())
+                if prev.get("status") in ("ok", "skipped"):
+                    results.append(prev)
+                    print(f"=== {tag} (resumed)")
+                    continue
+            print(f"=== {tag}")
+            try:
+                # §Roofline is single-pod: multi-pod cells only need the
+                # compile + memory deliverable (skip the analysis lowerings)
+                cell = run_cell(arch, shape, mp, fsdp=not args.no_fsdp,
+                                analysis=not mp)
+            except Exception as e:
+                traceback.print_exc()
+                cell = {
+                    "arch": arch, "shape": shape,
+                    "mesh": "pod2x16x16" if mp else "16x16",
+                    "status": "error", "error": f"{type(e).__name__}: {e}",
+                }
+            results.append(cell)
+            path = outdir / f"{tag}.json"
+            path.write_text(json.dumps(cell, indent=2, default=str))
+            if cell.get("status") == "ok":
+                rf = cell["roofline"]
+                print(
+                    f"  ok: dominant={rf['dominant']} compute={rf['compute_s']:.4f}s "
+                    f"memory={rf['memory_s']:.4f}s collective={rf['collective_s']:.4f}s "
+                    f"per_dev={cell['per_device_bytes']/2**30:.2f}GiB fits={cell['fits_hbm']}"
+                )
+            else:
+                print(f"  {cell['status']}: {cell.get('reason', cell.get('error',''))}")
+    (outdir / "summary.json").write_text(json.dumps(results, indent=2, default=str))
+    n_ok = sum(1 for c in results if c.get("status") == "ok")
+    n_skip = sum(1 for c in results if c.get("status") == "skipped")
+    n_err = len(results) - n_ok - n_skip
+    print(f"\n{n_ok} ok, {n_skip} skipped (documented), {n_err} errors")
+    return 0 if n_err == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,272 @@
+"""Roofline accounting from compiled dry-run artifacts.
+
+Terms (per EXPERIMENTS.md §Roofline; all PER-DEVICE, which is what
+``cost_analysis`` / SPMD HLO report):
+
+  compute    = HLO_FLOPs / PEAK_FLOPS
+  memory     = HLO_bytes / HBM_BW
+  collective = sum over collective ops of ring wire-time at LINK_BW
+
+TPU v5e constants: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+
+_TYPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+@dataclass
+class CollectiveOp:
+    kind: str
+    out_bytes: int
+    group_size: int
+    wire_bytes: float = 0.0
+
+
+def _parse_types(sig: str) -> int:
+    """Total bytes of a (possibly tuple) HLO type signature."""
+    total = 0
+    for dt, dims in _TYPE_RE.findall(sig):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str, total_devices: int) -> List[CollectiveOp]:
+    ops: List[CollectiveOp] = []
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\([^)]*\)|[\w\[\],]+)\s+([\w\-]+)", line)
+        if not m:
+            continue
+        kind_tok = m.group(2)
+        kind = None
+        for c in COLLECTIVES:
+            if kind_tok == c or kind_tok.startswith(c + "-start") or kind_tok.startswith(c + "."):
+                kind = c
+                break
+        if kind is None:
+            continue
+        out_bytes = _parse_types(m.group(1))
+        g = _GROUPS_RE.search(line)
+        if g:
+            group_size = int(g.group(2))
+        else:
+            gl = _GROUPS_LIST_RE.search(line)
+            group_size = len(gl.group(1).split(",")) if gl else total_devices
+        op = CollectiveOp(kind, out_bytes, max(group_size, 1))
+        G, B = op.group_size, float(op.out_bytes)
+        if G <= 1:
+            op.wire_bytes = 0.0
+        elif kind == "all-gather":
+            op.wire_bytes = B * (G - 1) / G
+        elif kind == "all-reduce":
+            op.wire_bytes = 2 * B * (G - 1) / G
+        elif kind == "reduce-scatter":
+            op.wire_bytes = B * (G - 1)  # out is the scattered shard
+        elif kind == "all-to-all":
+            op.wire_bytes = B * (G - 1) / G
+        else:  # collective-permute
+            op.wire_bytes = B
+        ops.append(op)
+    return ops
+
+
+@dataclass
+class Roofline:
+    flops: float
+    bytes_accessed: float
+    collective_wire_bytes: float
+    collective_breakdown: Dict[str, float]
+    arg_bytes: int = 0
+    temp_bytes: int = 0
+    out_bytes: int = 0
+    alias_bytes: int = 0  # donated in/out aliasing (e.g. KV caches)
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_accessed / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_wire_bytes / LINK_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def per_device_hbm_bytes(self) -> int:
+        # aliased outputs (donated buffers) are not extra allocations
+        return self.arg_bytes + self.temp_bytes + self.out_bytes - self.alias_bytes
+
+    def to_dict(self) -> Dict:
+        return {
+            "flops": self.flops,
+            "bytes_accessed": self.bytes_accessed,
+            "collective_wire_bytes": self.collective_wire_bytes,
+            "collective_breakdown": self.collective_breakdown,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "arg_bytes": self.arg_bytes,
+            "temp_bytes": self.temp_bytes,
+            "out_bytes": self.out_bytes,
+            "alias_bytes": self.alias_bytes,
+        }
+
+
+def analyze(compiled, total_devices: int) -> Roofline:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    nbytes = float(ca.get("bytes accessed", 0.0))
+    txt = compiled.as_text()
+    colls = parse_collectives(txt, total_devices)
+    wire = sum(c.wire_bytes for c in colls)
+    breakdown: Dict[str, float] = {}
+    for c in colls:
+        breakdown[c.kind] = breakdown.get(c.kind, 0.0) + c.wire_bytes
+    ma = compiled.memory_analysis()
+    arg = getattr(ma, "argument_size_in_bytes", 0)
+    temp = getattr(ma, "temp_size_in_bytes", 0)
+    out = getattr(ma, "output_size_in_bytes", 0)
+    alias = getattr(ma, "alias_size_in_bytes", 0)
+    return Roofline(flops, nbytes, wire, breakdown, arg, temp, out, alias)
+
+
+def combine_delta(c_small: "Roofline", c_big: "Roofline", l_small: int, l_big: int,
+                  l_full: int) -> "Roofline":
+    """Extrapolate per-device costs to the full layer count from two
+    fully-unrolled analysis lowerings: per-layer delta is exact, so
+    total(L) = C(ls) + (L - ls) * (C(lb) - C(ls)) / (lb - ls)."""
+    per = {}
+    for field_ in ("flops", "bytes_accessed", "collective_wire_bytes"):
+        a, b = getattr(c_small, field_), getattr(c_big, field_)
+        d = (b - a) / max(l_big - l_small, 1)
+        per[field_] = a + (l_full - l_small) * d
+    breakdown = {}
+    for k in set(c_small.collective_breakdown) | set(c_big.collective_breakdown):
+        a = c_small.collective_breakdown.get(k, 0.0)
+        b = c_big.collective_breakdown.get(k, 0.0)
+        d = (b - a) / max(l_big - l_small, 1)
+        breakdown[k] = max(a + (l_full - l_small) * d, 0.0)
+    return Roofline(
+        max(per["flops"], 0.0),
+        max(per["bytes_accessed"], 0.0),
+        max(per["collective_wire_bytes"], 0.0),
+        breakdown,
+    )
+
+
+def ssm_scan_correction(cfg, shape, batch_shard: int, model_shard: int):
+    """Analytic per-device (flops, bytes) for sequence-recurrent scans, which
+    XLA's cost analysis counts once regardless of trip count and which cannot
+    be unrolled (4096+ steps).  Training multiplier 4x fwd (fwd + ~2x bwd +
+    remat re-fwd); prefill 1x; decode steps are exact already (single trip).
+    """
+    if shape.kind == "decode":
+        return 0.0, 0.0
+    mult = 4.0 if shape.kind == "train" else 1.0
+    B_local = max(shape.global_batch // batch_shard, 1)
+    S = shape.seq_len
+    flops = 0.0
+    nbytes = 0.0
+    if cfg.parallel_ssm and cfg.ssm is not None:
+        dI = cfg.ssm.expand * cfg.d_model
+        dI_l = dI // model_shard if dI % model_shard == 0 else dI
+        N = cfg.ssm.state_dim
+        flops += cfg.n_layers * S * B_local * 9.0 * dI_l * N
+        nbytes += cfg.n_layers * S * B_local * 12.0 * dI_l * N  # h f32 rw-dominated
+    if cfg.xlstm:
+        d = cfg.d_model
+        H = cfg.n_heads
+        d_in = 2 * d
+        dh = d_in // H
+        n_sl = cfg.n_layers // cfg.slstm_every
+        n_ml = cfg.n_layers - n_sl
+        flops += n_ml * S * B_local * 7.0 * H * dh * dh
+        nbytes += n_ml * S * B_local * 12.0 * H * dh * dh  # C f32 rw
+        flops += n_sl * S * B_local * 8.0 * d * d  # recurrent gate matmul
+        nbytes += n_sl * S * B_local * 4.0 * d * 4 * d  # R re-read per step
+    return flops * mult, nbytes * mult
+
+
+def model_flops_per_step(cfg, shape) -> float:
+    """6*N*D (dense) / 6*N_active*D (MoE) for a train step; for decode/prefill
+    2*N_active*D_tokens (fwd only)."""
+    n_active = active_params(cfg)
+    toks = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n_active * toks
+
+
+def total_params(cfg) -> float:
+    return _params(cfg, active_only=False)
+
+
+def active_params(cfg) -> float:
+    return _params(cfg, active_only=True)
+
+
+def _params(cfg, active_only: bool) -> float:
+    d, hd = cfg.d_model, cfg.hd
+    attn = d * hd * (cfg.n_heads * 2 + cfg.n_kv_heads * 2)
+    if cfg.moe is not None:
+        e = cfg.moe.top_k if active_only else cfg.moe.num_experts
+        ffn = 3 * d * cfg.d_ff * e + d * cfg.moe.num_experts
+    else:
+        ffn = 3 * d * cfg.d_ff if cfg.d_ff else 0
+    if cfg.parallel_ssm:
+        di = cfg.ssm.expand * d
+        ffn += 2 * d * di + di * (di + 2 * cfg.ssm.state_dim) + di * d
+    block = attn + ffn
+    if cfg.xlstm:
+        d_in = 2 * d
+        dh = d_in // cfg.n_heads
+        ml = d * d_in * 2 + d_in * (3 * d_in + 2 * cfg.n_heads) + d_in * d
+        sl = d * 4 * d * 2 + d * d
+        n_sl = cfg.n_layers // cfg.slstm_every
+        body = ml * (cfg.n_layers - n_sl) + sl * n_sl
+    else:
+        body = block * cfg.n_layers * (2 if cfg.encdec else 1)
+    embed = cfg.vocab * d * 2
+    return float(body + embed)

@@ -1,0 +1,247 @@
+"""Step builders: jitted + sharded train / prefill / decode steps, and the
+``ShapeDtypeStruct`` input specs used by the multi-pod dry-run (no allocation).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..distrib.sharding import spec_for, tree_sharding
+from ..models import model as M
+from ..models.config import ArchConfig, ShapeConfig
+from ..optim import adamw
+
+SDS = jax.ShapeDtypeStruct
+
+
+# --------------------------------------------------------------------------- #
+# parameter shapes / specs / shardings
+# --------------------------------------------------------------------------- #
+
+
+def param_shapes_and_specs(cfg: ArchConfig):
+    holder = {}
+
+    def f(k):
+        p, s = M.init(cfg, k)
+        holder["s"] = s
+        return p
+
+    shapes = jax.eval_shape(f, jax.random.PRNGKey(0))
+    return shapes, holder["s"]
+
+
+def param_shardings(mesh: Mesh, cfg: ArchConfig, fsdp: bool = True):
+    shapes, specs = param_shapes_and_specs(cfg)
+    sh = tree_sharding(mesh, shapes, specs, fsdp=fsdp)
+    return shapes, specs, sh
+
+
+def serve_param_shapes(shapes):
+    """bf16 copies for inference."""
+    return jax.tree.map(lambda s: SDS(s.shape, jnp.bfloat16), shapes)
+
+
+# --------------------------------------------------------------------------- #
+# batch specs
+# --------------------------------------------------------------------------- #
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, SDS]:
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.encdec:
+        return {
+            "frames": SDS((B, S, cfg.d_model), jnp.bfloat16),
+            "tokens": SDS((B, S), jnp.int32),
+        }
+    if cfg.frontend == "vision":
+        return {
+            "patches": SDS((B, cfg.n_patches, cfg.d_model), jnp.bfloat16),
+            "tokens": SDS((B, S - cfg.n_patches), jnp.int32),
+            "labels": SDS((B, S - cfg.n_patches), jnp.int32),
+        }
+    return {
+        "tokens": SDS((B, S), jnp.int32),
+        "labels": SDS((B, S), jnp.int32),
+    }
+
+
+def batch_shardings(mesh: Mesh, cfg: ArchConfig, shape: ShapeConfig):
+    logical = {
+        "frames": ("batch", "seq", "embed"),
+        "tokens": ("batch", "seq"),
+        "labels": ("batch", "seq"),
+        "patches": ("batch", None, "embed"),
+    }
+    out = {}
+    for k, sds in batch_specs(cfg, shape).items():
+        out[k] = NamedSharding(mesh, spec_for(mesh, sds.shape, logical[k]))
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# decode-state specs
+# --------------------------------------------------------------------------- #
+
+
+def decode_state_specs(cfg: ArchConfig, shape: ShapeConfig):
+    """ShapeDtypeStruct tree + logical-axis tree for the decode cache."""
+
+    def to_sds(x):
+        return SDS(x.shape, x.dtype)
+
+    state = jax.eval_shape(lambda: M.init_decode_state(cfg, shape.global_batch, shape.seq_len))
+    return state
+
+
+def decode_state_shardings(mesh: Mesh, cfg: ArchConfig, shape: ShapeConfig, state_shapes):
+    model_size = mesh.shape.get("model", 1)
+    heads_ok = cfg.n_kv_heads % model_size == 0
+    cache_logical = (
+        (None, "batch", None, "kv_heads", None)
+        if heads_ok
+        else (None, "batch", "kv_seq", None, None)
+    )
+
+    def sharding_for(path, x):
+        name = path[0].key if hasattr(path[0], "key") else str(path[0])
+        if name in ("cache_k", "cache_v"):
+            return NamedSharding(mesh, spec_for(mesh, x.shape, cache_logical))
+        if name == "ssm":
+            return NamedSharding(mesh, spec_for(mesh, x.shape, (None, "batch", "mlp", None)))
+        if name == "enc_out":
+            return NamedSharding(mesh, spec_for(mesh, x.shape, ("batch", "seq", "embed")))
+        if name == "blocks":
+            return NamedSharding(mesh, spec_for(mesh, x.shape, ("batch",) + (None,) * (x.ndim - 1)))
+        return NamedSharding(mesh, P())  # pos, kv_pos: replicated
+
+    return jax.tree_util.tree_map_with_path(sharding_for, state_shapes)
+
+
+# --------------------------------------------------------------------------- #
+# steps
+# --------------------------------------------------------------------------- #
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: adamw.AdamWConfig):
+    def train_step(params, opt_state, batch):
+        A = cfg.accum_steps
+
+        def loss_mb(p, mb):
+            return M.loss_fn(p, mb, cfg)
+
+        if A <= 1:
+            loss, grads = jax.value_and_grad(loss_mb)(params, batch)
+        else:
+            # scan-based microbatch accumulation: the live set stays one
+            # microbatch (+ the f32 grad buffer).  The dry-run analysis
+            # multiplies the per-microbatch costs by A analytically (scan
+            # bodies are counted once by XLA's cost analysis).
+            from ..distrib.sharding import shard as _shard
+
+            def _to_microbatches(x):
+                x = x.reshape((A, x.shape[0] // A) + tuple(x.shape[1:]))
+                # keep the microbatch dim replicated and the batch dim on the
+                # DP axes — otherwise SPMD falls back to full rematerialization
+                # when slicing microbatches out of the scan
+                return _shard(x, None, "batch", *([None] * (x.ndim - 2)))
+
+            mb = jax.tree.map(_to_microbatches, batch)
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def acc(carry, m):
+                g_acc, l_acc = carry
+                l, g = jax.value_and_grad(loss_mb)(params, m)
+                g = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g, l_acc + l), None
+
+            (grads, loss), _ = jax.lax.scan(
+                acc, (zeros, jnp.zeros((), jnp.float32)), mb
+            )
+            grads = jax.tree.map(lambda g: g / A, grads)
+            loss = loss / A
+
+        new_params, new_opt, metrics = adamw.update(grads, opt_state, params, opt_cfg)
+        metrics["loss"] = loss
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig):
+    def prefill_step(params, batch):
+        return M.prefill(params, batch, cfg)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig):
+    def serve_step(params, state, tokens):
+        return M.decode_step(params, state, tokens, cfg)
+
+    return serve_step
+
+
+# --------------------------------------------------------------------------- #
+# jitted + sharded assembly (used by dryrun / train / serve entrypoints)
+# --------------------------------------------------------------------------- #
+
+
+def build_train(mesh: Mesh, cfg: ArchConfig, shape: ShapeConfig,
+                opt_cfg: Optional[adamw.AdamWConfig] = None, fsdp: bool = True):
+    """Returns (jitted step, arg ShapeDtypeStructs) for lowering/running."""
+    opt_cfg = opt_cfg or adamw.AdamWConfig()
+    shapes, specs, p_sh = param_shardings(mesh, cfg, fsdp=fsdp)
+    opt_shapes = jax.eval_shape(functools.partial(adamw.init, cfg=opt_cfg), shapes)
+    opt_sh = adamw.AdamWState(
+        NamedSharding(mesh, P()),
+        jax.tree.map(lambda s, x: s, p_sh, opt_shapes.m),
+        jax.tree.map(lambda s, x: s, p_sh, opt_shapes.v),
+        None,
+    )
+    b_sh = batch_shardings(mesh, cfg, shape)
+    b_specs = batch_specs(cfg, shape)
+    step = make_train_step(cfg, opt_cfg)
+    jitted = jax.jit(
+        step,
+        in_shardings=(p_sh, opt_sh, b_sh),
+        out_shardings=(p_sh, opt_sh, None),
+        donate_argnums=(0, 1),
+    )
+    return jitted, (shapes, opt_shapes, b_specs)
+
+
+def build_prefill(mesh: Mesh, cfg: ArchConfig, shape: ShapeConfig, fsdp: bool = False):
+    shapes, specs, p_sh = param_shardings(mesh, cfg, fsdp=fsdp)
+    sshapes = serve_param_shapes(shapes)
+    b_sh = batch_shardings(mesh, cfg, shape)
+    b_specs = batch_specs(cfg, shape)
+    if "labels" in b_specs:
+        del b_specs["labels"], b_sh["labels"]
+    step = make_prefill_step(cfg)
+    jitted = jax.jit(step, in_shardings=(p_sh, b_sh), out_shardings=None)
+    return jitted, (sshapes, b_specs)
+
+
+def build_decode(mesh: Mesh, cfg: ArchConfig, shape: ShapeConfig, fsdp: bool = False):
+    shapes, specs, p_sh = param_shardings(mesh, cfg, fsdp=fsdp)
+    sshapes = serve_param_shapes(shapes)
+    state_shapes = decode_state_specs(cfg, shape)
+    state_sh = decode_state_shardings(mesh, cfg, shape, state_shapes)
+    tok = SDS((shape.global_batch, 1), jnp.int32)
+    tok_sh = NamedSharding(mesh, spec_for(mesh, tok.shape, ("batch", None)))
+    step = make_decode_step(cfg)
+    jitted = jax.jit(
+        step,
+        in_shardings=(p_sh, state_sh, tok_sh),
+        out_shardings=(None, state_sh),
+        donate_argnums=(1,),
+    )
+    return jitted, (sshapes, state_shapes, tok)

@@ -1,0 +1,2 @@
+from . import config, layers, model, ssm
+from .config import ArchConfig, SHAPES, ShapeConfig

@@ -1,0 +1,414 @@
+"""Pure-JAX transformer layers: RMSNorm, (partial) RoPE, GQA attention with
+optional sliding window and KV cache, SwiGLU FFN, grouped top-k MoE.
+
+All functions are functional: ``init_*`` returns ``(params, specs)`` where
+``specs`` mirrors the param tree with per-dim logical axis names (consumed by
+``repro.distrib.sharding.tree_sharding``).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..distrib.sharding import shard
+from .config import ArchConfig
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def dense_init(key, shape, scale_dim: int):
+    return (jax.random.normal(key, shape, dtype=jnp.float32) / math.sqrt(scale_dim))
+
+
+# --------------------------------------------------------------------------- #
+# norm / rope
+# --------------------------------------------------------------------------- #
+
+
+def rmsnorm(x, w, eps: float):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+def rope_freqs(cfg: ArchConfig, positions):
+    """positions: [...] int32 -> (cos, sin) of shape [..., rot/2]."""
+    rot = int(cfg.hd * cfg.rope_fraction)
+    rot -= rot % 2
+    inv = 1.0 / (cfg.rope_theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin, cfg: ArchConfig):
+    """x: [B, S, H, D]; cos/sin: [B, S, rot/2] (broadcast over heads)."""
+    rot = int(cfg.hd * cfg.rope_fraction)
+    rot -= rot % 2
+    if rot == 0:
+        return x
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    c = cos[:, :, None, :]
+    s = sin[:, :, None, :]
+    y1 = x1 * c - x2 * s
+    y2 = x1 * s + x2 * c
+    yr = jnp.stack([y1, y2], axis=-1).reshape(xr.shape).astype(x.dtype)
+    return jnp.concatenate([yr, xp], axis=-1)
+
+
+# --------------------------------------------------------------------------- #
+# attention
+# --------------------------------------------------------------------------- #
+
+
+def init_attention(key, cfg: ArchConfig):
+    hd = cfg.hd
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    params = {
+        "wq": dense_init(k1, (cfg.d_model, cfg.n_heads, hd), cfg.d_model),
+        "wk": dense_init(k2, (cfg.d_model, cfg.n_kv_heads, hd), cfg.d_model),
+        "wv": dense_init(k3, (cfg.d_model, cfg.n_kv_heads, hd), cfg.d_model),
+        "wo": dense_init(k4, (cfg.n_heads, hd, cfg.d_model), cfg.n_heads * hd),
+    }
+    specs = {
+        "wq": ("embed", "heads", None),
+        "wk": ("embed", "kv_heads", None),
+        "wv": ("embed", "kv_heads", None),
+        "wo": ("heads", None, "embed"),
+    }
+    if cfg.qkv_bias:
+        params["bq"] = jnp.zeros((cfg.n_heads, hd), jnp.float32)
+        params["bk"] = jnp.zeros((cfg.n_kv_heads, hd), jnp.float32)
+        params["bv"] = jnp.zeros((cfg.n_kv_heads, hd), jnp.float32)
+        specs["bq"] = ("heads", None)
+        specs["bk"] = ("kv_heads", None)
+        specs["bv"] = ("kv_heads", None)
+    return params, specs
+
+
+def _qkv(p, x, cfg: ArchConfig, positions):
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    cos, sin = rope_freqs(cfg, positions)
+    q = apply_rope(q, cos, sin, cfg)
+    k = apply_rope(k, cos, sin, cfg)
+    return q, k, v
+
+
+def _expand_kv(k, n_rep: int):
+    if n_rep == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, h, n_rep, d)).reshape(b, s, h * n_rep, d)
+
+
+ATTN_CHUNK_THRESHOLD = 2048
+Q_CHUNK = 512
+
+
+def attention(p, x, cfg: ArchConfig, *, causal: bool = True,
+              positions=None, kv_mask=None):
+    """Full (or sliding-window) self-attention over x: [B,S,D].
+
+    Sequences longer than ``ATTN_CHUNK_THRESHOLD`` use a query-chunked
+    streaming path (never materializes the S x S logits; SWA additionally
+    slices only the in-window K range) — the XLA-level counterpart of the
+    Pallas flash kernel in ``kernels/flash_attn``."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    q, k, v = _qkv(p, x, cfg, positions)
+    # "seq_q": None by default; hillclimb rule -> "model" shards attention
+    # over query positions when head counts don't divide the model axis (the
+    # qwen2-14-heads case) so scores/probs aren't replicated 16x
+    from ..distrib.sharding import current_rules
+
+    seq_name = "seq_q" if current_rules().get("seq_q") else "seq"
+    q = shard(q, "batch", seq_name, "heads", None)
+    k = shard(k, "batch", "seq", "kv_heads", None)
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    k, v = _expand_kv(k, n_rep), _expand_kv(v, n_rep)
+    if S > ATTN_CHUNK_THRESHOLD and S % Q_CHUNK == 0:
+        if cfg.scan_unroll:
+            # analysis lowering: Python loop so every chunk is cost-counted
+            out = _attention_chunked(q, k, v, positions, cfg, causal=causal)
+        else:
+            # production lowering: lax.scan serializes chunk temporaries
+            out = _attention_chunked_scan(q, k, v, positions, cfg, causal=causal)
+    else:
+        scale = 1.0 / math.sqrt(cfg.hd)
+        logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+        idx_q = positions[:, None, :, None]
+        idx_k = positions[:, None, None, :]
+        mask = jnp.ones((B, 1, S, S), dtype=bool)
+        if causal:
+            mask &= idx_k <= idx_q
+        if cfg.sliding_window is not None:
+            mask &= idx_k > idx_q - cfg.sliding_window
+        if kv_mask is not None:
+            mask &= kv_mask[:, None, None, :]
+        logits = jnp.where(mask, logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+        out = jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+    return jnp.einsum("bqhd,hdo->bqo", out, p["wo"].astype(x.dtype))
+
+
+def _attention_chunked(q, k, v, positions, cfg: ArchConfig, causal: bool = True):
+    """Streaming attention over query chunks (causal or bidirectional).
+    Per-chunk temp is [B, H, Q_CHUNK, K_range] instead of [B, H, S, S]; for
+    sliding-window models only the in-window K slice is read; for causal
+    attention K beyond the chunk's frontier is skipped entirely.
+
+    The chunk loop is a *Python* loop (not lax.scan) on purpose: chunk bodies
+    remat individually, causal/SWA K-ranges resolve statically, and — key for
+    the dry-run roofline — XLA's ``cost_analysis`` counts every chunk (scan
+    bodies are only counted once)."""
+    B, S, H, D = q.shape
+    scale = 1.0 / math.sqrt(cfg.hd)
+    W = cfg.sliding_window
+    n_chunks = S // Q_CHUNK
+
+    @jax.checkpoint
+    def chunk_body(q_c, k_c, v_c, qpos, kpos):
+        logits = jnp.einsum("bqhd,bkhd->bhqk", q_c, k_c).astype(jnp.float32) * scale
+        m = jnp.ones((B, 1, q_c.shape[1], k_c.shape[1]), bool)
+        if causal:
+            m &= kpos[:, None, None, :] <= qpos[:, None, :, None]
+        if W is not None:
+            m &= kpos[:, None, None, :] > qpos[:, None, :, None] - W
+        logits = jnp.where(m, logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+        return jnp.einsum("bhqk,bkhd->bqhd", probs, v_c)
+
+    outs = []
+    for i in range(n_chunks):
+        start = i * Q_CHUNK
+        q_c = jax.lax.slice_in_dim(q, start, start + Q_CHUNK, axis=1)
+        qpos = jax.lax.slice_in_dim(positions, start, start + Q_CHUNK, axis=1)
+        if not causal:
+            k_start, k_end = 0, S
+        elif W is not None:
+            k_start, k_end = max(start - W, 0), start + Q_CHUNK
+        else:
+            k_start, k_end = 0, start + Q_CHUNK
+        k_c = jax.lax.slice_in_dim(k, k_start, k_end, axis=1)
+        v_c = jax.lax.slice_in_dim(v, k_start, k_end, axis=1)
+        kpos = jax.lax.slice_in_dim(positions, k_start, k_end, axis=1)
+        outs.append(chunk_body(q_c, k_c, v_c, qpos, kpos))
+    return jnp.concatenate(outs, axis=1)
+
+
+def _attention_chunked_scan(q, k, v, positions, cfg: ArchConfig, causal: bool = True):
+    """lax.scan variant of the chunked path: one chunk's temporaries live at
+    a time (the Python-loop variant lets the scheduler keep many chunks live).
+    Sliding-window models read a uniform (window + Q_CHUNK) K slice; other
+    cases read full K per chunk with masking."""
+    B, S, H, D = q.shape
+    scale = 1.0 / math.sqrt(cfg.hd)
+    W = cfg.sliding_window
+    n_chunks = S // Q_CHUNK
+
+    @jax.checkpoint
+    def chunk(carry, i):
+        start = i * Q_CHUNK
+        q_c = jax.lax.dynamic_slice_in_dim(q, start, Q_CHUNK, axis=1)
+        qpos = jax.lax.dynamic_slice_in_dim(positions, start, Q_CHUNK, axis=1)
+        if W is not None and W + Q_CHUNK < S and causal:
+            k_len = W + Q_CHUNK
+            k_start = jnp.clip(start - W, 0, S - k_len)
+        else:
+            k_len = S
+            k_start = 0
+        k_c = jax.lax.dynamic_slice_in_dim(k, k_start, k_len, axis=1)
+        v_c = jax.lax.dynamic_slice_in_dim(v, k_start, k_len, axis=1)
+        kpos = jax.lax.dynamic_slice_in_dim(positions, k_start, k_len, axis=1)
+        logits = jnp.einsum("bqhd,bkhd->bhqk", q_c, k_c).astype(jnp.float32) * scale
+        m = jnp.ones((B, 1, Q_CHUNK, k_len), bool)
+        if causal:
+            m &= kpos[:, None, None, :] <= qpos[:, None, :, None]
+        if W is not None:
+            m &= kpos[:, None, None, :] > qpos[:, None, :, None] - W
+        logits = jnp.where(m, logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+        o_c = jnp.einsum("bhqk,bkhd->bqhd", probs, v_c)
+        return carry, o_c
+
+    _, outs = jax.lax.scan(chunk, (), jnp.arange(n_chunks))
+    return jnp.moveaxis(outs, 0, 1).reshape(B, S, H, D)
+
+
+def cross_attention(p, x, kv_src, cfg: ArchConfig):
+    """Encoder-decoder cross attention (no RoPE on keys from encoder).
+    Long query sequences stream through the chunked path."""
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", kv_src, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", kv_src, p["wv"].astype(dt))
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    k, v = _expand_kv(k, n_rep), _expand_kv(v, n_rep)
+    B, S, H, D = q.shape
+    if S > ATTN_CHUNK_THRESHOLD and S % Q_CHUNK == 0:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        return jnp.einsum(
+            "bqhd,hdo->bqo",
+            _attention_chunked(q, k, v, positions, cfg, causal=False),
+            p["wo"].astype(dt),
+        )
+    scale = 1.0 / math.sqrt(cfg.hd)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    probs = jax.nn.softmax(logits, axis=-1).astype(dt)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+    return jnp.einsum("bqhd,hdo->bqo", out, p["wo"].astype(dt))
+
+
+def attention_decode(p, x, cache_k, cache_v, kv_pos, write_slot, q_pos, cfg: ArchConfig):
+    """One-token decode with a (possibly ring-buffered) KV cache.
+
+    x: [B,1,D]; cache_k/v: [B, S_cache, Hkv, D]; kv_pos: [S_cache] int32 —
+    the absolute position held by each cache slot *after* this write (-1 =
+    empty); write_slot: scalar slot index; q_pos: scalar absolute position of
+    the new token.  Returns (out, new_k, new_v)."""
+    B = x.shape[0]
+    pos = jnp.broadcast_to(jnp.asarray(q_pos, jnp.int32)[None, None], (B, 1))
+    q, k, v = _qkv(p, x, cfg, pos)
+    new_k = jax.lax.dynamic_update_slice_in_dim(
+        cache_k, k.astype(cache_k.dtype), write_slot, axis=1
+    )
+    new_v = jax.lax.dynamic_update_slice_in_dim(
+        cache_v, v.astype(cache_v.dtype), write_slot, axis=1
+    )
+    # grouped-GQA attention: keep KV at n_kv_heads and fold the query-head
+    # groups into the einsum — the cache is read once, never materialized
+    # expanded (n_heads/n_kv_heads x less HBM traffic on the decode hot path)
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    B = q.shape[0]
+    qg = q.reshape(B, 1, cfg.n_kv_heads, n_rep, cfg.hd)
+    scale = 1.0 / math.sqrt(cfg.hd)
+    logits = jnp.einsum("bqhrd,bkhd->bhrqk", qg, new_k.astype(q.dtype)).astype(
+        jnp.float32
+    ) * scale
+    kp = kv_pos[None, None, None, None, :]
+    mask = (kp >= 0) & (kp <= q_pos)
+    if cfg.sliding_window is not None:
+        mask &= kp > q_pos - cfg.sliding_window
+    logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhrqk,bkhd->bqhrd", probs, new_v.astype(x.dtype))
+    out = out.reshape(B, 1, cfg.n_heads, cfg.hd)
+    out = jnp.einsum("bqhd,hdo->bqo", out, p["wo"].astype(x.dtype))
+    return out, new_k, new_v
+
+
+# --------------------------------------------------------------------------- #
+# FFN
+# --------------------------------------------------------------------------- #
+
+
+def init_swiglu(key, cfg: ArchConfig, d_ff: Optional[int] = None):
+    d_ff = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    params = {
+        "w_gate": dense_init(k1, (cfg.d_model, d_ff), cfg.d_model),
+        "w_up": dense_init(k2, (cfg.d_model, d_ff), cfg.d_model),
+        "w_down": dense_init(k3, (d_ff, cfg.d_model), d_ff),
+    }
+    specs = {
+        "w_gate": ("embed", "mlp"),
+        "w_up": ("embed", "mlp"),
+        "w_down": ("mlp", "embed"),
+    }
+    return params, specs
+
+
+def swiglu(p, x):
+    dt = x.dtype
+    g = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(dt))
+    u = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(dt))
+    h = jax.nn.silu(g) * u
+    h = shard(h, "batch", "seq", "mlp")
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(dt))
+
+
+# --------------------------------------------------------------------------- #
+# MoE (token-choice top-k with GShard-style grouped dispatch)
+# --------------------------------------------------------------------------- #
+
+
+def init_moe(key, cfg: ArchConfig):
+    m = cfg.moe
+    k0, k1, k2, k3 = jax.random.split(key, 4)
+    params = {
+        "router": dense_init(k0, (cfg.d_model, m.num_experts), cfg.d_model),
+        "w_gate": dense_init(k1, (m.num_experts, cfg.d_model, cfg.d_ff), cfg.d_model),
+        "w_up": dense_init(k2, (m.num_experts, cfg.d_model, cfg.d_ff), cfg.d_model),
+        "w_down": dense_init(k3, (m.num_experts, cfg.d_ff, cfg.d_model), cfg.d_ff),
+    }
+    specs = {
+        "router": ("embed", None),
+        "w_gate": ("experts", "embed", "mlp"),
+        "w_up": ("experts", "embed", "mlp"),
+        "w_down": ("experts", "mlp", "embed"),
+    }
+    return params, specs
+
+
+def moe_ffn(p, x, cfg: ArchConfig):
+    """x: [B,S,D] -> top-k expert mixture.  Tokens are processed in groups of
+    ``group_size`` with per-group expert capacity (GShard); overflow drops.
+    Expert dim shards per rules: 'experts'->None = pure TP on d_ff;
+    'experts'->'model' = expert parallelism (all-to-all inserted by SPMD)."""
+    m = cfg.moe
+    B, S, D = x.shape
+    T = B * S
+    G = max(T // m.group_size, 1)
+    xt = x.reshape(G, T // G, D)
+    Tg = xt.shape[1]
+    cap = max(int(math.ceil(m.top_k * Tg / m.num_experts * m.capacity_factor)), 4)
+
+    logits = jnp.einsum("gtd,de->gte", xt, p["router"].astype(x.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, top_e = jax.lax.top_k(probs, m.top_k)  # [G,Tg,K]
+    gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # position of each (token, k) within its expert's capacity buffer
+    onehot_i = jax.nn.one_hot(top_e, m.num_experts, dtype=jnp.int32)  # [G,Tg,K,E]
+    flat = onehot_i.reshape(G, Tg * m.top_k, m.num_experts)
+    pos_in_e = jnp.cumsum(flat, axis=1) - flat  # [G,TK,E]
+    pos = (pos_in_e * flat).sum(-1).reshape(G, Tg, m.top_k)  # [G,Tg,K]
+    keep = (pos < cap) & (gate_vals > 0)
+
+    dt = x.dtype
+    # factorized GShard dispatch: the largest intermediate is [G,Tg,E,C]
+    # (K pre-summed), never [G,Tg,K,E,C]
+    onehot_e = jnp.where(keep[..., None], onehot_i, 0).astype(dt)  # [G,Tg,K,E]
+    onehot_c = jax.nn.one_hot(
+        jnp.where(keep, pos, cap), cap + 1, dtype=dt
+    )[..., :cap]  # [G,Tg,K,C]
+    disp = jnp.einsum("gtke,gtkc->gtec", onehot_e, onehot_c)  # [G,Tg,E,C]
+    expert_in = jnp.einsum("gtec,gtd->gecd", disp, xt)
+    # G (token groups) stays sharded over the DP axes — a None constraint
+    # here replicates a tokens x capacity buffer on every device
+    expert_in = shard(expert_in, "batch", "experts", None, "embed")
+
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", expert_in, p["w_gate"].astype(dt)))
+    h = h * jnp.einsum("gecd,edf->gecf", expert_in, p["w_up"].astype(dt))
+    h = shard(h, "batch", "experts", None, "mlp")
+    out_e = jnp.einsum("gecf,efd->gecd", h, p["w_down"].astype(dt))
+
+    gated_e = onehot_e * jnp.where(keep, gate_vals, 0.0).astype(dt)[..., None]
+    combine = jnp.einsum("gtke,gtkc->gtec", gated_e, onehot_c)  # [G,Tg,E,C]
+    out = jnp.einsum("gtec,gecd->gtd", combine, out_e)
+    return out.reshape(B, S, D)

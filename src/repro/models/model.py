@@ -1,0 +1,381 @@
+"""Model assembly: init / train-loss / prefill / decode for every family
+(dense, MoE, hybrid attn+SSM, xLSTM, enc-dec, VLM-stub).
+
+Layers are stacked on a leading ``L`` dim and iterated with ``lax.scan``
+(compact HLO — essential for 88-layer dry-run compiles); xLSTM's
+heterogeneous 12-block stack uses a Python loop instead.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distrib.sharding import shard
+from . import layers as L
+from . import ssm as S
+from .config import ArchConfig
+
+
+def _dt(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# --------------------------------------------------------------------------- #
+# init
+# --------------------------------------------------------------------------- #
+
+
+def _init_block(key, cfg: ArchConfig):
+    """One decoder block's (params, specs)."""
+    ks = jax.random.split(key, 6)
+    params: Dict[str, Any] = {"norm1": jnp.ones((cfg.d_model,), jnp.float32)}
+    specs: Dict[str, Any] = {"norm1": ("embed",)}
+    if cfg.xlstm:
+        raise AssertionError("xlstm uses _init_xlstm")
+    params["attn"], specs["attn"] = L.init_attention(ks[0], cfg)
+    if cfg.parallel_ssm:
+        params["ssm"], specs["ssm"] = S.init_mamba(ks[1], cfg)
+    if cfg.d_ff > 0:
+        params["norm2"] = jnp.ones((cfg.d_model,), jnp.float32)
+        specs["norm2"] = ("embed",)
+        if cfg.moe is not None:
+            params["ffn"], specs["ffn"] = L.init_moe(ks[2], cfg)
+        else:
+            params["ffn"], specs["ffn"] = L.init_swiglu(ks[2], cfg)
+    return params, specs
+
+
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _is_spec_leaf(x):
+    return isinstance(x, tuple) and all(e is None or isinstance(e, (str, tuple)) for e in x)
+
+
+def add_layer_dim(specs):
+    """Prepend a (replicated) layer dim to every logical-axis spec tuple —
+    used for lax.scan-stacked parameter trees."""
+    def walk(t):
+        if _is_spec_leaf(t):
+            return (None,) + t
+        if isinstance(t, dict):
+            return {k: walk(v) for k, v in t.items()}
+        if isinstance(t, list):
+            return [walk(v) for v in t]
+        return t
+
+    return walk(specs)
+
+
+def init(cfg: ArchConfig, key) -> Tuple[Dict, Dict]:
+    """Returns (params, specs).  Weights stored f32 at init; cast in fwd
+    (master-weight layout; the optimizer keeps f32, steps cast to bf16)."""
+    keys = jax.random.split(key, cfg.n_layers + 4)
+    V = cfg.padded_vocab
+    params: Dict[str, Any] = {
+        "embed": L.dense_init(keys[-1], (V, cfg.d_model), cfg.d_model),
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "lm_head": L.dense_init(keys[-2], (cfg.d_model, V), cfg.d_model),
+    }
+    specs: Dict[str, Any] = {
+        "embed": ("vocab", "embed"),
+        "final_norm": ("embed",),
+        "lm_head": ("embed", "vocab"),
+    }
+    if cfg.xlstm:
+        blocks, bspecs = [], []
+        for i in range(cfg.n_layers):
+            if (i % cfg.slstm_every) == cfg.slstm_every - 1:
+                p, s = S.init_slstm(keys[i], cfg)
+                p = {"kind_slstm": p, "norm1": jnp.ones((cfg.d_model,), jnp.float32)}
+                s = {"kind_slstm": s, "norm1": ("embed",)}
+            else:
+                p, s = S.init_mlstm(keys[i], cfg)
+                p = {"kind_mlstm": p, "norm1": jnp.ones((cfg.d_model,), jnp.float32)}
+                s = {"kind_mlstm": s, "norm1": ("embed",)}
+            blocks.append(p)
+            bspecs.append(s)
+        params["blocks"] = blocks
+        specs["blocks"] = bspecs
+    elif cfg.encdec:
+        enc, encs = [], []
+        dec, decs = [], []
+        for i in range(cfg.n_layers):
+            p, s = _init_block(keys[i], cfg)
+            enc.append(p), encs.append(s)
+        for i in range(cfg.n_layers):
+            p, s = _init_block(jax.random.fold_in(keys[i], 7), cfg)
+            c, cs = L.init_attention(jax.random.fold_in(keys[i], 9), cfg)
+            p = dict(p)
+            p["cross"], p["norm_cross"] = c, jnp.ones((cfg.d_model,), jnp.float32)
+            s = dict(s)
+            s["cross"], s["norm_cross"] = cs, ("embed",)
+            dec.append(p), decs.append(s)
+        params["encoder"], specs["encoder"] = _stack(enc), add_layer_dim(encs[0])
+        params["decoder"], specs["decoder"] = _stack(dec), add_layer_dim(decs[0])
+    else:
+        blocks, bspecs = [], []
+        for i in range(cfg.n_layers):
+            p, s = _init_block(keys[i], cfg)
+            blocks.append(p), bspecs.append(s)
+        params["layers"] = _stack(blocks)
+        specs["layers"] = add_layer_dim(bspecs[0])
+    return params, specs
+
+
+# --------------------------------------------------------------------------- #
+# forward blocks
+# --------------------------------------------------------------------------- #
+
+
+def _block_fwd(p, x, cfg: ArchConfig, causal: bool = True):
+    h = L.rmsnorm(x, p["norm1"].astype(x.dtype), cfg.norm_eps)
+    att = L.attention(p["attn"], h, cfg, causal=causal)
+    if cfg.parallel_ssm:
+        ssm_out = S.mamba_forward(p["ssm"], h, cfg)
+        att = 0.5 * (att + ssm_out)  # hymba: parallel heads, mean-fused
+    x = x + att
+    if cfg.d_ff > 0:
+        h2 = L.rmsnorm(x, p["norm2"].astype(x.dtype), cfg.norm_eps)
+        ffn = L.moe_ffn(p["ffn"], h2, cfg) if cfg.moe is not None else L.swiglu(p["ffn"], h2)
+        x = x + ffn
+    return x
+
+
+def _xlstm_block_fwd(p, x, cfg: ArchConfig):
+    h = L.rmsnorm(x, p["norm1"].astype(x.dtype), cfg.norm_eps)
+    if "kind_slstm" in p:
+        return x + S.slstm_forward(p["kind_slstm"], h, cfg)
+    return x + S.mlstm_forward(p["kind_mlstm"], h, cfg)
+
+
+def _run_stack(stacked, x, cfg: ArchConfig, causal: bool = True):
+    """lax.scan over stacked layer params."""
+    body = partial(_block_fwd, cfg=cfg, causal=causal)
+    if cfg.remat:
+        body = jax.checkpoint(body)
+
+    def step(h, layer_p):
+        h = body(layer_p, h)
+        return shard(h, "batch", "seq_act", "embed"), None
+
+    x = shard(x, "batch", "seq_act", "embed")
+    x, _ = jax.lax.scan(step, x, stacked, unroll=cfg.n_layers if cfg.scan_unroll else 1)
+    return x
+
+
+def _embed(params, tokens, cfg: ArchConfig):
+    e = params["embed"].astype(_dt(cfg))
+    x = e[tokens]
+    return shard(x, "batch", "seq", "embed")
+
+
+def _inputs_to_hidden(params, batch: Dict, cfg: ArchConfig):
+    """Map (modality-stubbed) inputs to the initial hidden sequence."""
+    if cfg.frontend == "vision":
+        x_t = _embed(params, batch["tokens"], cfg)
+        patches = batch["patches"].astype(_dt(cfg))
+        return jnp.concatenate([patches, x_t], axis=1)
+    return _embed(params, batch["tokens"], cfg)
+
+
+def _logits(params, x, cfg: ArchConfig):
+    x = L.rmsnorm(x, params["final_norm"].astype(x.dtype), cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(x.dtype))
+    logits = shard(logits, "batch", "seq", "vocab")
+    if cfg.padded_vocab != cfg.vocab:  # mask the padded tail
+        pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab
+        logits = jnp.where(pad_mask[None, None, :], -1e30, logits)
+    return logits
+
+
+def _xent(logits, labels, mask=None):
+    """Stable CE in f32; mean over valid positions."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        nll = nll * mask
+        return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()
+
+
+# --------------------------------------------------------------------------- #
+# public API: loss / prefill / decode
+# --------------------------------------------------------------------------- #
+
+
+def loss_fn(params, batch: Dict, cfg: ArchConfig):
+    """Next-token LM loss.  batch: tokens [B,S] (+ patches/frames for stubs),
+    labels [B,S_text]."""
+    if cfg.encdec:
+        enc_x = batch["frames"].astype(_dt(cfg))
+        enc_x = shard(enc_x, "batch", "seq", "embed")
+        enc_out = _run_stack(params["encoder"], enc_x, cfg, causal=False)
+        dec_x = _embed(params, batch["tokens"], cfg)
+        x = _run_decdec(params["decoder"], dec_x, enc_out, cfg)
+        logits = _logits(params, x, cfg)
+        return _xent(logits[:, :-1], batch["tokens"][:, 1:])
+    x = _inputs_to_hidden(params, batch, cfg)
+    if cfg.xlstm:
+        for p in params["blocks"]:
+            blk = partial(_xlstm_block_fwd, cfg=cfg)
+            if cfg.remat:
+                blk = jax.checkpoint(blk)
+            x = blk(p, x)
+    else:
+        x = _run_stack(params["layers"], x, cfg)
+    logits = _logits(params, x, cfg)
+    labels = batch["labels"]
+    if cfg.frontend == "vision":
+        # loss only over text positions (after the patch prefix)
+        logits = logits[:, cfg.n_patches :, :]
+    return _xent(logits[:, :-1], labels[:, 1:])
+
+
+def _run_decdec(stacked, x, enc_out, cfg: ArchConfig):
+    def body(p, h):
+        h1 = L.rmsnorm(h, p["norm1"].astype(h.dtype), cfg.norm_eps)
+        h = h + L.attention(p["attn"], h1, cfg, causal=True)
+        hc = L.rmsnorm(h, p["norm_cross"].astype(h.dtype), cfg.norm_eps)
+        h = h + L.cross_attention(p["cross"], hc, enc_out, cfg)
+        if cfg.d_ff > 0:
+            h2 = L.rmsnorm(h, p["norm2"].astype(h.dtype), cfg.norm_eps)
+            h = h + L.swiglu(p["ffn"], h2)
+        return h
+
+    b = jax.checkpoint(body) if cfg.remat else body
+
+    def step(h, layer_p):
+        h = b(layer_p, h)
+        return shard(h, "batch", "seq_act", "embed"), None
+
+    x = shard(x, "batch", "seq_act", "embed")
+    x, _ = jax.lax.scan(step, x, stacked, unroll=cfg.n_layers if cfg.scan_unroll else 1)
+    return x
+
+
+def prefill(params, batch: Dict, cfg: ArchConfig):
+    """Forward over a long prompt, returning last-position logits."""
+    if cfg.encdec:
+        enc_x = batch["frames"].astype(_dt(cfg))
+        enc_out = _run_stack(params["encoder"], enc_x, cfg, causal=False)
+        dec_x = _embed(params, batch["tokens"], cfg)
+        x = _run_decdec(params["decoder"], dec_x, enc_out, cfg)
+    else:
+        x = _inputs_to_hidden(params, batch, cfg)
+        if cfg.xlstm:
+            for p in params["blocks"]:
+                x = _xlstm_block_fwd(p, x, cfg)
+        else:
+            x = _run_stack(params["layers"], x, cfg)
+    return _logits(params, x[:, -1:, :], cfg)
+
+
+# ---- decode ---------------------------------------------------------------- #
+
+
+def cache_size(cfg: ArchConfig, seq_len: int) -> int:
+    if cfg.sliding_window is not None:
+        return min(cfg.sliding_window, seq_len)
+    return seq_len
+
+
+def init_decode_state(cfg: ArchConfig, batch: int, seq_len: int) -> Dict:
+    """Allocate the decode cache pytree (zeros; dry-run uses ShapeDtypeStruct
+    stand-ins of the same structure)."""
+    Sc = cache_size(cfg, seq_len)
+    dt = _dt(cfg)
+    state: Dict[str, Any] = {"pos": jnp.zeros((), jnp.int32),
+                             "kv_pos": jnp.full((Sc,), -1, jnp.int32)}
+    hd = cfg.hd
+    if cfg.xlstm:
+        st = []
+        d_in = 2 * cfg.d_model
+        dh = d_in // cfg.n_heads
+        for i in range(cfg.n_layers):
+            if (i % cfg.slstm_every) == cfg.slstm_every - 1:
+                z = jnp.zeros((batch, cfg.d_model), jnp.float32)
+                st.append((z, jnp.ones_like(z), jnp.full_like(z, -1e30), z))
+            else:
+                st.append(
+                    (
+                        jnp.zeros((batch, cfg.n_heads, dh, dh), jnp.float32),
+                        jnp.zeros((batch, cfg.n_heads, dh), jnp.float32),
+                        jnp.full((batch, cfg.n_heads), -1e30, jnp.float32),
+                    )
+                )
+        state["blocks"] = st
+        return state
+    kshape = (cfg.n_layers, batch, Sc, cfg.n_kv_heads, hd)
+    state["cache_k"] = jnp.zeros(kshape, dt)
+    state["cache_v"] = jnp.zeros(kshape, dt)
+    if cfg.parallel_ssm:
+        d_in = cfg.ssm.expand * cfg.d_model
+        state["ssm"] = jnp.zeros((cfg.n_layers, batch, d_in, cfg.ssm.state_dim), jnp.float32)
+    if cfg.encdec:
+        state["enc_out"] = jnp.zeros((batch, seq_len, cfg.d_model), dt)
+    return state
+
+
+def decode_step(params, state: Dict, tokens, cfg: ArchConfig):
+    """One decode step for the whole batch.  tokens: [B, 1] int32."""
+    x = _embed(params, tokens, cfg)
+    pos = state["pos"]
+    Sc = state["kv_pos"].shape[0] if "kv_pos" in state else 0
+
+    if cfg.xlstm:
+        new_blocks = []
+        for p, st in zip(params["blocks"], state["blocks"]):
+            h = L.rmsnorm(x, p["norm1"].astype(x.dtype), cfg.norm_eps)
+            if "kind_slstm" in p:
+                y, st2 = S.slstm_decode(p["kind_slstm"], h, st, cfg)
+            else:
+                y, st2 = S.mlstm_decode(p["kind_mlstm"], h, st, cfg)
+            x = x + y
+            new_blocks.append(st2)
+        out = {**state, "pos": pos + 1, "blocks": new_blocks}
+        return _logits(params, x, cfg), out
+
+    write_slot = jax.lax.rem(pos, jnp.int32(Sc))
+    kv_pos = jax.lax.dynamic_update_index_in_dim(state["kv_pos"], pos, write_slot, axis=0)
+
+    # Python loop over layers: the KV cache flows *linearly* through
+    # functional dynamic-update-slices, which XLA aliases in place with the
+    # donated state buffer.  (Threading the cache through lax.scan as xs/ys
+    # forces a full extra cache copy per step — 2x cache HBM.)
+    stacked = params["decoder"] if cfg.encdec else params["layers"]
+    cache_k, cache_v = state["cache_k"], state["cache_v"]
+    ssm_state = state.get("ssm")
+    for i in range(cfg.n_layers):
+        lp = jax.tree.map(lambda a: a[i], stacked)
+        hn = L.rmsnorm(x, lp["norm1"].astype(x.dtype), cfg.norm_eps)
+        att, nk, nv = L.attention_decode(
+            lp["attn"], hn, cache_k[i], cache_v[i], kv_pos, write_slot, pos, cfg
+        )
+        cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, nk[None], i, axis=0)
+        cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, nv[None], i, axis=0)
+        if cfg.parallel_ssm:
+            y, st2 = S.mamba_decode(lp["ssm"], hn, ssm_state[i], cfg)
+            att = 0.5 * (att + y)
+            ssm_state = jax.lax.dynamic_update_slice_in_dim(ssm_state, st2[None], i, axis=0)
+        x = x + att
+        if cfg.encdec:
+            hc = L.rmsnorm(x, lp["norm_cross"].astype(x.dtype), cfg.norm_eps)
+            x = x + L.cross_attention(lp["cross"], hc, state["enc_out"], cfg)
+        if cfg.d_ff > 0:
+            h2 = L.rmsnorm(x, lp["norm2"].astype(x.dtype), cfg.norm_eps)
+            ffn = L.moe_ffn(lp["ffn"], h2, cfg) if cfg.moe is not None else L.swiglu(lp["ffn"], h2)
+            x = x + ffn
+    new_state = {**state, "pos": pos + 1, "kv_pos": kv_pos,
+                 "cache_k": cache_k, "cache_v": cache_v}
+    if cfg.parallel_ssm:
+        new_state["ssm"] = ssm_state
+    return _logits(params, x, cfg), new_state

@@ -1,0 +1,303 @@
+"""State-space / recurrent blocks: Mamba-style selective SSM (hymba's parallel
+SSM heads), and xLSTM's mLSTM / sLSTM blocks.
+
+Training uses `lax.scan` over the sequence (compact HLO, exact); on real TPUs
+the production path is a chunkwise-parallel kernel — see DESIGN.md §7 and the
+perf log.  Decode is O(1) per token: the carry (SSM state / matrix memory) is
+the only state, which is what makes `long_500k` feasible for these families.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .layers import dense_init, rmsnorm
+
+SEQ_CHUNK = 256
+
+
+def chunked_scan(step, carry0, xs, chunk: int = SEQ_CHUNK):
+    """lax.scan over sequence chunks with per-chunk rematerialization.
+
+    Backward through a plain S-step scan saves the carry at every step
+    (O(S x state) — 100s of GB for mLSTM matrix memory).  Here the outer scan
+    runs over S/chunk chunks whose bodies are ``jax.checkpoint``ed: only
+    chunk-boundary carries are saved and the inner per-step carries are
+    recomputed per chunk (one level of binomial checkpointing), bounding
+    backward memory at O(S/chunk x state + chunk x state)."""
+    S = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    if S % chunk != 0 or S <= chunk:
+        return jax.lax.scan(step, carry0, xs)
+    n = S // chunk
+    xs_c = jax.tree.map(lambda a: a.reshape((n, chunk) + a.shape[1:]), xs)
+
+    @jax.checkpoint
+    def outer(carry, xc):
+        return jax.lax.scan(step, carry, xc)
+
+    carry, ys = jax.lax.scan(outer, carry0, xs_c)
+    ys = jax.tree.map(lambda a: a.reshape((S,) + a.shape[2:]), ys)
+    return carry, ys
+
+
+# --------------------------------------------------------------------------- #
+# Mamba-style selective SSM
+# --------------------------------------------------------------------------- #
+
+
+def init_mamba(key, cfg: ArchConfig):
+    m = cfg.ssm
+    d_in = m.expand * cfg.d_model
+    N = m.state_dim
+    ks = jax.random.split(key, 6)
+    params = {
+        "w_in": dense_init(ks[0], (cfg.d_model, 2 * d_in), cfg.d_model),
+        "conv_w": jax.random.normal(ks[1], (m.conv_width, d_in), jnp.float32) * 0.1,
+        "w_bc": dense_init(ks[2], (d_in, 2 * N), d_in),
+        "w_dt": dense_init(ks[3], (d_in, d_in), d_in),
+        "A_log": jnp.log(jnp.arange(1, N + 1, dtype=jnp.float32))[None, :]
+        * jnp.ones((d_in, 1), jnp.float32),
+        "D": jnp.ones((d_in,), jnp.float32),
+        "w_out": dense_init(ks[4], (d_in, cfg.d_model), d_in),
+    }
+    specs = {
+        "w_in": ("embed", "mlp"),
+        "conv_w": ("conv", "mlp"),
+        "w_bc": ("mlp", None),
+        "w_dt": ("mlp", "mlp"),
+        "A_log": ("mlp", "state"),
+        "D": ("mlp",),
+        "w_out": ("mlp", "embed"),
+    }
+    return params, specs
+
+
+def _mamba_inputs(p, x, cfg: ArchConfig):
+    m = cfg.ssm
+    d_in = m.expand * cfg.d_model
+    dt_ = x.dtype
+    xz = jnp.einsum("bsd,de->bse", x, p["w_in"].astype(dt_))
+    xs, z = xz[..., :d_in], xz[..., d_in:]
+    # depthwise causal conv via shifts (width w)
+    conv = jnp.zeros_like(xs)
+    for k in range(cfg.ssm.conv_width):
+        shifted = jnp.pad(xs, ((0, 0), (k, 0), (0, 0)))[:, : xs.shape[1], :]
+        conv = conv + shifted * p["conv_w"][k].astype(dt_)
+    xs = jax.nn.silu(conv)
+    bc = jnp.einsum("bse,en->bsn", xs, p["w_bc"].astype(dt_)).astype(jnp.float32)
+    B_, C_ = bc[..., : m.state_dim], bc[..., m.state_dim :]
+    dt = jax.nn.softplus(
+        jnp.einsum("bse,ef->bsf", xs, p["w_dt"].astype(dt_)).astype(jnp.float32)
+    )
+    return xs, z, B_, C_, dt
+
+
+def mamba_forward(p, x, cfg: ArchConfig):
+    """x: [B,S,D] -> [B,S,D] (training / prefill; scan over sequence)."""
+    m = cfg.ssm
+    xs, z, B_, C_, dt = _mamba_inputs(p, x, cfg)
+    A = -jnp.exp(p["A_log"])  # [dI, N]
+    B, S, dI = xs.shape
+
+    def step(h, inp):
+        x_t, b_t, c_t, dt_t = inp  # [B,dI], [B,N], [B,N], [B,dI]
+        decay = jnp.exp(dt_t[..., None] * A[None])  # [B,dI,N]
+        h = decay * h + (dt_t * x_t.astype(jnp.float32))[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    h0 = jnp.zeros((B, dI, m.state_dim), jnp.float32)
+    xs_t = jnp.moveaxis(xs, 1, 0)
+    _, ys = chunked_scan(
+        step, h0, (xs_t, jnp.moveaxis(B_, 1, 0), jnp.moveaxis(C_, 1, 0), jnp.moveaxis(dt, 1, 0))
+    )
+    y = jnp.moveaxis(ys, 0, 1).astype(x.dtype) + xs * p["D"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    return jnp.einsum("bse,ed->bsd", y, p["w_out"].astype(x.dtype))
+
+
+def mamba_decode(p, x, state, cfg: ArchConfig):
+    """One token: x [B,1,D], state [B,dI,N] -> (y [B,1,D], new_state)."""
+    m = cfg.ssm
+    xs, z, B_, C_, dt = _mamba_inputs(p, x, cfg)  # S=1 (conv sees 1 step: OK stub)
+    A = -jnp.exp(p["A_log"])
+    x_t, b_t, c_t, dt_t = xs[:, 0], B_[:, 0], C_[:, 0], dt[:, 0]
+    decay = jnp.exp(dt_t[..., None] * A[None])
+    state = decay * state + (dt_t * x_t.astype(jnp.float32))[..., None] * b_t[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", state, c_t)[:, None, :].astype(x.dtype)
+    y = y + xs * p["D"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    return jnp.einsum("bse,ed->bsd", y, p["w_out"].astype(x.dtype)), state
+
+
+# --------------------------------------------------------------------------- #
+# mLSTM (xLSTM matrix-memory block)
+# --------------------------------------------------------------------------- #
+
+
+def init_mlstm(key, cfg: ArchConfig):
+    H = cfg.n_heads
+    d_in = 2 * cfg.d_model
+    dh = d_in // H
+    ks = jax.random.split(key, 7)
+    params = {
+        "w_up": dense_init(ks[0], (cfg.d_model, d_in), cfg.d_model),
+        "wq": dense_init(ks[1], (d_in, H, dh), d_in),
+        "wk": dense_init(ks[2], (d_in, H, dh), d_in),
+        "wv": dense_init(ks[3], (d_in, H, dh), d_in),
+        "w_if": dense_init(ks[4], (d_in, 2 * H), d_in),
+        "w_o": dense_init(ks[5], (cfg.d_model, d_in), cfg.d_model),
+        "w_down": dense_init(ks[6], (d_in, cfg.d_model), d_in),
+    }
+    specs = {
+        "w_up": ("embed", "mlp"),
+        "wq": ("mlp", "heads", None),
+        "wk": ("mlp", "heads", None),
+        "wv": ("mlp", "heads", None),
+        "w_if": ("mlp", None),
+        "w_o": ("embed", "mlp"),
+        "w_down": ("mlp", "embed"),
+    }
+    return params, specs
+
+
+def _mlstm_qkv(p, x, cfg: ArchConfig):
+    dt_ = x.dtype
+    H = cfg.n_heads
+    inner = jnp.einsum("bsd,de->bse", x, p["w_up"].astype(dt_))
+    q = jnp.einsum("bse,ehk->bshk", inner, p["wq"].astype(dt_)) / math.sqrt(
+        p["wq"].shape[-1]
+    )
+    k = jnp.einsum("bse,ehk->bshk", inner, p["wk"].astype(dt_)) / math.sqrt(
+        p["wq"].shape[-1]
+    )
+    v = jnp.einsum("bse,ehk->bshk", inner, p["wv"].astype(dt_))
+    gates = jnp.einsum("bse,eg->bsg", inner, p["w_if"].astype(dt_)).astype(jnp.float32)
+    log_i, log_f = gates[..., :H], jax.nn.log_sigmoid(gates[..., H:])
+    og = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", x, p["w_o"].astype(dt_)))
+    return q, k, v, log_i, log_f, og
+
+
+def mlstm_forward(p, x, cfg: ArchConfig):
+    """Exponential-gated matrix memory, scan over sequence."""
+    q, k, v, log_i, log_f, og = _mlstm_qkv(p, x, cfg)
+    B, S, H, dh = q.shape
+
+    def step(carry, inp):
+        C, n, m = carry  # [B,H,dh,dh], [B,H,dh], [B,H]
+        q_t, k_t, v_t, li_t, lf_t = inp
+        m_new = jnp.maximum(lf_t + m, li_t)
+        i_p = jnp.exp(li_t - m_new)
+        f_p = jnp.exp(lf_t + m - m_new)
+        C = f_p[..., None, None] * C + i_p[..., None, None] * (
+            k_t[..., :, None].astype(jnp.float32) * v_t[..., None, :].astype(jnp.float32)
+        )
+        n = f_p[..., None] * n + i_p[..., None] * k_t.astype(jnp.float32)
+        num = jnp.einsum("bhkv,bhk->bhv", C, q_t.astype(jnp.float32))
+        den = jnp.maximum(
+            jnp.abs(jnp.einsum("bhk,bhk->bh", n, q_t.astype(jnp.float32))), 1.0
+        )
+        y = num / den[..., None]
+        return (C, n, m_new), y
+
+    carry0 = (
+        jnp.zeros((B, H, dh, dh), jnp.float32),
+        jnp.zeros((B, H, dh), jnp.float32),
+        jnp.full((B, H), -1e30, jnp.float32),
+    )
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (q, k, v, log_i, log_f))
+    _, ys = chunked_scan(step, carry0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, H * dh).astype(x.dtype)
+    y = y * og
+    return jnp.einsum("bse,ed->bsd", y, p["w_down"].astype(x.dtype))
+
+
+def mlstm_decode(p, x, state, cfg: ArchConfig):
+    q, k, v, log_i, log_f, og = _mlstm_qkv(p, x, cfg)
+    C, n, m = state
+    q_t, k_t, v_t, li_t, lf_t = (a[:, 0] for a in (q, k, v, log_i, log_f))
+    m_new = jnp.maximum(lf_t + m, li_t)
+    i_p = jnp.exp(li_t - m_new)
+    f_p = jnp.exp(lf_t + m - m_new)
+    C = f_p[..., None, None] * C + i_p[..., None, None] * (
+        k_t[..., :, None].astype(jnp.float32) * v_t[..., None, :].astype(jnp.float32)
+    )
+    n = f_p[..., None] * n + i_p[..., None] * k_t.astype(jnp.float32)
+    num = jnp.einsum("bhkv,bhk->bhv", C, q_t.astype(jnp.float32))
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q_t.astype(jnp.float32))), 1.0)
+    B, _, H, dh = q.shape
+    y = (num / den[..., None]).reshape(B, 1, H * dh).astype(x.dtype) * og
+    out = jnp.einsum("bse,ed->bsd", y, p["w_down"].astype(x.dtype))
+    return out, (C, n, m_new)
+
+
+# --------------------------------------------------------------------------- #
+# sLSTM (xLSTM scalar-memory block)
+# --------------------------------------------------------------------------- #
+
+
+def init_slstm(key, cfg: ArchConfig):
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    params = {
+        "w_gates": dense_init(ks[0], (d, 4 * d), d),  # i, f, z, o from x
+        "r_gates": dense_init(ks[1], (d, 4 * d), d) * 0.1,  # recurrent from h
+        "w_down": dense_init(ks[2], (d, d), d),
+    }
+    specs = {"w_gates": ("embed", "mlp"), "r_gates": ("embed", "mlp"), "w_down": ("embed", "embed")}
+    return params, specs
+
+
+def slstm_forward(p, x, cfg: ArchConfig):
+    d = cfg.d_model
+    dt_ = x.dtype
+    gx = jnp.einsum("bsd,dg->bsg", x, p["w_gates"].astype(dt_)).astype(jnp.float32)
+    B, S, _ = x.shape
+
+    def step(carry, g_t):
+        c, n, m, h = carry
+        gr = (h.astype(dt_) @ p["r_gates"].astype(dt_)).astype(jnp.float32)
+        g = g_t + gr
+        li = g[..., :d]
+        lf = jax.nn.log_sigmoid(g[..., d : 2 * d])
+        z = jnp.tanh(g[..., 2 * d : 3 * d])
+        o = jax.nn.sigmoid(g[..., 3 * d :])
+        m_new = jnp.maximum(lf + m, li)
+        i_p = jnp.exp(li - m_new)
+        f_p = jnp.exp(lf + m - m_new)
+        c = f_p * c + i_p * z
+        n = jnp.maximum(f_p * n + i_p, 1.0)
+        h = o * c / n
+        return (c, n, m_new, h), h
+
+    z0 = jnp.zeros((B, d), jnp.float32)
+    carry0 = (z0, jnp.ones((B, d), jnp.float32), jnp.full((B, d), -1e30, jnp.float32), z0)
+    _, hs = chunked_scan(step, carry0, jnp.moveaxis(gx, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).astype(x.dtype)
+    return jnp.einsum("bsd,de->bse", y, p["w_down"].astype(x.dtype))
+
+
+def slstm_decode(p, x, state, cfg: ArchConfig):
+    d = cfg.d_model
+    dt_ = x.dtype
+    gx = jnp.einsum("bsd,dg->bsg", x, p["w_gates"].astype(dt_)).astype(jnp.float32)[:, 0]
+    c, n, m, h = state
+    gr = (h.astype(dt_) @ p["r_gates"].astype(dt_)).astype(jnp.float32)
+    g = gx + gr
+    li = g[..., :d]
+    lf = jax.nn.log_sigmoid(g[..., d : 2 * d])
+    z = jnp.tanh(g[..., 2 * d : 3 * d])
+    o = jax.nn.sigmoid(g[..., 3 * d :])
+    m_new = jnp.maximum(lf + m, li)
+    i_p = jnp.exp(li - m_new)
+    f_p = jnp.exp(lf + m - m_new)
+    c = f_p * c + i_p * z
+    n = jnp.maximum(f_p * n + i_p, 1.0)
+    h = o * c / n
+    y = h[:, None, :].astype(x.dtype)
+    return jnp.einsum("bsd,de->bse", y, p["w_down"].astype(x.dtype)), (c, n, m_new, h)

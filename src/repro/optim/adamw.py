@@ -1,0 +1,102 @@
+"""AdamW in pure JAX, ZeRO-sharded by construction.
+
+Optimizer state mirrors the parameter tree, so the same logical-axis
+shardings (+ FSDP) apply — m/v/master shards live where the param shard
+lives (ZeRO-3).  Includes global-norm clipping and cosine LR schedule.
+
+Gradient compression: with ``grad_dtype="bfloat16"`` the backward pass (and
+therefore the data-parallel all-reduce the SPMD partitioner inserts) runs in
+bf16 — halving cross-pod gradient wire bytes.  An error-feedback residual
+keeps the update unbiased over steps.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+    residual: Optional[Any] = None  # error feedback (compression)
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    grad_dtype: Optional[str] = None  # "bfloat16" => compressed reduction
+    error_feedback: bool = False
+
+
+def init(params, cfg: AdamWConfig) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    res = (
+        jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+        if cfg.error_feedback
+        else None
+    )
+    return AdamWState(jnp.zeros((), jnp.int32), zeros, jax.tree.map(jnp.copy, zeros), res)
+
+
+def schedule(step, cfg: AdamWConfig):
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0
+    )
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def update(grads, state: AdamWState, params, cfg: AdamWConfig):
+    """One AdamW step.  Returns (new_params, new_state, metrics)."""
+    step = state.step + 1
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    if state.residual is not None:
+        grads = jax.tree.map(jnp.add, grads, state.residual)
+
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    grads = jax.tree.map(lambda g: g * scale, grads)
+
+    new_res = None
+    if state.residual is not None:
+        # error feedback: residual = grad - quantized(grad)
+        q = jax.tree.map(lambda g: g.astype(jnp.bfloat16).astype(jnp.float32), grads)
+        new_res = jax.tree.map(lambda g, qq: g - qq, grads, q)
+        grads = q
+
+    b1, b2 = cfg.beta1, cfg.beta2
+    m = jax.tree.map(lambda mm, g: b1 * mm + (1 - b1) * g, state.m, grads)
+    v = jax.tree.map(lambda vv, g: b2 * vv + (1 - b2) * g * g, state.v, grads)
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+    lr = schedule(step, cfg)
+
+    def upd(p, mm, vv):
+        mhat = mm / bc1
+        vhat = vv / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, m, v)
+    return new_params, AdamWState(step, m, v, new_res), {"grad_norm": gnorm, "lr": lr}

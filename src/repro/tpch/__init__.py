@@ -1,0 +1,4 @@
+from .dbgen import generate
+from .queries import ALL_QUERIES
+
+__all__ = ["generate", "ALL_QUERIES"]

@@ -1,0 +1,71 @@
+import numpy as np
+import pytest
+
+from repro.core.expr import (
+    BinOp, Col, IsIn, Lit, Param, ParamSet, TRUE, FALSE, canonical_atoms,
+    conjuncts, disjuncts, eval_np, land, lnot, lor, pinned_cols,
+    row_selection_for, substitute_cols, substitute_params,
+)
+
+
+def test_eval_basic():
+    env = {"a": np.array([1, 2, 3]), "b": np.array([3.0, 2.0, 1.0])}
+    assert eval_np(Col("a") + Col("b"), env).tolist() == [4.0, 4.0, 4.0]
+    assert eval_np(Col("a") > 1, env).tolist() == [False, True, True]
+    assert eval_np(land(Col("a") > 1, Col("b") > 1.5), env).tolist() == [False, True, False]
+    assert eval_np(lor(Col("a").eq(1), Col("b").eq(1.0)), env).tolist() == [True, False, True]
+    assert eval_np(lnot(Col("a").eq(2)), env).tolist() == [True, False, True]
+
+
+def test_eval_membership_and_params():
+    env = {"a": np.array([1, 2, 3, 4])}
+    assert eval_np(IsIn(Col("a"), (2, 4)), env).tolist() == [False, True, False, True]
+    # param bound to scalar
+    p = BinOp("==", Col("a"), Param("v"))
+    assert eval_np(p, env, {"v": 3}).tolist() == [False, False, True, False]
+    # param bound to array -> membership semantics
+    assert eval_np(p, env, {"v": np.array([1, 4])}).tolist() == [True, False, False, True]
+    # ParamSet
+    ps = IsIn(Col("a"), ParamSet("V"))
+    assert eval_np(ps, env, {"V": np.array([2, 3])}).tolist() == [False, True, True, False]
+
+
+def test_eval_year_and_case():
+    from repro.core.expr import IfThenElse, UnaryOp
+
+    env = {"d": np.array([19940105, 19951231])}
+    assert eval_np(UnaryOp("year", Col("d")), env).tolist() == [1994, 1995]
+    e = IfThenElse(Col("d") > 19950000, Lit(1), Lit(0))
+    assert eval_np(e, env).tolist() == [0, 1]
+
+
+def test_conjunct_disjunct_folding():
+    a, b = Col("x") > 1, Col("y").eq(2)
+    assert conjuncts(land(a, b, TRUE)) == [a, b]
+    assert land(a, FALSE) == FALSE
+    assert lor(a, TRUE) == TRUE
+    assert disjuncts(lor(a, b)) == [a, b]
+    # dedupe
+    assert conjuncts(land(a, a, b)) == [a, b]
+
+
+def test_substitution():
+    e = land(Col("c") > 5, Col("k").eq(Param("v")))
+    s = substitute_cols(e, {"c": Col("a") + Col("b")})
+    env = {"a": np.array([3]), "b": np.array([4]), "k": np.array([7])}
+    assert eval_np(s, env, {"v": 7}).tolist() == [True]
+    s2 = substitute_params(e, {"v": 9})
+    assert "Param" not in repr(type(s2))
+
+
+def test_row_selection_and_pins():
+    pred, pmap = row_selection_for(["a", "b"])
+    pins = pinned_cols(pred)
+    assert set(pins) == {"a", "b"}
+    assert set(pmap.values()) == {"a", "b"}
+
+
+def test_canonical_atoms_normalizes_sides():
+    e1 = BinOp("<", Lit(5), Col("a"))
+    e2 = BinOp(">", Col("a"), Lit(5))
+    assert canonical_atoms(e1) == canonical_atoms(e2)

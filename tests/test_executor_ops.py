@@ -1,0 +1,131 @@
+"""Operator semantics of the numpy oracle executor."""
+
+import numpy as np
+import pytest
+
+from repro.core import ops as O
+from repro.core.executor import Executor
+from repro.core.expr import Col, IfThenElse, IsIn, Lit, land
+from repro.core.table import Table
+
+
+@pytest.fixture()
+def db():
+    t = Table.from_dict(
+        {"k": [1, 2, 2, 3], "v": [10.0, 20.0, 30.0, 40.0], "g": ["a", "b", "a", "b"]},
+        name="t",
+    )
+    u = Table.from_dict({"uk": [2, 3, 3, 5], "w": [1, 2, 3, 4]}, name="u")
+    return {"t": t, "u": u}
+
+
+def run(db, plan):
+    return Executor(db).run(plan).output
+
+
+def test_filter_project_transform(db):
+    out = run(db, O.Filter(O.Source("t"), Col("v") > 15))
+    assert out.nrows == 3
+    out = run(db, O.Project(O.Source("t"), ["k"]))
+    assert out.columns == ["k"]
+    out = run(db, O.RowTransform(O.Source("t"), {"v2": Col("v") * 2}))
+    assert out["v2"].tolist() == [20.0, 40.0, 60.0, 80.0]
+
+
+def test_joins(db):
+    out = run(db, O.InnerJoin(O.Source("t"), O.Source("u"), [("k", "uk")]))
+    assert sorted(out["k"].tolist()) == [2, 2, 3, 3]
+    loj = run(db, O.LeftOuterJoin(O.Source("t"), O.Source("u"), [("k", "uk")]))
+    assert loj.nrows == 5  # k=1 unmatched kept, k=3 matches 2
+    w = loj["w"][loj["k"] == 1]
+    assert (w == -1).all()  # null sentinel
+
+
+def test_semi_anti(db):
+    semi = run(db, O.SemiJoin(O.Source("t"), O.Source("u"), [("k", "uk")]))
+    assert sorted(semi["k"].tolist()) == [2, 2, 3]
+    anti = run(db, O.AntiJoin(O.Source("t"), O.Source("u"), [("k", "uk")]))
+    assert anti["k"].tolist() == [1]
+    # with extra predicate: exists u with w >= 3 and key match
+    semi2 = run(
+        db, O.SemiJoin(O.Source("t"), O.Source("u"), [("k", "uk")], pred=Col("w") >= 3)
+    )
+    assert sorted(semi2["k"].tolist()) == [3]
+
+
+def test_groupby_aggs(db):
+    g = run(
+        db,
+        O.GroupBy(
+            O.Source("t"),
+            ["g"],
+            {
+                "s": O.Agg("sum", Col("v")),
+                "c": O.Agg("count"),
+                "mx": O.Agg("max", Col("v")),
+                "mn": O.Agg("min", Col("v")),
+                "avg": O.Agg("mean", Col("v")),
+            },
+        ),
+    )
+    row = {g.decode("g")[i]: i for i in range(g.nrows)}
+    assert g["s"][row["a"]] == 40.0 and g["s"][row["b"]] == 60.0
+    assert g["c"][row["a"]] == 2
+    assert g["mx"][row["b"]] == 40.0 and g["mn"][row["b"]] == 20.0
+    # empty-key global aggregate
+    g2 = run(db, O.GroupBy(O.Source("t"), [], {"s": O.Agg("sum", Col("v"))}))
+    assert g2.nrows == 1 and g2["s"][0] == 100.0
+
+
+def test_sort_topk_union_intersect(db):
+    s = run(db, O.Sort(O.Source("t"), [("v", False)], limit=2))
+    assert s["v"].tolist() == [40.0, 30.0]
+    u = run(db, O.Union([O.Source("t"), O.Source("t")]))
+    assert u.nrows == 8
+    i = run(db, O.Intersect(O.Project(O.Source("t"), ["k"]), O.Project(O.Source("t"), ["k"])))
+    assert i.nrows == 4
+
+
+def test_pivot_unpivot(db):
+    p = run(db, O.Pivot(O.Source("t"), index="k", column="g", value="v", agg="sum",
+                        values=["a", "b"]))
+    assert p.nrows == 3  # distinct k
+    up = run(db, O.Unpivot(O.Source("t"), ["k"], ["v"], "var", "val"))
+    assert up.nrows == 4 and "val" in up.columns
+
+
+def test_window_rowexpand_groupedmap(db):
+    w = run(db, O.Window(O.Source("t"), ["k"], 2, {"rsum": O.Agg("sum", Col("v"))}))
+    assert "rsum" in w.columns and "__pos__" in w.cols
+    r = run(db, O.RowExpand(O.Source("t"), [{"e": Col("v")}, {"e": Col("v") * -1}]))
+    assert r.nrows == 8
+    gm = run(
+        db,
+        O.GroupedMap(
+            O.Source("t"), ["g"], {"mu": O.Agg("mean", Col("v"))},
+            {"centered": Col("v") - Col("mu")},
+        ),
+    )
+    a_rows = gm.mask(gm["g"] == gm.encode_value("g", "a"))
+    assert np.isclose(a_rows["centered"].sum(), 0.0)
+
+
+def test_scalar_subquery(db):
+    # keep t rows where v > global mean of v (25)
+    f = O.FilterScalarSub(
+        O.Source("t"), O.Source("t"), [], O.Agg("mean", Col("v")), "<",
+        outer_expr=Lit(0.0), scale=1.0,
+    )
+    # 0 < 25 -> all rows kept
+    assert run(db, f).nrows == 4
+    corr = O.FilterScalarSub(
+        O.Source("t"), O.Source("u"), [("k", "uk")], O.Agg("sum", Col("w")), "<",
+        outer_expr=Lit(2), scale=1.0,
+    )
+    # k=2: sum w=1 (2<1 false); k=3: sum w=5 (2<5 true); k=1 no group -> drop
+    assert run(db, corr)["k"].tolist() == [3]
+
+
+def test_alias(db):
+    a = run(db, O.Alias(O.Source("t"), "x_"))
+    assert set(a.columns) == {"x_k", "x_v", "x_g"}

@@ -1,0 +1,151 @@
+"""Unit tests for per-operator pushdown rules + the symbolic verifier."""
+
+import numpy as np
+import pytest
+
+from repro.core import ops as O
+from repro.core.expr import (
+    Col, IsIn, Lit, Param, TRUE, FALSE, conjuncts, land, lor, row_selection_for,
+)
+from repro.core.pushdown import Pushdown, pins_of
+from repro.core.verify import symbolic_check
+
+SCHEMAS = {
+    "r": ["a", "b", "v"],
+    "s": ["c", "w"],
+}
+
+
+def _pd(plan):
+    return Pushdown(plan, SCHEMAS)
+
+
+def test_filter_conjoins_predicate():
+    f = O.Filter(O.Source("r"), Col("v") > 5)
+    pd = _pd(f)
+    F = Col("a").eq(Param("x"))
+    push = pd.push_node(f, F)
+    assert push.precise
+    atoms = conjuncts(push.gs[f.child.id])
+    assert len(atoms) == 2
+
+
+def test_rowtransform_substitutes():
+    t = O.RowTransform(O.Source("r"), {"z": Col("a") + Col("b")})
+    pd = _pd(t)
+    push = pd.push_node(t, Col("z").eq(Param("x")))
+    assert push.precise
+    g = push.gs[t.child.id]
+    assert "a" in repr(g) and "b" in repr(g)
+
+
+def test_join_key_transfer_and_precision():
+    j = O.InnerJoin(O.Source("r"), O.Source("s"), [("a", "c")])
+    pd = _pd(j)
+    # key pinned -> precise, both sides constrained
+    F = land(Col("a").eq(Param("x")), Col("w").eq(Param("y")))
+    push = pd.push_node(j, F)
+    assert push.precise
+    assert "c" in repr(push.gs[j.right.id])
+    # key not pinned -> imprecise
+    push2 = pd.push_node(j, Col("v").eq(Param("x")))
+    assert not push2.precise
+    # symbolic verifier agrees (paper Figure 2 mechanism)
+    assert symbolic_check(pd, j, F) is True
+    assert symbolic_check(pd, j, Col("v").eq(Param("x"))) is False
+
+
+def test_join_membership_pin_transfers():
+    j = O.InnerJoin(O.Source("r"), O.Source("s"), [("a", "c")])
+    pd = _pd(j)
+    F = IsIn(Col("a"), (1, 2, 3))
+    push = pd.push_node(j, F)
+    g_r = push.gs[j.right.id]
+    assert "IN" in repr(g_r) and "c" in repr(g_r)
+
+
+def test_semijoin_paper_figure2():
+    semi = O.SemiJoin(O.Source("r"), O.Source("s"), [("a", "c")])
+    pd = _pd(semi)
+    # F doesn't pin the key: inner gets True, imprecise (Q4's case)
+    push = pd.push_node(semi, Col("b").eq(Param("g")))
+    assert not push.precise
+    assert push.gs[semi.inner.id] == TRUE
+    assert symbolic_check(pd, semi, Col("b").eq(Param("g"))) is False
+    # row-selection: precise, inner gets the correlated key
+    Frow, _ = row_selection_for(SCHEMAS["r"])
+    push2 = pd.push_node(semi, Frow)
+    assert push2.precise
+    assert "c" in repr(push2.gs[semi.inner.id])
+
+
+def test_antijoin_inner_false():
+    anti = O.AntiJoin(O.Source("r"), O.Source("s"), [("a", "c")])
+    pd = _pd(anti)
+    Frow, _ = row_selection_for(SCHEMAS["r"])
+    push = pd.push_node(anti, Frow)
+    assert push.precise
+    assert push.gs[anti.inner.id] == FALSE
+
+
+def test_groupby_keys_pinned():
+    g = O.GroupBy(O.Source("r"), ["b"], {"s": O.Agg("sum", Col("v"))})
+    pd = _pd(g)
+    push = pd.push_node(g, land(Col("b").eq(Param("k")), Col("s").eq(Param("sv"))))
+    assert push.precise  # agg atom dropped, key pinned -> whole group
+    assert "s" not in [getattr(a.left, "name", "") for a in conjuncts(push.gs[g.child.id])]
+    push2 = pd.push_node(g, Col("s").eq(Param("sv")))
+    assert not push2.precise
+
+
+def test_groupby_minmax_refinement():
+    g = O.GroupBy(O.Source("r"), ["b"], {"mx": O.Agg("max", Col("v"))})
+    pd = Pushdown(g, SCHEMAS, precise_minmax=True)
+    push = pd.push_node(g, land(Col("b").eq(Param("k")), Col("mx").eq(Param("m"))))
+    assert push.precise
+    # beyond-paper: selects only the extremal rows
+    assert any("v" in repr(a) for a in conjuncts(push.gs[g.child.id]))
+
+
+def test_or_split_relaxation():
+    j = O.InnerJoin(O.Source("r"), O.Source("s"), [("a", "c")])
+    pd = _pd(j)
+    mixed = lor(land(Col("v") > 5, Col("w") > 5), land(Col("v") < 2, Col("w") < 2))
+    push = pd.push_node(j, mixed, relaxed=True)
+    assert not push.precise
+    # each side received the OR of its local projections
+    assert "or" in repr(push.gs[j.left.id]) and "or" in repr(push.gs[j.right.id])
+
+
+def test_window_pushdown():
+    w = O.Window(O.Source("r"), ["a"], 3, {"rs": O.Agg("sum", Col("v"))})
+    pd = _pd(w)
+    push = pd.push_node(w, Col("a").eq(Param("i")))
+    assert push.precise  # trailing-window range on the order column
+    g = repr(push.gs[w.child.id])
+    assert "<=" in g and ">" in g
+    push2 = pd.push_node(w, Col("rs").eq(Param("x")))
+    assert not push2.precise
+
+
+def test_unpivot_pushdown():
+    up = O.Unpivot(O.Source("r"), ["a"], ["b", "v"], "var", "val")
+    pd = _pd(up)
+    F = land(Col("a").eq(Param("i")), Col("val").eq(Param("x")))
+    push = pd.push_node(up, F)
+    assert push.precise
+    assert "or" in repr(push.gs[up.child.id]).lower()
+
+
+def test_scalar_subquery_pushdown():
+    f = O.FilterScalarSub(
+        O.Source("r"), O.Source("s"), [("a", "c")], O.Agg("sum", Col("w")), "<",
+        outer_expr=Col("v"),
+    )
+    pd = _pd(f)
+    Frow, _ = row_selection_for(SCHEMAS["r"])
+    push = pd.push_node(f, Frow)
+    assert push.precise
+    assert "c" in repr(push.gs[f.inner.id])
+    push2 = pd.push_node(f, Col("b").eq(Param("x")))
+    assert not push2.precise

@@ -1,0 +1,46 @@
+"""End-to-end behaviour tests: the full drivers (train/serve) run, losses are
+finite and improving, checkpoints resume, lineage queries answer."""
+
+import sys
+
+import numpy as np
+import pytest
+
+
+def test_train_driver_end_to_end(tmp_path, capsys):
+    from repro.launch.train import main
+
+    losses = main([
+        "--arch", "qwen2-0.5b", "--smoke", "--steps", "16", "--batch", "4",
+        "--seq", "64", "--ckpt-every", "8", "--ckpt-dir", str(tmp_path),
+        "--lr", "5e-3",
+    ])
+    assert np.isfinite(losses).all()
+    assert np.mean(losses[-4:]) < np.mean(losses[:4])
+    out = capsys.readouterr().out
+    assert "[lineage] doc" in out  # the paper's feature answered a query
+
+    # resume from checkpoint continues the step count
+    losses2 = main([
+        "--arch", "qwen2-0.5b", "--smoke", "--steps", "20", "--batch", "4",
+        "--seq", "64", "--ckpt-every", "8", "--ckpt-dir", str(tmp_path),
+        "--resume", "--lr", "5e-3",
+    ])
+    assert len(losses2) == 4  # resumed at 16, ran to 20
+
+
+def test_serve_driver_end_to_end():
+    from repro.launch.serve import main
+
+    gen = main(["--arch", "qwen2-0.5b", "--smoke", "--batch", "2",
+                "--prompt-len", "16", "--gen", "4"])
+    assert gen.shape == (2, 4)
+
+
+def test_dryrun_cell_skip_path():
+    """run_cell's documented-skip path works without touching device state."""
+    from repro.launch import dryrun
+
+    cell = dryrun.run_cell("llama3.2-3b", "long_500k", multi_pod=False)
+    assert cell["status"] == "skipped"
+    assert "full attention" in cell["reason"]

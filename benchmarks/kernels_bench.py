@@ -14,7 +14,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import ScanEngine
 from repro.core.expr import Col, Param, eval_np, land
+from repro.core.table import Table
 from repro.kernels.membership import probe
 from repro.kernels.pred_filter import scan_mask
 
@@ -31,6 +33,11 @@ def bench_kernels() -> List[tuple]:
                     Col("c3") > 50)
         binding = {"v": 7}
         t_np = time_ms(lambda: eval_np(pred, env, binding, n=n))
+        # compiled atom-program scan (the engine's numpy backend)
+        table = Table(dict(env), {}, "bench")
+        eng = ScanEngine()
+        eng.scan(pred, table, binding)
+        t_eng = time_ms(lambda: eng.scan(pred, table, binding))
         order = {f"c{i}": i for i in range(6)}
         # jit'd fused scan (XLA CPU — the same graph the TPU kernel implements)
         from repro.core.expr import eval_jnp
@@ -44,8 +51,15 @@ def bench_kernels() -> List[tuple]:
                       block_rows=1024)
         ok = (m == np.asarray(eval_np(pred, {k: v[:65536] for k, v in env.items()},
                                       binding, n=65536), bool)).all()
+        # ScanEngine pallas backend == numpy backend on a slice
+        head = Table({k: v[:65536] for k, v in env.items()}, {}, "bench")
+        pl_eng = ScanEngine(backend="pallas", interpret=True)
+        eng_ok = bool(
+            (pl_eng.scan(pred, head, binding) == eng.scan(pred, head, binding)).all()
+        )
         rows.append((f"kernels.pred_scan.n{n}", t_np * 1e3,
-                     f"numpy={t_np:.1f}ms jit={t_jax:.1f}ms pallas_interpret_ok={ok}"))
+                     f"numpy={t_np:.1f}ms engine={t_eng:.1f}ms jit={t_jax:.1f}ms "
+                     f"pallas_interpret_ok={ok} engine_pallas_ok={eng_ok}"))
     # membership probe (jit path = sorted binary search, the TPU-kernel analogue)
     vals = rng.integers(0, 100_000, 1_000_000).astype(np.int32)
     vset = rng.choice(100_000, 5_000, replace=False).astype(np.int32)

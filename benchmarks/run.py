@@ -19,6 +19,7 @@ def main() -> None:
     )
     from .pipelines import bench_pipelines
     from .roofline_bench import bench_roofline
+    from .scan_bench import bench_scan_engine
 
     benches = {
         "coverage": bench_coverage,       # paper Table 4
@@ -30,6 +31,7 @@ def main() -> None:
         "no_inter": bench_no_inter,       # paper Figure 11
         "pipelines": bench_pipelines,     # paper Figure 12 / Table 7
         "kernels": bench_kernels,         # kernel-path scans
+        "scan_engine": bench_scan_engine, # batched vs single-row query latency
         "roofline": bench_roofline,       # §Roofline (reads dry-run artifacts)
     }
     selected = args.only.split(",") if args.only else list(benches)

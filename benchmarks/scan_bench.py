@@ -1,0 +1,109 @@
+"""ScanEngine benchmarks: single-row vs batched lineage queries, and
+interpreted ``eval_np`` vs compiled atom-program scans.
+
+Emits CSV rows like every other suite and additionally writes
+``BENCH_scan.json`` with the raw numbers, including the acceptance metric:
+``query_batch`` over 64 target rows vs 64 sequential ``query()`` calls on
+the TPC-H Q3 pipeline (target: >= 5x at SF >= 0.01, identical answers).
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import Executor, PredTrace, ScanEngine
+from repro.core.expr import Col, Param, eval_np, land
+from repro.tpch import ALL_QUERIES
+
+from .common import db, time_ms
+
+BATCH = 64
+OUT_JSON = Path("BENCH_scan.json")
+
+
+def _lineage_sets(ans):
+    return {k: set(np.asarray(v).tolist()) for k, v in ans.items() if len(v)}
+
+
+def _prepared(d, qname: str) -> PredTrace:
+    plan = ALL_QUERIES[qname](d)
+    res = Executor(d).run(plan)
+    pt = PredTrace(d, plan)
+    pt.infer(stats=res.stats)
+    pt.run()
+    return pt
+
+
+def bench_scan_engine() -> List[tuple]:
+    rows: List[tuple] = []
+    results: Dict[str, object] = {}
+
+    # ---- batched vs sequential lineage queries (acceptance metric) ------ #
+    for sf, qnames in ((0.01, ("q3",)), (0.02, ("q3", "q5", "q10"))):
+        d = db(sf)
+        for qname in qnames:
+            pt = _prepared(d, qname)
+            n_out = pt.exec_result.output.nrows
+            if n_out == 0:
+                continue
+            targets = [i % n_out for i in range(BATCH)]
+            pt.query(0)
+            pt.query_batch(targets)  # warm compile + sort-index caches
+            t_seq = time_ms(lambda: [pt.query(r) for r in targets])
+            t_bat = time_ms(lambda: pt.query_batch(targets))
+            seq = [pt.query(r) for r in targets]
+            bat = pt.query_batch(targets)
+            identical = all(
+                _lineage_sets(s.lineage) == _lineage_sets(b.lineage)
+                for s, b in zip(seq, bat)
+            )
+            speedup = t_seq / max(t_bat, 1e-9)
+            tag = f"scan_engine.batch{BATCH}.{qname}.sf{sf}"
+            rows.append((tag, t_bat * 1e3,
+                         f"seq={t_seq:.2f}ms batch={t_bat:.2f}ms "
+                         f"speedup={speedup:.1f}x identical={identical}"))
+            results[tag] = {
+                "sf": sf, "query": qname, "batch": BATCH,
+                "sequential_ms": t_seq, "batched_ms": t_bat,
+                "speedup": speedup, "identical_answers": identical,
+            }
+
+    # ---- interpreted eval_np vs compiled atom-program scan -------------- #
+    d = db(0.02)
+    li = d["lineitem"]
+    pred = land(
+        Col("l_shipdate") > 19950315,
+        Col("l_orderkey").eq(Param("v")),
+        Col("l_suppkey") >= 10,
+    )
+    eng = ScanEngine()
+    binding = {"v": int(li.cols["l_orderkey"][len(li.cols["l_orderkey"]) // 2])}
+    eng.scan(pred, li, binding)  # warm the program cache
+    t_interp = time_ms(lambda: np.asarray(
+        eval_np(pred, li.cols, binding, n=li.nrows), bool
+    ))
+    t_comp = time_ms(lambda: eng.scan(pred, li, binding))
+    bindings = [{"v": binding["v"] + k} for k in range(BATCH)]
+    eng.scan_batch_idx(pred, li, bindings)  # warm the sort index
+    t_comp_batch = time_ms(lambda: eng.scan_batch_idx(pred, li, bindings))
+    rows.append((
+        "scan_engine.compiled_vs_interpreted.lineitem", t_comp * 1e3,
+        f"eval_np={t_interp:.2f}ms compiled={t_comp:.2f}ms "
+        f"batch{BATCH}={t_comp_batch:.2f}ms "
+        f"batch_per_row_speedup={t_interp * BATCH / max(t_comp_batch, 1e-9):.0f}x",
+    ))
+    results["scan_engine.compiled_vs_interpreted.lineitem"] = {
+        "rows": li.nrows,
+        "eval_np_ms": t_interp,
+        "compiled_scan_ms": t_comp,
+        f"compiled_batch{BATCH}_ms": t_comp_batch,
+    }
+
+    OUT_JSON.write_text(json.dumps(results, indent=2, sort_keys=True))
+    rows.append(("scan_engine.json", 0.0, f"wrote {OUT_JSON}"))
+    return rows

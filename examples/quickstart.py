@@ -35,6 +35,32 @@ def main():
     print(f"lineage of output row 0 (in {ans.seconds*1e3:.1f} ms):")
     for tab, rids in ans.lineage.items():
         print(f"  {tab}: {len(rids)} source rows, e.g. {rids[:6].tolist()}")
+    st = pt.scan_engine.stats
+    print(f"scan engine: {st.scans} scans, {st.compiles} compiled atom "
+          f"programs, {st.hits} cache hits")
+
+    print("\n== batched lineage querying (one scan per table for all rows) ==")
+    targets = list(range(min(out.nrows, 32)))
+    batch = pt.query_batch(targets)
+    same_batch = all(
+        np.array_equal(np.sort(a.lineage[t]), np.sort(pt.query(r).lineage[t]))
+        for r, a in zip(targets, batch) for t in a.lineage
+    )
+    print(f"{len(targets)} rows in {sum(a.seconds for a in batch)*1e3:.1f} ms "
+          f"(vs one-at-a-time), answers match query(): {same_batch}")
+
+    print("\n== backend selection ==")
+    from repro.core import ScanEngine
+
+    pt_pl = PredTrace(db, plan, scan_engine=ScanEngine(backend="pallas"))
+    pt_pl.infer()
+    pt_pl.run()
+    a_pl = pt_pl.query(0)
+    same_pl = all(
+        np.array_equal(np.sort(ans.lineage[t]), np.sort(a_pl.lineage[t]))
+        for t in ans.lineage
+    )
+    print(f"pallas-backend lineage matches numpy oracle: {same_pl}")
 
     print("\n== without intermediate results (Algorithm 3) ==")
     pt2 = PredTrace(db, plan)

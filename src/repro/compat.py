@@ -1,0 +1,78 @@
+"""Compatibility shims for JAX API drift.
+
+The launch/checkpoint code targets the modern mesh API where
+``jax.make_mesh`` accepts ``axis_types=(jax.sharding.AxisType.Auto, ...)``.
+Older JAX releases (e.g. 0.4.x, as baked into this container) have neither
+``jax.sharding.AxisType`` nor the ``axis_types`` keyword.  Importing this
+module installs forward-compatible shims:
+
+* ``jax.sharding.AxisType`` — the real enum when present, otherwise a
+  stand-in enum with the same member names (``Auto``/``Explicit``/``Manual``).
+* ``jax.make_mesh`` — wrapped to accept and drop ``axis_types`` when the
+  underlying JAX does not understand it (``Auto`` is the legacy default
+  behaviour, so dropping it is semantics-preserving).
+
+Call sites should ``from ..compat import AxisType, make_mesh`` — the global
+patch exists only so code and tests written against the new API keep working
+unmodified.  Importing is idempotent.
+"""
+
+from __future__ import annotations
+
+import enum
+import inspect
+
+import jax
+
+__all__ = ["AxisType", "make_mesh", "install"]
+
+
+def _axis_type():
+    try:
+        return jax.sharding.AxisType
+    except AttributeError:
+        class AxisType(enum.Enum):  # mirrors jax.sharding.AxisType members
+            Auto = "auto"
+            Explicit = "explicit"
+            Manual = "manual"
+
+        return AxisType
+
+
+AxisType = _axis_type()
+
+_orig_make_mesh = getattr(jax, "make_mesh", None)
+if _orig_make_mesh is None:
+    # pre-0.4.35 JAX: no jax.make_mesh at all
+    def _orig_make_mesh(axis_shapes, axis_names, *, devices=None):
+        from jax.experimental import mesh_utils
+
+        devs = mesh_utils.create_device_mesh(tuple(axis_shapes), devices=devices)
+        return jax.sharding.Mesh(devs, tuple(axis_names))
+
+    _SUPPORTS_AXIS_TYPES = False
+else:
+    _SUPPORTS_AXIS_TYPES = (
+        "axis_types" in inspect.signature(_orig_make_mesh).parameters
+    )
+
+
+def make_mesh(axis_shapes, axis_names, *, axis_types=None, **kwargs):
+    """``jax.make_mesh`` accepting ``axis_types`` on every JAX version."""
+    if axis_types is not None and _SUPPORTS_AXIS_TYPES:
+        kwargs["axis_types"] = axis_types
+    return _orig_make_mesh(axis_shapes, axis_names, **kwargs)
+
+
+def install() -> None:
+    """Idempotently patch ``jax.sharding.AxisType`` / ``jax.make_mesh``."""
+    if not hasattr(jax.sharding, "AxisType"):
+        jax.sharding.AxisType = AxisType
+    if not _SUPPORTS_AXIS_TYPES and not getattr(
+        getattr(jax, "make_mesh", None), "_repro_compat", False
+    ):
+        make_mesh._repro_compat = True
+        jax.make_mesh = make_mesh
+
+
+install()

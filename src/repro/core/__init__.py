@@ -8,6 +8,7 @@ from .iterative import IterativeInference, refine
 from .lineage import LineageAnswer, PredTrace
 from .plan import LineageInference, LineagePlan
 from .pushdown import Pushdown
+from .scan import AtomProgram, NumpyBackend, PallasBackend, ScanEngine
 from .table import Table
 
 __all__ = [
@@ -15,5 +16,5 @@ __all__ = [
     "lor", "Table", "Executor", "ExecResult", "EagerExecutor",
     "oracle_lineage_for_values", "PredTrace", "LineageAnswer",
     "LineageInference", "LineagePlan", "Pushdown", "IterativeInference",
-    "refine",
+    "refine", "ScanEngine", "AtomProgram", "NumpyBackend", "PallasBackend",
 ]

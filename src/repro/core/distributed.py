@@ -26,9 +26,10 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
-from .expr import Expr, eval_jnp, paramsets_of
+from .expr import Expr, paramsets_of
 from .iterative import IterativePlan
 from .lineage import LineageAnswer
+from .scan import ScanEngine, default_engine
 from .table import Table
 
 SENTINEL = np.int64(-(2**62))
@@ -42,8 +43,12 @@ class ShardedCatalog:
     """Device-resident, row-sharded numeric views of the catalog columns."""
 
     def __init__(self, catalog: Dict[str, Table], mesh: Mesh,
-                 axes: Tuple[str, ...] = ("data",)):
+                 axes: Tuple[str, ...] = ("data",),
+                 engine: Optional[ScanEngine] = None):
         self.mesh = mesh
+        # predicate structure -> jitted scan, shared with the host engine so
+        # repeated queries of the same plan never retrace
+        self.engine = engine or default_engine()
         self.axes = tuple(a for a in axes if a in mesh.axis_names)
         shards = 1
         for a in self.axes:
@@ -88,27 +93,11 @@ class ShardedCatalog:
                 b[k] = jnp.asarray(padded)
             else:
                 b[k] = v
-        mask = _scan_jit(pred, env, b)
+        mask = self.engine.jit_scan(pred)(env, b)
         m = np.asarray(mask)
         if m.ndim == 0:  # constant predicate (True/False)
             m = np.broadcast_to(m, (self.padded[table],))
         return m[: self.nrows[table]]
-
-
-def _scan_jit(pred: Expr, env, binding):
-    # jit with pred as static closure: cache per predicate structure
-    key = id(pred)
-    fn = _SCAN_CACHE.get(key)
-    if fn is None:
-        def run(env, binding):
-            return eval_jnp(pred, env, binding)
-
-        fn = jax.jit(run)
-        _SCAN_CACHE[key] = fn
-    return fn(env, binding)
-
-
-_SCAN_CACHE: Dict[int, object] = {}
 
 
 def distributed_refine(

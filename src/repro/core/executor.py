@@ -23,6 +23,7 @@ import numpy as np
 
 from . import ops as O
 from .expr import Expr, eval_np
+from .scan import ScanEngine
 from .table import RID, Table, concat_tables
 
 
@@ -130,8 +131,13 @@ class ExecResult:
 class Executor:
     """Evaluates plans over a catalog of named source tables."""
 
-    def __init__(self, catalog: Dict[str, Table]):
+    def __init__(self, catalog: Dict[str, Table],
+                 scan_engine: Optional[ScanEngine] = None):
         self.catalog = catalog
+        # all Filter evaluation routes through the shared ScanEngine so plan
+        # re-execution hits the same compiled atom programs the lineage-query
+        # phase uses
+        self.scan_engine = scan_engine or ScanEngine()
 
     def schemas(self) -> Dict[str, List[str]]:
         return {k: t.columns for k, t in self.catalog.items()}
@@ -172,8 +178,7 @@ class Executor:
 
         if isinstance(n, O.Filter):
             t = rec(n.child)
-            m = eval_np(n.pred, t.cols, n=t.nrows).astype(bool)
-            return t.mask(m)
+            return t.mask(self.scan_engine.scan(n.pred, t))
 
         if isinstance(n, O.Project):
             return rec(n.child).project(n.keep)

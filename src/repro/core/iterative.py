@@ -320,9 +320,13 @@ def refine(
     scan: Optional[Callable[[Expr, Table, Dict[str, object]], np.ndarray]] = None,
 ) -> RefineResult:
     """Phase 4.  ``binding`` maps the output-row params to values.  ``scan``
-    lets callers swap the predicate-scan backend (numpy default; the JAX /
-    Pallas distributed scanner in ``core/distributed.py`` plugs in here)."""
-    scan = scan or (lambda pred, t, b: np.asarray(eval_np(pred, t.cols, b, n=t.nrows), dtype=bool))
+    lets callers swap the predicate-scan backend (the shared ScanEngine by
+    default; the JAX / Pallas distributed scanner in ``core/distributed.py``
+    plugs in here)."""
+    if scan is None:
+        from .scan import default_engine
+
+        scan = default_engine().scan
 
     # which V-sets are actually referenced by any phase-3 predicate
     used: Set[str] = set()
@@ -339,7 +343,7 @@ def refine(
         m = scan(pred, t, vv)
         masks[sid] = m
         naive[sid] = m.copy()
-    _update_vsets(ip, catalog, masks, vv, used)
+    _update_vsets(ip, catalog, masks, vv, used, scan)
 
     iters = 0
     for _ in range(max_iters):
@@ -352,7 +356,7 @@ def refine(
             if m.sum() != masks[sid].sum():
                 changed = True
             masks[sid] = m
-        _update_vsets(ip, catalog, masks, vv, used)
+        _update_vsets(ip, catalog, masks, vv, used, scan)
         if not changed:
             break
 
@@ -365,7 +369,7 @@ def refine(
     return RefineResult(masks, lineage, iters, naive)
 
 
-def _update_vsets(ip, catalog, masks, vv, used: Set[str]):
+def _update_vsets(ip, catalog, masks, vv, used: Set[str], scan=None):
     for name, (sid, col) in ip.vsets.items():
         if name not in used:
             continue
@@ -381,5 +385,9 @@ def _update_vsets(ip, catalog, masks, vv, used: Set[str]):
         if tab is None:
             continue
         t = catalog[tab]
-        m = masks[sid] & np.asarray(eval_np(pred, t.cols, vv, n=t.nrows), dtype=bool)
+        if scan is not None:
+            bm = scan(pred, t, vv)
+        else:
+            bm = np.asarray(eval_np(pred, t.cols, vv, n=t.nrows), dtype=bool)
+        m = masks[sid] & bm
         vv[name] = np.unique(t.cols[col][m])

@@ -22,11 +22,12 @@ import numpy as np
 from . import ops as O
 from .executor import ExecResult, Executor
 from .expr import (
-    BinOp, Expr, FALSE, IsIn, Param, conjuncts, eval_np, params_of,
-    substitute_params,
+    BinOp, Col, Expr, FALSE, IsIn, Param, cols_of, conjuncts, eval_np,
+    params_of,
 )
 from .iterative import IterativeInference, IterativePlan, RefineResult, refine
 from .plan import LineageInference, LineagePlan, SourcePred, Stage
+from .scan import ScanEngine
 from .table import Table
 
 
@@ -48,19 +49,17 @@ def _eq_only_params(pred: Expr) -> set:
     return eq - non_eq
 
 
-def _eval_pred(pred: Expr, table: Table, binding: Dict[str, object],
-               param_stage: Dict[str, int], stage_sel: Dict[int, Table],
-               param_col: Dict[str, str]) -> np.ndarray:
-    """Evaluate a concretized predicate.
-
-    Array-bound params appearing only in equality atoms keep set semantics
-    (exact per atom).  Params from the *same* materialized stage that appear
-    in non-equality atoms, or co-occur (cross-product hazard), are bound
-    PER STAGE ROW and the masks OR'd — the paper's "replace variables with
-    the corresponding rows"."""
-    used = params_of(pred)
-    eq_ok = _eq_only_params(pred)
-    # group array-bound stage params needing row-wise treatment
+def _binding_groups(pred: Expr, binding: Dict[str, object],
+                    param_stage: Dict[str, int],
+                    analysis: Optional[Tuple[set, set]] = None):
+    """Classify array-bound stage params: ``tuple_groups`` need zip (tuple)
+    membership semantics, ``rowwise`` need per-stage-row binding.  Both empty
+    means the predicate is a plain conjunction scan the ScanEngine handles.
+    ``analysis`` is the binding-independent ``(params_of, eq_only_params)``
+    pair — pass it when classifying many bindings of one predicate."""
+    used, eq_ok = analysis if analysis is not None else (
+        params_of(pred), _eq_only_params(pred)
+    )
     by_stage: Dict[int, List[str]] = {}
     for p in used:
         v = binding.get(p)
@@ -77,8 +76,26 @@ def _eval_pred(pred: Expr, table: Table, binding: Dict[str, object],
             rowwise[sid] = plist  # non-equality use: bind per stage row
         elif len(plist) >= 2:
             tuple_groups[sid] = plist  # multi-column: zip (tuple) semantics
+    return tuple_groups, rowwise
+
+
+def _eval_pred(pred: Expr, table: Table, binding: Dict[str, object],
+               param_stage: Dict[str, int], stage_sel: Dict[int, Table],
+               param_col: Dict[str, str],
+               scan=None) -> np.ndarray:
+    """Evaluate a concretized predicate.
+
+    Array-bound params appearing only in equality atoms keep set semantics
+    (exact per atom).  Params from the *same* materialized stage that appear
+    in non-equality atoms, or co-occur (cross-product hazard), are bound
+    PER STAGE ROW and the masks OR'd — the paper's "replace variables with
+    the corresponding rows".  ``scan`` is the compiled-scan backend for the
+    plain-conjunction fragments (defaults to the tree evaluator)."""
+    if scan is None:
+        scan = lambda p, t, b: np.asarray(eval_np(p, t.cols, b, n=t.nrows), bool)
+    tuple_groups, rowwise = _binding_groups(pred, binding, param_stage)
     if not rowwise and not tuple_groups:
-        return np.asarray(eval_np(pred, table.cols, binding, n=table.nrows), bool)
+        return scan(pred, table, binding)
 
     mask = np.ones(table.nrows, dtype=bool)
     consumed_atoms = []
@@ -126,9 +143,7 @@ def _eval_pred(pred: Expr, table: Table, binding: Dict[str, object],
         if rest:
             from .expr import land
 
-            mask &= np.asarray(
-                eval_np(land(*rest), table.cols, binding, n=table.nrows), bool
-            )
+            mask &= scan(land(*rest), table, binding)
         return mask
 
     # non-equality params (window ranges etc.): bind per stage row and OR
@@ -148,7 +163,7 @@ def _eval_pred(pred: Expr, table: Table, binding: Dict[str, object],
         b2 = dict(binding)
         for p, val in zip(plist, r):
             b2[p] = val.item() if hasattr(val, "item") else val
-        rmask |= np.asarray(eval_np(rest_pred, table.cols, b2, n=table.nrows), bool)
+        rmask |= scan(rest_pred, table, b2)
     return mask & rmask
 
 
@@ -167,6 +182,17 @@ def _is_null(v) -> bool:
         return (isinstance(v, float) and np.isnan(v)) or int(v) == -1
     except (TypeError, ValueError):
         return False
+
+
+def _uniq(v: np.ndarray) -> np.ndarray:
+    """``np.unique`` with fast paths for the overwhelmingly common shapes of
+    stage-binding columns: empty/singleton, and constant (the selected stage
+    rows share the group key)."""
+    if len(v) <= 1:
+        return v
+    if (v[0] == v).all():
+        return v[:1]
+    return np.unique(v)
 
 
 def _clean_binding_value(v):
@@ -190,12 +216,16 @@ class PredTrace:
         plan: O.Node,
         optimize_placement: bool = True,
         precise_minmax: bool = False,
+        scan_engine: Optional[ScanEngine] = None,
     ):
         self.catalog = catalog
         self.plan = plan
         self.optimize_placement = optimize_placement
         self.precise_minmax = precise_minmax
-        self.executor = Executor(catalog)
+        # one engine per PredTrace: compiled atom programs are shared across
+        # plan execution (Filter scans) and every lineage query of this plan
+        self.scan_engine = scan_engine or ScanEngine()
+        self.executor = Executor(catalog, scan_engine=self.scan_engine)
         self.lineage_plan: Optional[LineagePlan] = None
         self.iter_plan: Optional[IterativePlan] = None
         self.exec_result: Optional[ExecResult] = None
@@ -259,6 +289,7 @@ class PredTrace:
         assert self.lineage_plan is not None and self.exec_result is not None
         t0 = time.perf_counter()
         binding = self._output_binding(t_o)
+        scan = self.scan_engine.scan
 
         # walk the stage chain, binding parameters from selected rows
         param_stage: Dict[str, int] = {}
@@ -270,12 +301,13 @@ class PredTrace:
             if any(_guard_dead(binding.get(g)) for g in st.guards):
                 sel = table.mask(np.zeros(table.nrows, dtype=bool))
             else:
-                m = _eval_pred(pred, table, binding, param_stage, stage_sel, param_col)
+                m = _eval_pred(pred, table, binding, param_stage, stage_sel,
+                               param_col, scan=scan)
                 sel = table.mask(m)
             stage_sel[si] = sel
             for p, colname in st.params_out.items():
                 if colname in sel.cols:
-                    binding[p] = _clean_binding_value(np.unique(sel.cols[colname]))
+                    binding[p] = _clean_binding_value(_uniq(sel.cols[colname]))
                     param_stage[p] = si
                     param_col[p] = colname
 
@@ -285,12 +317,249 @@ class PredTrace:
             if sp.pred == FALSE or any(_guard_dead(binding.get(g)) for g in sp.guards):
                 rids = np.array([], dtype=np.int64)
             else:
-                m = _eval_pred(sp.pred, t, binding, param_stage, stage_sel, param_col)
+                m = _eval_pred(sp.pred, t, binding, param_stage, stage_sel,
+                               param_col, scan=scan)
                 rids = t.rids()[m]
             lineage[sp.table] = (
                 np.union1d(lineage[sp.table], rids) if sp.table in lineage else np.unique(rids)
             )
         return LineageAnswer(lineage, time.perf_counter() - t0)
+
+    # ------------------------------------------------------------------ #
+    def query_batch(
+        self, rows: Sequence[Union[int, Dict[str, object]]]
+    ) -> List[LineageAnswer]:
+        """Batched lineage querying: answer N output rows in ONE scan per
+        table.  Stage predicates and source predicates are evaluated for all
+        target rows together via :meth:`ScanEngine.scan_batch` (static atoms
+        once, equality thresholds vectorized); rows whose bindings need the
+        row-wise / tuple-membership treatment fall back to the per-row
+        evaluator, so answers are always identical to ``query(row)``."""
+        assert self.lineage_plan is not None and self.exec_result is not None
+        t0 = time.perf_counter()
+        B = len(rows)
+        if B == 0:
+            return []
+        bindings = [self._output_binding(r) for r in rows]
+        scan = self.scan_engine.scan
+
+        param_stage: Dict[str, int] = {}
+        param_col: Dict[str, str] = {}
+        stage_tables: Dict[int, Table] = {}
+        stage_idxs: List[Dict[int, np.ndarray]] = [{} for _ in range(B)]
+        empty = np.array([], dtype=np.int64)
+
+        sel_tables: List[Dict[int, Table]] = [{} for _ in range(B)]
+
+        def stage_sels(b: int) -> Dict[int, Table]:
+            """Materialized stage selections for one target row — built (and
+            cached) only for the bindings that need the row-wise/tuple
+            evaluator; a stage's selection never changes once computed."""
+            cache = sel_tables[b]
+            for si, idx in stage_idxs[b].items():
+                if si not in cache:
+                    cache[si] = stage_tables[si].take(idx)
+            return cache
+
+        def sel_col(b: int, sid: int, p: str) -> np.ndarray:
+            """A stage-selection column for one target row, without
+            materializing the selection Table."""
+            return stage_tables[sid].cols[param_col[p]][stage_idxs[b][sid]]
+
+        def tuple_batch(pred, table, entries) -> Optional[Dict[int, np.ndarray]]:
+            """Batched tuple-group evaluation for rows sharing one group
+            signature — mirrors ``_eval_pred``'s zip-semantics path, but the
+            leading membership of every group runs against the engine's
+            sorted index instead of a full-table ``isin`` per row.  Returns
+            None when the shape isn't batchable (atom-less group)."""
+            bs = [b for b, _ in entries]
+            tg = entries[0][1]
+            conj = conjuncts(pred)
+            consumed: List[Expr] = []
+            groups: List[Tuple[int, List[Tuple[Expr, str]]]] = []
+            for sid, plist in tg.items():
+                atoms: List[Tuple[Expr, str]] = []
+                for a in conj:
+                    ap = params_of(a)
+                    if len(ap) == 1 and next(iter(ap)) in plist and isinstance(a, BinOp):
+                        p = next(iter(ap))
+                        lhs = a.left if isinstance(a.right, Param) else a.right
+                        atoms.append((lhs, p))
+                        consumed.append(a)
+                if not atoms:
+                    return None  # membership-only group: leave to _eval_pred
+                groups.append((sid, atoms))
+            rest = [a for a in conj if a not in consumed]
+            rest_pred = None
+            if rest:
+                from .expr import land
+
+                rest_pred = land(*rest)
+                rest_cols = [c for c in cols_of(rest_pred) if c in table.cols]
+
+            def lhs_vals(lhs, idx):
+                if isinstance(lhs, Col):
+                    return table.cols[lhs.name][idx]
+                env = {c: table.cols[c][idx] for c in cols_of(lhs)}
+                return np.asarray(eval_np(lhs, env, {}, n=len(idx)))
+
+            out: Dict[int, np.ndarray] = {}
+            for sid, atoms in groups:
+                lhs0, p0 = atoms[0]
+                cand0 = self.scan_engine.member_batch_idx(
+                    table, lhs0, [sel_col(b, sid, p0) for b in bs]
+                )
+                for j, b in enumerate(bs):
+                    idx = cand0[j]
+                    vals = [lhs_vals(lhs0, idx)]
+                    for lhs, p in atoms[1:]:
+                        if not len(idx):
+                            break
+                        v = lhs_vals(lhs, idx)
+                        keep = np.isin(v, np.unique(sel_col(b, sid, p)))
+                        idx = idx[keep]
+                        vals = [lv[keep] for lv in vals]
+                        vals.append(v[keep])
+                    if len(atoms) > 1 and len(idx):
+                        from .executor import composite_codes
+
+                        ct, cs = composite_codes(
+                            vals, [np.asarray(sel_col(b, sid, p)) for _, p in atoms]
+                        )
+                        idx = idx[np.isin(ct, cs)]
+                    out[b] = idx if b not in out else np.intersect1d(out[b], idx)
+            if rest_pred is not None:
+                for b in bs:
+                    idx = out[b]
+                    if not len(idx):
+                        continue
+                    env = {c: table.cols[c][idx] for c in rest_cols}
+                    keep = np.asarray(
+                        eval_np(rest_pred, env, bindings[b], n=len(idx)), bool
+                    )
+                    out[b] = idx[keep]
+            return out
+
+        def batch_indices(pred, table, guards) -> List[Optional[np.ndarray]]:
+            """Matching row indices per target row; None marks guard-dead rows."""
+            dead = [
+                any(_guard_dead(bindings[b].get(g)) for g in guards)
+                for b in range(B)
+            ]
+            analysis = (params_of(pred), _eq_only_params(pred))
+            simple: List[int] = []
+            per_row: List[int] = []
+            tuple_groups: Dict[Tuple, List[Tuple[int, Dict]]] = {}
+            idxs: List[Optional[np.ndarray]] = [None] * B
+            for b in range(B):
+                if dead[b]:
+                    continue
+                tg, rw = _binding_groups(pred, bindings[b], param_stage, analysis)
+                if rw:  # row-wise binding: exact per-row evaluation
+                    per_row.append(b)
+                elif tg:  # tuple groups: batchable by group signature
+                    sig = tuple(sorted(
+                        (sid, tuple(sorted(plist))) for sid, plist in tg.items()
+                    ))
+                    tuple_groups.setdefault(sig, []).append((b, tg))
+                else:
+                    simple.append(b)
+            for entries in tuple_groups.values():
+                res = tuple_batch(pred, table, entries)
+                if res is None:
+                    per_row.extend(b for b, _ in entries)
+                else:
+                    for b, idx in res.items():
+                        idxs[b] = idx
+            for b in per_row:
+                m = _eval_pred(pred, table, bindings[b], param_stage,
+                               stage_sels(b), param_col, scan=scan)
+                idxs[b] = np.nonzero(m)[0]
+            if simple:
+                batched = self.scan_engine.scan_batch_idx(
+                    pred, table, [bindings[b] for b in simple]
+                )
+                for b, idx in zip(simple, batched):
+                    idxs[b] = idx
+            return idxs
+
+        for si, st in enumerate(self.lineage_plan.stages):
+            table = self.exec_result.materialized[st.node_id]
+            stage_tables[si] = table
+            idxs = batch_indices(st.run_pred, table, st.guards)
+            lens = np.fromiter(
+                (0 if idx is None else len(idx) for idx in idxs), np.int64, B
+            )
+            offs = np.zeros(B, dtype=np.int64)
+            np.cumsum(lens[:-1], out=offs[1:])
+            flat = (
+                np.concatenate([idx for idx in idxs if idx is not None and len(idx)])
+                if lens.sum() else empty
+            )
+            for b in range(B):
+                stage_idxs[b][si] = empty if idxs[b] is None else idxs[b]
+            for p, colname in st.params_out.items():
+                if colname not in table.cols:
+                    continue
+                param_stage[p] = si
+                param_col[p] = colname
+                col = table.cols[colname]
+                colf = col[flat]
+                nonempty = np.nonzero(lens)[0]
+                if len(nonempty):
+                    # segment min == max detects the common constant-column
+                    # case without a per-row unique.  reduceat runs over the
+                    # non-empty segments' offsets only: they are strictly
+                    # increasing and in range, and consecutive non-empty
+                    # offsets are exact segment boundaries (empty segments
+                    # contribute no elements), so no clipping is needed —
+                    # clipping would shift the last segment's boundary.
+                    mins = np.minimum.reduceat(colf, offs[nonempty])
+                    maxs = np.maximum.reduceat(colf, offs[nonempty])
+                    seg = np.full(B, -1, dtype=np.int64)
+                    seg[nonempty] = np.arange(len(nonempty))
+                fkind = col.dtype.kind == "f"
+                ikind = col.dtype.kind in "iu"
+                for b in range(B):
+                    ln = lens[b]
+                    if ln == 0:
+                        bindings[b][p] = col[:0]
+                    elif ln == 1 or mins[seg[b]] == maxs[seg[b]]:  # constant
+                        v = colf[offs[b]]
+                        if (fkind and np.isnan(v)) or (ikind and v == -1):
+                            bindings[b][p] = col[:0]  # null sentinel: dead
+                        else:
+                            bindings[b][p] = v.item()
+                    else:
+                        bindings[b][p] = _clean_binding_value(
+                            np.unique(colf[offs[b]:offs[b] + ln])
+                        )
+
+        lineages: List[Dict[str, np.ndarray]] = [{} for _ in range(B)]
+        for sp in self.lineage_plan.source_preds:
+            t = self.catalog[sp.table]
+            if sp.pred == FALSE:
+                idxs = [None] * B
+            else:
+                idxs = batch_indices(sp.pred, t, sp.guards)
+            for b in range(B):
+                idx = idxs[b]
+                rids = empty if idx is None else t.rids()[idx]
+                lin = lineages[b]
+                if sp.table in lin:
+                    lin[sp.table] = np.union1d(lin[sp.table], rids)
+                else:
+                    # candidate indices are distinct by construction; rids of
+                    # a source table are unique per row — sort suffices
+                    rids.sort()
+                    lin[sp.table] = rids
+        dt = time.perf_counter() - t0
+        out = []
+        for b in range(B):
+            ans = LineageAnswer(lineages[b], dt / B)
+            ans.detail["batch"] = B
+            out.append(ans)
+        return out
 
     # ------------------------------------------------------------------ #
     def query_iterative(
@@ -303,6 +572,8 @@ class PredTrace:
             self.run_unmodified()
         t0 = time.perf_counter()
         binding = self._output_binding(t_o)
+        if scan is None:
+            scan = lambda pred, t, b: self.scan_engine.scan(pred, t, b)
         rr: RefineResult = refine(self.iter_plan, self.catalog, binding, max_iters, scan=scan)
         ans = LineageAnswer(rr.lineage, time.perf_counter() - t0)
         ans.detail["iterations"] = rr.iterations
@@ -321,7 +592,7 @@ class PredTrace:
         lineage: Dict[str, np.ndarray] = {}
         for sid, (tab, pred) in self.iter_plan.g1.items():
             t = self.catalog[tab]
-            m = np.asarray(eval_np(pred, t.cols, binding, n=t.nrows), dtype=bool)
+            m = self.scan_engine.scan(pred, t, binding)
             rids = t.rids()[m]
             lineage[tab] = (
                 np.union1d(lineage[tab], rids) if tab in lineage else np.unique(rids)

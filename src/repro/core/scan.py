@@ -1,0 +1,675 @@
+"""ScanEngine: compiled predicate scans — the lineage-query hot path.
+
+The paper's headline claim is that lineage querying reduces to *table scans
+of pushed-down predicates*.  This module is the one place those scans happen.
+A pushed-down predicate ``Expr`` is compiled **once** per structure into a
+flat columnar :class:`AtomProgram` — the same atoms-plus-runtime-thresholds
+representation the Pallas ``pred_filter`` kernel consumes (static
+``(col, op)`` atom list, runtime threshold vector) — and cached by structural
+signature, so re-binding a new target row ``t_o`` never recompiles.
+
+Atom classes (a conjunction is split at compile time):
+
+* **cmp**   — ``col <op> rhs`` with ``rhs`` a literal, another column, or a
+              lineage parameter.  Literal/column atoms are *static* (shared
+              across a batch); parameter atoms take their threshold from the
+              query-time binding.
+* **isin**  — ``col IN values`` with a literal tuple or a Param/ParamSet.
+* **residual** — anything else (arithmetic, CASE WHEN, OR-trees), split into
+              a paramless part (evaluated once per scan/batch) and a
+              param-bearing part (evaluated per binding via ``eval_np``).
+
+Backends are pluggable:
+
+* :class:`NumpyBackend`  — vectorized NumPy, the oracle and host fast path.
+* :class:`PallasBackend` — routes integer comparison atoms through the fused
+  ``kernels/pred_filter`` Pallas scan and membership atoms through the
+  ``kernels/membership`` probe (interpret mode on CPU; compiled on TPU).
+* :meth:`ScanEngine.jit_scan` — a structure-cached ``jax.jit`` of
+  ``eval_jnp`` used by the sharded scanner in ``core/distributed.py``.
+
+Batched queries (:meth:`ScanEngine.scan_batch`) answer B target rows in one
+scan per table: static atoms are evaluated once, equality atoms across all B
+bindings collapse into a single composite-key sort + B binary searches
+(O(N log N + B log N) instead of B·O(N·K)), and only the few surviving
+candidate rows per binding see the remaining atoms.
+"""
+
+from __future__ import annotations
+
+import weakref
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .expr import (
+    BinOp,
+    Col,
+    Expr,
+    IsIn,
+    Lit,
+    Param,
+    ParamSet,
+    cols_of,
+    conjuncts,
+    eval_np,
+    key,
+    land,
+    params_of,
+)
+from .table import Table
+
+# op codes shared with kernels/pred_filter (0:== 1:!= 2:< 3:<= 4:> 5:>=)
+OPS = {"==": 0, "!=": 1, "<": 2, "<=": 3, ">": 4, ">=": 5}
+_FLIP = {"<": ">", "<=": ">=", ">": "<", ">=": "<=", "==": "==", "!=": "!="}
+_NP_CMP = (np.equal, np.not_equal, np.less, np.less_equal, np.greater,
+           np.greater_equal)
+EQ = OPS["=="]
+
+
+def _is_setlike(v) -> bool:
+    return isinstance(v, (list, tuple)) or (
+        isinstance(v, np.ndarray) and v.ndim == 1
+    )
+
+
+def _member(col: np.ndarray, vals) -> np.ndarray:
+    arr = np.asarray(vals)
+    col = np.asarray(col)
+    if arr.size == 0:
+        return np.zeros(len(col), dtype=bool)
+    return np.isin(col, arr)
+
+
+# --------------------------------------------------------------------------- #
+# compiled representation
+# --------------------------------------------------------------------------- #
+
+
+@dataclass(frozen=True)
+class CmpAtom:
+    """``col <op> rhs``.  ``kind`` is "lit" (rhs = value), "col" (rhs = other
+    column name) or "param" (rhs = parameter name, threshold bound at query
+    time).  ``expr`` keeps the original atom for exact-semantics fallback."""
+
+    col: str
+    op: int
+    kind: str
+    rhs: object
+    expr: Expr
+
+
+@dataclass(frozen=True)
+class IsInAtom:
+    """``col IN values``; ``kind`` "lit" (rhs = tuple) or "param"."""
+
+    col: str
+    kind: str
+    rhs: object
+    expr: Expr
+
+
+@dataclass(frozen=True)
+class AtomProgram:
+    """A predicate compiled to flat columnar atoms + residual expressions."""
+
+    pred: Expr
+    cmp_atoms: Tuple[CmpAtom, ...]
+    isin_atoms: Tuple[IsInAtom, ...]
+    residual_static: Optional[Expr]  # paramless leftovers, shared per scan
+    residual_dynamic: Optional[Expr]  # param-bearing leftovers, per binding
+    residual_static_cols: Tuple[str, ...] = ()
+    residual_dynamic_cols: Tuple[str, ...] = ()
+    signature: Tuple = ()
+
+    @property
+    def static_cmp(self) -> Tuple[CmpAtom, ...]:
+        return tuple(a for a in self.cmp_atoms if a.kind != "param")
+
+    @property
+    def param_cmp(self) -> Tuple[CmpAtom, ...]:
+        return tuple(a for a in self.cmp_atoms if a.kind == "param")
+
+
+def compile_pred(pred: Expr) -> AtomProgram:
+    """Structural compilation of a conjunction into an :class:`AtomProgram`.
+    Pure function of the predicate structure — safe to cache by ``key(pred)``."""
+    cmp_atoms: List[CmpAtom] = []
+    isin_atoms: List[IsInAtom] = []
+    rest_static: List[Expr] = []
+    rest_dynamic: List[Expr] = []
+
+    for a in conjuncts(pred):
+        atom = _compile_atom(a)
+        if isinstance(atom, CmpAtom):
+            cmp_atoms.append(atom)
+        elif isinstance(atom, IsInAtom):
+            isin_atoms.append(atom)
+        elif params_of(a):
+            rest_dynamic.append(a)
+        else:
+            rest_static.append(a)
+
+    rs = land(*rest_static) if rest_static else None
+    rd = land(*rest_dynamic) if rest_dynamic else None
+    return AtomProgram(
+        pred=pred,
+        cmp_atoms=tuple(cmp_atoms),
+        isin_atoms=tuple(isin_atoms),
+        residual_static=rs,
+        residual_dynamic=rd,
+        residual_static_cols=tuple(sorted(cols_of(rs))) if rs is not None else (),
+        residual_dynamic_cols=tuple(sorted(cols_of(rd))) if rd is not None else (),
+        signature=key(pred),
+    )
+
+
+def _compile_atom(a: Expr):
+    if isinstance(a, BinOp) and a.op in OPS:
+        l, r, op = a.left, a.right, a.op
+        if not isinstance(l, Col) and isinstance(r, Col):
+            l, r, op = r, l, _FLIP[op]
+        if isinstance(l, Col):
+            if isinstance(r, Col):
+                return CmpAtom(l.name, OPS[op], "col", r.name, a)
+            if isinstance(r, Lit) and not isinstance(r.value, Expr):
+                return CmpAtom(l.name, OPS[op], "lit", r.value, a)
+            if isinstance(r, (Param, ParamSet)):
+                return CmpAtom(l.name, OPS[op], "param", r.name, a)
+        return None
+    if isinstance(a, IsIn) and isinstance(a.operand, Col):
+        if isinstance(a.values, (Param, ParamSet)):
+            return IsInAtom(a.operand.name, "param", a.values.name, a)
+        if isinstance(a.values, tuple):
+            return IsInAtom(a.operand.name, "lit", a.values, a)
+        return None
+    return None
+
+
+def _bind(binding: Dict[str, object], name: str):
+    if name not in binding:
+        raise KeyError(f"unbound parameter {name}")
+    return binding[name]
+
+
+# --------------------------------------------------------------------------- #
+# backends
+# --------------------------------------------------------------------------- #
+
+
+class NumpyBackend:
+    """Vectorized NumPy evaluation of a bound atom program (the oracle)."""
+
+    name = "numpy"
+
+    def scan(self, prog: AtomProgram, table: Table,
+             binding: Dict[str, object]) -> np.ndarray:
+        n = table.nrows
+        mask = np.ones(n, dtype=bool)
+        for a in prog.cmp_atoms:
+            mask &= self._cmp_mask(a, table, binding, n)
+        for a in prog.isin_atoms:
+            mask &= self._isin_mask(a, table, binding, n)
+        for r in (prog.residual_static, prog.residual_dynamic):
+            if r is not None:
+                mask &= np.asarray(eval_np(r, table.cols, binding, n=n), bool)
+        return mask
+
+    # -- per-atom evaluation, exactly mirroring ``eval_np`` semantics ------- #
+    def _cmp_mask(self, a: CmpAtom, table: Table, binding, n) -> np.ndarray:
+        col = table.cols[a.col]
+        if a.kind == "col":
+            return _NP_CMP[a.op](col, table.cols[a.rhs])
+        v = a.rhs if a.kind == "lit" else _bind(binding, a.rhs)
+        if a.kind == "param" and _is_setlike(v):
+            if a.op == EQ:
+                return _member(col, v)  # array binding => set membership
+            # array bound to a non-equality comparison: defer to the tree
+            # evaluator so broadcast/error behaviour is identical
+            return np.asarray(eval_np(a.expr, table.cols, binding, n=n), bool)
+        return _NP_CMP[a.op](col, v)
+
+    def _isin_mask(self, a: IsInAtom, table: Table, binding, n) -> np.ndarray:
+        vals = a.rhs if a.kind == "lit" else _bind(binding, a.rhs)
+        return _member(table.cols[a.col], vals)
+
+
+class PallasBackend(NumpyBackend):
+    """Fast path: comparison atoms run on the fused ``pred_filter`` Pallas
+    scan over an int32 columnar slab; ``IN`` atoms run on the ``membership``
+    probe kernel.  Atoms outside the int32 fragment (float columns,
+    non-integral thresholds, residuals) fall back to the NumPy oracle —
+    correctness never depends on the kernel fragment."""
+
+    name = "pallas"
+
+    def __init__(self, interpret: bool = True, block_rows: int = 1024):
+        self.interpret = interpret
+        self.block_rows = block_rows
+        # slab cache: id(table) -> (weakref, {cols tuple: [C, N] int32 slab})
+        self._slabs: Dict[int, Tuple[weakref.ref, Dict[Tuple[str, ...], np.ndarray]]] = {}
+        # per-(table, col) int32-representability verdict (columns are
+        # immutable, so the O(N) range check runs once, not per scan)
+        self._col_ok: Dict[Tuple[int, str], Tuple[weakref.ref, bool]] = {}
+
+    def scan(self, prog: AtomProgram, table: Table,
+             binding: Dict[str, object]) -> np.ndarray:
+        n = table.nrows
+        mask = np.ones(n, dtype=bool)
+        kernel_cmp, fallback_cmp = self._split_cmp(prog, table, binding)
+        if kernel_cmp and n:
+            mask &= self._kernel_scan(kernel_cmp, table, binding)
+        for a in fallback_cmp:
+            mask &= self._cmp_mask(a, table, binding, n)
+        for a in prog.isin_atoms:
+            mask &= self._probe_mask(a, table, binding, n)
+        for r in (prog.residual_static, prog.residual_dynamic):
+            if r is not None:
+                mask &= np.asarray(eval_np(r, table.cols, binding, n=n), bool)
+        return mask
+
+    def _int32_col(self, table: Table, col: str) -> bool:
+        """Is a column exactly representable in the kernel's int32 lanes?
+        Cached per (table, col) — the range scan runs once per table."""
+        ck = (id(table), col)
+        entry = self._col_ok.get(ck)
+        if entry is not None and entry[0]() is table:
+            return entry[1]
+        arr = table.cols.get(col)
+        ok = (
+            arr is not None
+            and arr.dtype.kind in "iu"
+            and np.abs(arr).max(initial=0) < 2**31
+        )
+        self._col_ok[ck] = (
+            weakref.ref(table, lambda _, k=ck, d=self._col_ok: d.pop(k, None)),
+            ok,
+        )
+        return ok
+
+    def _split_cmp(self, prog, table, binding):
+        kernel, fallback = [], []
+        for a in prog.cmp_atoms:
+            v = None
+            if a.kind == "lit":
+                v = a.rhs
+            elif a.kind == "param" and a.rhs in binding:
+                v = binding[a.rhs]
+            ok = (
+                v is not None
+                and not _is_setlike(v)
+                and not isinstance(v, (bool, np.bool_))
+                and not (isinstance(v, (float, np.floating))
+                         and not float(v).is_integer())
+                and self._int32_col(table, a.col)
+                and abs(int(v)) < 2**31
+            )
+            (kernel if ok else fallback).append(a)
+        return kernel, fallback
+
+    def _slab(self, table: Table, cols: Tuple[str, ...]) -> np.ndarray:
+        tk = id(table)
+        entry = self._slabs.get(tk)
+        if entry is not None and entry[0]() is table and cols in entry[1]:
+            return entry[1][cols]
+        slab = np.stack([table.cols[c].astype(np.int32) for c in cols])
+        if entry is None or entry[0]() is not table:
+            # the weakref callback evicts the entry when the table dies, so
+            # dead tables don't pin their slabs for the engine's lifetime
+            ref = weakref.ref(table, lambda _, k=tk, d=self._slabs: d.pop(k, None))
+            self._slabs[tk] = (ref, {cols: slab})
+        else:
+            entry[1][cols] = slab
+        return slab
+
+    def _kernel_scan(self, atoms: List[CmpAtom], table: Table, binding):
+        from ..kernels.pred_filter import pred_filter
+
+        import jax.numpy as jnp
+
+        cols = tuple(sorted({a.col for a in atoms}))
+        order = {c: i for i, c in enumerate(cols)}
+        slab = self._slab(table, cols)
+        static = tuple((order[a.col], a.op) for a in atoms)
+        thr = np.asarray(
+            [int(a.rhs if a.kind == "lit" else binding[a.rhs]) for a in atoms],
+            dtype=np.int32,
+        )
+        n = slab.shape[1]
+        pad = (-n) % self.block_rows
+        padded = np.pad(slab, ((0, 0), (0, pad))) if pad else slab
+        mask = pred_filter(jnp.asarray(padded), jnp.asarray(thr), static,
+                           block_rows=self.block_rows, interpret=self.interpret)
+        return np.asarray(mask[:n]).astype(bool)
+
+    def _probe_mask(self, a: IsInAtom, table: Table, binding, n) -> np.ndarray:
+        vals = a.rhs if a.kind == "lit" else _bind(binding, a.rhs)
+        arr = np.asarray(vals)
+        if (
+            arr.size == 0 or n == 0
+            or arr.dtype.kind not in "iu"
+            or np.abs(arr).max(initial=0) >= 2**31
+            or not self._int32_col(table, a.col)
+        ):
+            return self._isin_mask(a, table, binding, n)
+        from ..kernels.membership import probe
+
+        return probe(table.cols[a.col], arr, interpret=self.interpret)
+
+
+# --------------------------------------------------------------------------- #
+# engine
+# --------------------------------------------------------------------------- #
+
+
+@dataclass
+class ScanStats:
+    compiles: int = 0
+    hits: int = 0
+    scans: int = 0
+    batch_scans: int = 0
+    batch_rows: int = 0
+
+    def snapshot(self) -> Dict[str, int]:
+        return dict(self.__dict__)
+
+
+_BACKENDS = {"numpy": NumpyBackend, "pallas": PallasBackend}
+
+
+class ScanEngine:
+    """Compile-once, bind-many predicate scans with pluggable backends.
+
+    One engine instance is the scan authority for one PredTrace / Executor:
+    it owns the program cache (keyed by predicate structure), the jit cache
+    for the device path, and the scan statistics the tests and benchmarks
+    assert on.
+    """
+
+    def __init__(self, backend: str = "numpy", **backend_opts):
+        if isinstance(backend, str):
+            if backend not in _BACKENDS:
+                raise ValueError(
+                    f"unknown scan backend {backend!r}; have {sorted(_BACKENDS)}"
+                )
+            self.backend = _BACKENDS[backend](**backend_opts)
+        else:
+            self.backend = backend
+        self._programs: Dict[Tuple, AtomProgram] = {}
+        self._jit_cache: Dict[Tuple, Callable] = {}
+        # sorted-column index per (table, col): the batch path's scan
+        # structure, built once and reused by every batched re-binding
+        self._sorts: Dict[Tuple[int, str], Tuple[weakref.ref, np.ndarray, np.ndarray]] = {}
+        self.stats = ScanStats()
+
+    # ------------------------------------------------------------------ #
+    def compile(self, pred: Expr) -> AtomProgram:
+        """Compiled atom program for ``pred``; cached by structural key so a
+        new target-row binding never recompiles."""
+        sig = key(pred)
+        prog = self._programs.get(sig)
+        if prog is None:
+            prog = compile_pred(pred)
+            self._programs[sig] = prog
+            self.stats.compiles += 1
+        else:
+            self.stats.hits += 1
+        return prog
+
+    # ------------------------------------------------------------------ #
+    def scan(self, pred: Expr, table: Table,
+             binding: Optional[Dict[str, object]] = None) -> np.ndarray:
+        """Boolean mask of ``pred`` over ``table`` — drop-in for
+        ``eval_np(pred, table.cols, binding, n=table.nrows).astype(bool)``."""
+        self.stats.scans += 1
+        prog = self.compile(pred)
+        return self.backend.scan(prog, table, binding or {})
+
+    # ------------------------------------------------------------------ #
+    def scan_batch(self, pred: Expr, table: Table,
+                   bindings: Sequence[Dict[str, object]]) -> List[np.ndarray]:
+        """B boolean masks, one scan over ``table``: equivalent to
+        ``[self.scan(pred, table, b) for b in bindings]`` but with the whole
+        batch answered in one vectorized pass (see :meth:`scan_batch_idx`)."""
+        n = table.nrows
+        out = []
+        for idx in self.scan_batch_idx(pred, table, bindings):
+            m = np.zeros(n, dtype=bool)
+            m[idx] = True
+            out.append(m)
+        return out
+
+    def scan_batch_idx(self, pred: Expr, table: Table,
+                       bindings: Sequence[Dict[str, object]]) -> List[np.ndarray]:
+        """Matching row indices of ``pred`` under each binding — the batched
+        scan core.
+
+        One equality atom (the *pivot*) is answered for all B bindings by
+        binary search against a cached sorted-column index, built once per
+        table/column and reused across batches.  The surviving candidates of
+        all bindings are then filtered **flattened** — one vectorized pass
+        per remaining atom over ``sum(len(cand_b))`` rows with per-binding
+        thresholds gathered via ``np.repeat`` — so per-binding work is a few
+        hundred elements, not a table scan.  Atoms that resist vectorization
+        (array-valued bindings, param-bearing residuals) run per binding on
+        the already-tiny candidate sets."""
+        B = len(bindings)
+        if B == 0:
+            return []
+        self.stats.batch_scans += 1
+        self.stats.batch_rows += B
+        prog = self.compile(pred)
+        n = table.nrows
+        cols = table.cols
+        be = self.backend if isinstance(self.backend, NumpyBackend) else NumpyBackend()
+
+        # binding-independent predicate: one scan answers every row
+        if not params_of(pred):
+            idx = np.nonzero(self.backend.scan(prog, table, {}))[0]
+            return [idx] * B
+
+        # classify parameter atoms over the whole batch -------------------- #
+        eq_atoms: List[Tuple[CmpAtom, np.ndarray]] = []  # all-scalar ==
+        vec_cmp: List[Tuple[CmpAtom, np.ndarray]] = []  # all-scalar < <= > >= !=
+        row_cmp: List[CmpAtom] = []  # some binding is array-valued
+        for a in prog.param_cmp:
+            vals = [_bind(b, a.rhs) for b in bindings]
+            if any(_is_setlike(v) for v in vals):
+                row_cmp.append(a)
+            elif a.op == EQ:
+                eq_atoms.append((a, np.asarray(vals)))
+            else:
+                vec_cmp.append((a, np.asarray(vals)))
+        row_isin = [a for a in prog.isin_atoms if a.kind == "param"]
+
+        # pivot atom: first NaN-free equality (NaN thresholds break binary
+        # search order; np.equal semantics for them are all-False anyway, so
+        # NaN-carrying atoms are fine as candidate filters but not as pivot)
+        pivot = next(
+            (i for i, (_, vals) in enumerate(eq_atoms) if not _has_nan(vals)),
+            None,
+        )
+
+        if pivot is not None and n:
+            # B binary searches against the cached sorted-column index
+            a0, vals0 = eq_atoms[pivot]
+            order, sorted_vals = self._sorted_col(table, a0.col)
+            lo = np.searchsorted(sorted_vals, vals0, side="left")
+            hi = np.searchsorted(sorted_vals, vals0, side="right")
+            lens = hi - lo
+            flat = np.concatenate([order[lo[b]:hi[b]] for b in range(B)]) \
+                if lens.sum() else np.empty(0, dtype=order.dtype)
+            rest_eq = eq_atoms[:pivot] + eq_atoms[pivot + 1:]
+            statics_pending = True  # static atoms applied per candidate
+        else:
+            # no usable equality: one shared pass for the static conjunction
+            static_mask = np.ones(n, dtype=bool)
+            for a in prog.static_cmp:
+                static_mask &= be._cmp_mask(a, table, {}, n)
+            for a in prog.isin_atoms:
+                if a.kind == "lit":
+                    static_mask &= be._isin_mask(a, table, {}, n)
+            if prog.residual_static is not None:
+                static_mask &= np.asarray(
+                    eval_np(prog.residual_static, table.cols, {}, n=n), bool
+                )
+            idx0 = np.nonzero(static_mask)[0]
+            lens = np.full(B, len(idx0), dtype=np.int64)
+            flat = np.tile(idx0, B)
+            rest_eq = eq_atoms  # filtered below like any other atom
+            statics_pending = False
+
+        rep = np.repeat(np.arange(B), lens)
+
+        # vectorized filters over the flattened candidates ----------------- #
+        if len(flat):
+            keep = np.ones(len(flat), dtype=bool)
+            for a, vals in rest_eq:
+                keep &= np.equal(cols[a.col][flat], vals[rep])
+            for a, vals in vec_cmp:
+                keep &= _NP_CMP[a.op](cols[a.col][flat], vals[rep])
+            if statics_pending:
+                for a in prog.static_cmp:
+                    rhs = cols[a.rhs][flat] if a.kind == "col" else a.rhs
+                    keep &= _NP_CMP[a.op](cols[a.col][flat], rhs)
+                for a in prog.isin_atoms:
+                    if a.kind == "lit":
+                        keep &= _member(cols[a.col][flat], a.rhs)
+                if prog.residual_static is not None:
+                    env = {c: cols[c][flat] for c in prog.residual_static_cols
+                           if c in cols}
+                    keep &= np.asarray(
+                        eval_np(prog.residual_static, env, {}, n=len(flat)), bool
+                    )
+            flat, rep = flat[keep], rep[keep]
+
+        # split back per binding ------------------------------------------- #
+        counts = np.bincount(rep, minlength=B)
+        idxs = np.split(flat, np.cumsum(counts)[:-1])
+
+        # atoms that resist flattening: per binding, on tiny candidate sets  #
+        if row_cmp or row_isin or prog.residual_dynamic is not None:
+            for b, binding in enumerate(bindings):
+                idx = idxs[b]
+                for a in row_cmp:
+                    if not len(idx):
+                        break
+                    v = _bind(binding, a.rhs)
+                    colv = cols[a.col][idx]
+                    if _is_setlike(v):
+                        if a.op == EQ:
+                            keep = _member(colv, v)
+                        else:
+                            keep = np.asarray(
+                                eval_np(a.expr, {a.col: colv}, binding,
+                                        n=len(idx)),
+                                bool,
+                            )
+                    else:
+                        keep = _NP_CMP[a.op](colv, v)
+                    idx = idx[keep]
+                for a in row_isin:
+                    if not len(idx):
+                        break
+                    idx = idx[_member(cols[a.col][idx], _bind(binding, a.rhs))]
+                if prog.residual_dynamic is not None and len(idx):
+                    env = {c: cols[c][idx] for c in prog.residual_dynamic_cols
+                           if c in cols}
+                    keep = np.asarray(
+                        eval_np(prog.residual_dynamic, env, binding, n=len(idx)),
+                        bool,
+                    )
+                    idx = idx[keep]
+                idxs[b] = idx
+        return idxs
+
+    def member_batch_idx(self, table: Table, lhs: Expr,
+                         value_sets: Sequence[np.ndarray]) -> List[np.ndarray]:
+        """Row indices where ``eval(lhs) IN value_set``, one index array per
+        set, answered against a single sorted pass over ``lhs`` (the cached
+        sorted-column index when ``lhs`` is a plain column).  ``np.isin``
+        equality semantics: NaN never matches."""
+        if isinstance(lhs, Col):
+            order, sorted_vals = self._sorted_col(table, lhs.name)
+        else:
+            v = np.asarray(eval_np(lhs, table.cols, {}, n=table.nrows))
+            order = np.argsort(v, kind="stable")
+            sorted_vals = v[order]
+        out: List[np.ndarray] = []
+        for vals in value_sets:
+            u = np.unique(np.asarray(vals))
+            if u.dtype.kind == "f":
+                u = u[~np.isnan(u)]  # searchsorted would pair NaN with NaN
+            lo = np.searchsorted(sorted_vals, u, side="left")
+            hi = np.searchsorted(sorted_vals, u, side="right")
+            segs = [order[l:h] for l, h in zip(lo, hi) if h > l]
+            if segs:
+                idx = np.concatenate(segs)
+                idx.sort()
+            else:
+                idx = np.empty(0, dtype=order.dtype)
+            out.append(idx)
+        return out
+
+    def _sorted_col(self, table: Table, col: str):
+        """(order, sorted_values) for a column — the batch path's scan index,
+        computed once per table/column and cached (tables are immutable)."""
+        ck = (id(table), col)
+        entry = self._sorts.get(ck)
+        if entry is not None and entry[0]() is table:
+            return entry[1], entry[2]
+        arr = np.asarray(table.cols[col])
+        order = np.argsort(arr, kind="stable")
+        sorted_vals = arr[order]
+        # weakref callback evicts on table death (dict would otherwise pin
+        # two full-length arrays per dead table for the engine's lifetime)
+        ref = weakref.ref(table, lambda _, k=ck, d=self._sorts: d.pop(k, None))
+        self._sorts[ck] = (ref, order, sorted_vals)
+        return order, sorted_vals
+
+    # ------------------------------------------------------------------ #
+    def jit_scan(self, pred: Expr) -> Callable:
+        """Structure-cached ``jax.jit`` of ``eval_jnp(pred, env, binding)`` —
+        the device scan path (``core/distributed.py``).  Cached by structural
+        key, so rebinding V-sets / thresholds between refinement iterations
+        never retraces."""
+        sig = ("jit", key(pred))
+        fn = self._jit_cache.get(sig)
+        if fn is None:
+            import jax
+
+            from .expr import eval_jnp
+
+            def run(env, binding):
+                return eval_jnp(pred, env, binding)
+
+            fn = jax.jit(run)
+            self._jit_cache[sig] = fn
+            self.stats.compiles += 1
+        else:
+            self.stats.hits += 1
+        return fn
+
+
+_DEFAULT_ENGINE: Optional[ScanEngine] = None
+
+
+def default_engine() -> ScanEngine:
+    """Process-wide fallback engine for callers that don't own one (direct
+    ``refine`` calls, ad-hoc scans).  PredTrace/Executor instances each own
+    their own engine instead."""
+    global _DEFAULT_ENGINE
+    if _DEFAULT_ENGINE is None:
+        _DEFAULT_ENGINE = ScanEngine()
+    return _DEFAULT_ENGINE
+
+
+def _has_nan(vals) -> bool:
+    for v in vals:
+        try:
+            if np.isnan(v):
+                return True
+        except TypeError:
+            pass
+    return False

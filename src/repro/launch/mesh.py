@@ -14,24 +14,24 @@ from __future__ import annotations
 
 import jax
 
+from ..compat import AxisType, make_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_host_mesh(data: int = 2, model: int = 2, pod: int = 1):
     """Small mesh over host devices for tests (subprocesses set
     ``--xla_force_host_platform_device_count`` accordingly)."""
     if pod > 1:
-        return jax.make_mesh(
+        return make_mesh(
             (pod, data, model), ("pod", "data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 3,
+            axis_types=(AxisType.Auto,) * 3,
         )
-    return jax.make_mesh(
+    return make_mesh(
         (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+        axis_types=(AxisType.Auto,) * 2,
     )

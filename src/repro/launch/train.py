@@ -23,6 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..checkpoint.manager import CheckpointManager
+from ..compat import AxisType, make_mesh
 from ..configs import get, smoke_config
 from ..data.pipeline import LineageDataPipeline, synth_corpus
 from ..models import model as M
@@ -50,9 +51,9 @@ def main(argv=None):
     shape = ShapeConfig("cli", args.seq, args.batch, "train")
 
     ndev = len(jax.devices())
-    mesh = jax.make_mesh(
+    mesh = make_mesh(
         (ndev, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+        axis_types=(AxisType.Auto,) * 2,
     )
     opt_cfg = adamw.AdamWConfig(lr=args.lr, total_steps=args.steps, warmup_steps=5)
 

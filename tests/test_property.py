@@ -8,6 +8,8 @@ Invariants (paper Lemmas 3.1 / 3.2):
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import Executor, PredTrace

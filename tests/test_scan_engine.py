@@ -1,0 +1,221 @@
+"""ScanEngine: compiled predicate scans + batched lineage queries.
+
+Differential guarantees:
+  1. ``engine.scan`` == ``eval_np`` on every predicate shape it compiles.
+  2. ``PredTrace.query_batch(rows)`` == ``[query(r) for r in rows]`` across
+     the TPC-H suite (the tentpole's correctness contract).
+  3. NumPy backend == Pallas backend (interpret mode) masks.
+  4. Compiled atom programs are cache-hit on repeated queries of a plan.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import Executor, PredTrace, ScanEngine
+from repro.core.expr import Col, IsIn, Param, UnaryOp, eval_np, land, lor
+from repro.core.scan import compile_pred
+from repro.core.table import Table
+from repro.tpch import ALL_QUERIES
+
+from conftest import lineage_sets
+
+
+@pytest.fixture()
+def scan_table():
+    rng = np.random.default_rng(7)
+    n = 4096
+    return Table.from_dict(
+        {
+            "a": rng.integers(0, 50, n).astype(np.int32),
+            "b": rng.integers(0, 1000, n).astype(np.int64),
+            "c": rng.integers(19920101, 19981231, n).astype(np.int32),
+            "d": rng.normal(size=n),
+        },
+        name="t",
+    )
+
+
+PREDS = [
+    (Col("a") >= 10, {}),
+    (land(Col("a") >= 10, Col("b") < 900), {}),
+    (land(Col("a").eq(Param("v")), Col("b") > 100), {"v": 7}),
+    (land(Col("a").eq(Param("v")), Col("b").eq(Param("w"))), {"v": 3, "w": 55}),
+    # array binding: equality becomes membership
+    (Col("b").eq(Param("v")), {"v": np.array([5, 17, 200, 999])}),
+    (IsIn(Col("a"), (1, 2, 3)), {}),
+    (IsIn(Col("a"), Param("s")), {"s": np.array([4, 44])}),
+    # residual: year() UDF and OR-tree stay on the tree evaluator
+    (UnaryOp("year", Col("c")).eq(1995), {}),
+    (lor(Col("a") < 2, Col("b") > 990), {}),
+    (land(Col("a") < Col("b"), Col("c") >= 19940101), {}),
+    (Col("d") <= 0.25, {}),
+]
+
+
+@pytest.mark.parametrize("i", range(len(PREDS)))
+def test_scan_matches_eval_np(scan_table, i):
+    pred, binding = PREDS[i]
+    eng = ScanEngine()
+    want = np.asarray(
+        eval_np(pred, scan_table.cols, binding, n=scan_table.nrows), bool
+    )
+    got = eng.scan(pred, scan_table, binding)
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("i", range(len(PREDS)))
+def test_scan_batch_matches_scan(scan_table, i):
+    pred, binding = PREDS[i]
+    eng = ScanEngine()
+    # vary scalar bindings across the batch; keep arrays fixed
+    bindings = []
+    for k in range(8):
+        b = {
+            name: (v + k if np.isscalar(v) else v) for name, v in binding.items()
+        }
+        bindings.append(b)
+    batched = eng.scan_batch(pred, scan_table, bindings)
+    for b, m in zip(bindings, batched):
+        np.testing.assert_array_equal(m, eng.scan(pred, scan_table, b))
+
+
+def test_numpy_vs_pallas_backend(scan_table):
+    np_eng = ScanEngine(backend="numpy")
+    pl_eng = ScanEngine(backend="pallas", interpret=True)
+    for pred, binding in PREDS:
+        np.testing.assert_array_equal(
+            pl_eng.scan(pred, scan_table, binding),
+            np_eng.scan(pred, scan_table, binding),
+            err_msg=repr(pred),
+        )
+
+
+def test_program_cache_and_compiled_atoms(scan_table):
+    eng = ScanEngine()
+    pred = land(Col("a").eq(Param("v")), Col("b") > 100)
+    eng.scan(pred, scan_table, {"v": 1})
+    compiles = eng.stats.compiles
+    eng.scan(pred, scan_table, {"v": 2})  # re-binding must not recompile
+    assert eng.stats.compiles == compiles
+    assert eng.stats.hits >= 1
+    prog = compile_pred(pred)
+    assert [(a.col, a.op, a.kind) for a in prog.cmp_atoms] == [
+        ("a", 0, "param"), ("b", 4, "lit"),
+    ]
+    assert prog.residual_static is None and prog.residual_dynamic is None
+
+
+def test_op_codes_match_pred_filter_kernel():
+    """The engine's atom op table is the kernel's contract — keep in sync."""
+    from repro.core import scan as S
+    from repro.kernels.pred_filter import OPS as KERNEL_OPS
+
+    assert S.OPS == KERNEL_OPS
+
+
+@pytest.mark.parametrize("qname", sorted(ALL_QUERIES))
+def test_query_batch_matches_sequential(tpch_db, qname):
+    plan = ALL_QUERIES[qname](tpch_db)
+    res = Executor(tpch_db).run(plan)
+    if res.output.nrows == 0:
+        pytest.skip(f"{qname} empty at this scale factor")
+    pt = PredTrace(tpch_db, plan)
+    pt.infer(stats=res.stats)
+    pt.run()
+    rows = [i % res.output.nrows for i in range(min(res.output.nrows * 2, 8))]
+    seq = [pt.query(r) for r in rows]
+    bat = pt.query_batch(rows)
+    assert len(bat) == len(rows)
+    for s, b in zip(seq, bat):
+        assert lineage_sets(s.lineage) == lineage_sets(b.lineage), qname
+
+
+@pytest.mark.parametrize("qname", ["q3", "q10", "q5"])
+def test_query_batch_trailing_dead_row(tpch_db, qname):
+    """A trailing no-match target must not perturb earlier answers: the
+    constant-segment detection runs reduceat over non-empty segments only
+    (a clipped offset would truncate the last non-empty segment)."""
+    plan = ALL_QUERIES[qname](tpch_db)
+    res = Executor(tpch_db).run(plan)
+    if res.output.nrows == 0:
+        pytest.skip(f"{qname} empty at this scale factor")
+    pt = PredTrace(tpch_db, plan)
+    pt.infer(stats=res.stats)
+    pt.run()
+    out = pt.exec_result.output
+    dead = {c: -987654 for c in out.columns}
+    rows = list(range(min(res.output.nrows, 4)))
+    seq = [pt.query(r) for r in rows]
+    bat = pt.query_batch(rows + [dead])
+    assert bat[-1].total_rows() == 0
+    for s, b in zip(seq, bat):
+        assert lineage_sets(s.lineage) == lineage_sets(b.lineage), qname
+
+
+def test_query_batch_empty_and_dict_rows(tpch_db):
+    plan = ALL_QUERIES["q3"](tpch_db)
+    pt = PredTrace(tpch_db, plan)
+    pt.infer()
+    pt.run()
+    assert pt.query_batch([]) == []
+    out = pt.exec_result.output
+    row = {c: out.cols[c][0] for c in out.columns}
+    (ans,) = pt.query_batch([row])
+    assert lineage_sets(ans.lineage) == lineage_sets(pt.query(0).lineage)
+
+
+def test_repeated_queries_hit_program_cache(tpch_db):
+    plan = ALL_QUERIES["q4"](tpch_db)
+    res = Executor(tpch_db).run(plan)
+    pt = PredTrace(tpch_db, plan)
+    pt.infer(stats=res.stats)
+    pt.run()
+    pt.query(0)
+    compiles = pt.scan_engine.stats.compiles
+    hits = pt.scan_engine.stats.hits
+    pt.query(0)  # same plan, same predicates: all cache hits
+    assert pt.scan_engine.stats.compiles == compiles
+    assert pt.scan_engine.stats.hits > hits
+
+
+def test_executor_filter_routes_through_engine(tpch_db):
+    plan = ALL_QUERIES["q6"](tpch_db)
+    ex = Executor(tpch_db)
+    assert ex.scan_engine.stats.scans == 0
+    ex.run(plan)
+    assert ex.scan_engine.stats.scans > 0
+
+
+def test_query_iterative_uses_engine(tpch_db):
+    plan = ALL_QUERIES["q4"](tpch_db)
+    pt = PredTrace(tpch_db, plan)
+    pt.infer_iterative()
+    pt.run_unmodified()
+    if pt.exec_result.output.nrows == 0:
+        pytest.skip("empty")
+    scans_before = pt.scan_engine.stats.scans
+    ans = pt.query_iterative(0)
+    assert pt.scan_engine.stats.scans > scans_before
+    assert ans.total_rows() > 0
+
+
+def test_pallas_engine_end_to_end(mini_catalog):
+    """Whole PredTrace pipeline on the Pallas backend (interpret mode)."""
+    from repro.core import ops as O
+    from repro.core.expr import Col, land
+
+    cat = mini_catalog
+    sub = O.Filter(O.Source("lineitem"), Col("l_commitdate") < Col("l_receiptdate"))
+    main = O.Filter(
+        O.Source("orders"),
+        land(Col("o_orderdate") >= 19930701, Col("o_orderdate") < 19931001),
+    )
+    semi = O.SemiJoin(main, sub, on=[("o_orderkey", "l_orderkey")])
+    gb = O.GroupBy(semi, ["o_orderpriority"], {"order_count": O.Agg("count")})
+    plan = O.Sort(gb, [("o_orderpriority", True)])
+
+    pt = PredTrace(cat, plan, scan_engine=ScanEngine(backend="pallas"))
+    pt.infer()
+    pt.run()
+    ans = pt.query(0)
+    assert lineage_sets(ans.lineage) == {"orders": {0, 2}, "lineitem": {0, 3, 5}}

@@ -16,13 +16,36 @@ from repro.tpch import ALL_QUERIES, generate
 SF_MAIN = 0.02
 SF_BASELINE = 0.005
 
-_dbs: Dict[float, Dict[str, Table]] = {}
+# explicit dbgen seed, threaded through every suite so emitted numbers
+# (BENCH_scan.json / BENCH_store.json) are reproducible run-to-run and
+# overridable from ``benchmarks.run --seed``
+SEED = 1
+
+_dbs: Dict[tuple, Dict[str, Table]] = {}
+
+
+def set_scale(sf: float) -> None:
+    """Override every suite's scale factor (``benchmarks.run --sf``) — the
+    CI bench-smoke job runs the full matrix at a tiny SF."""
+    global SF_MAIN, SF_BASELINE
+    SF_MAIN = SF_BASELINE = sf
+
+
+def set_seed(seed: int) -> None:
+    global SEED
+    SEED = seed
 
 
 def db(sf: float) -> Dict[str, Table]:
-    if sf not in _dbs:
-        _dbs[sf] = generate(sf=sf, seed=1)
-    return _dbs[sf]
+    key = (sf, SEED)
+    if key not in _dbs:
+        _dbs[key] = generate(sf=sf, seed=SEED)
+    return _dbs[key]
+
+
+def lineage_sets(ans: Dict[str, "np.ndarray"]) -> Dict[str, set]:
+    """Normalize a lineage answer for comparison (shared by the suites)."""
+    return {k: set(np.asarray(v).tolist()) for k, v in ans.items() if len(v)}
 
 
 def time_ms(fn: Callable, repeat: int = 3) -> float:

@@ -9,9 +9,22 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", type=str, default=None,
                     help="comma-separated bench names (default: all)")
+    ap.add_argument("--sf", type=float, default=None,
+                    help="override every suite's TPC-H scale factor "
+                         "(CI bench-smoke runs --sf 0.005)")
+    ap.add_argument("--seed", type=int, default=None,
+                    help="dbgen seed (default 1); threaded through so "
+                         "emitted numbers are reproducible run-to-run")
     args = ap.parse_args()
 
+    from . import common
     from .common import emit
+
+    if args.sf is not None:
+        common.set_scale(args.sf)
+    if args.seed is not None:
+        common.set_seed(args.seed)
+
     from .kernels_bench import bench_kernels
     from .paper_tables import (
         bench_coverage, bench_fpr, bench_inter_opt, bench_no_inter,
@@ -20,6 +33,7 @@ def main() -> None:
     from .pipelines import bench_pipelines
     from .roofline_bench import bench_roofline
     from .scan_bench import bench_scan_engine
+    from .store_bench import bench_store
 
     benches = {
         "coverage": bench_coverage,       # paper Table 4
@@ -32,6 +46,7 @@ def main() -> None:
         "pipelines": bench_pipelines,     # paper Figure 12 / Table 7
         "kernels": bench_kernels,         # kernel-path scans
         "scan_engine": bench_scan_engine, # batched vs single-row query latency
+        "store": bench_store,             # compressed store + budget planner
         "roofline": bench_roofline,       # §Roofline (reads dry-run artifacts)
     }
     selected = args.only.split(",") if args.only else list(benches)

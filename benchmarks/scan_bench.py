@@ -20,14 +20,19 @@ from repro.core import Executor, PredTrace, ScanEngine
 from repro.core.expr import Col, Param, eval_np, land
 from repro.tpch import ALL_QUERIES
 
-from .common import db, time_ms
+from . import common
+from .common import db, lineage_sets, time_ms
 
 BATCH = 64
 OUT_JSON = Path("BENCH_scan.json")
 
 
-def _lineage_sets(ans):
-    return {k: set(np.asarray(v).tolist()) for k, v in ans.items() if len(v)}
+def _sf_sweep():
+    """(sf, queries) pairs, honoring a ``--sf`` override: at tiny scale the
+    two sweep points collapse into one so result tags stay unique."""
+    if common.SF_MAIN <= 0.01:
+        return ((common.SF_MAIN, ("q3", "q5", "q10")),)
+    return ((0.01, ("q3",)), (common.SF_MAIN, ("q3", "q5", "q10")))
 
 
 def _prepared(d, qname: str) -> PredTrace:
@@ -43,8 +48,10 @@ def bench_scan_engine() -> List[tuple]:
     rows: List[tuple] = []
     results: Dict[str, object] = {}
 
+    results["config"] = {"seed": common.SEED, "sf_main": common.SF_MAIN}
+
     # ---- batched vs sequential lineage queries (acceptance metric) ------ #
-    for sf, qnames in ((0.01, ("q3",)), (0.02, ("q3", "q5", "q10"))):
+    for sf, qnames in _sf_sweep():
         d = db(sf)
         for qname in qnames:
             pt = _prepared(d, qname)
@@ -59,7 +66,7 @@ def bench_scan_engine() -> List[tuple]:
             seq = [pt.query(r) for r in targets]
             bat = pt.query_batch(targets)
             identical = all(
-                _lineage_sets(s.lineage) == _lineage_sets(b.lineage)
+                lineage_sets(s.lineage) == lineage_sets(b.lineage)
                 for s, b in zip(seq, bat)
             )
             speedup = t_seq / max(t_bat, 1e-9)
@@ -74,7 +81,7 @@ def bench_scan_engine() -> List[tuple]:
             }
 
     # ---- interpreted eval_np vs compiled atom-program scan -------------- #
-    d = db(0.02)
+    d = db(common.SF_MAIN)
     li = d["lineitem"]
     pred = land(
         Col("l_shipdate") > 19950315,

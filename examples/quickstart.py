@@ -62,6 +62,35 @@ def main():
     )
     print(f"pallas-backend lineage matches numpy oracle: {same_pl}")
 
+    print("\n== compressed intermediate store + byte budget ==")
+    # store=True materializes stages *encoded* (core/store.py); lineage
+    # queries then scan the compressed columns in situ.  budget_bytes= caps
+    # how much intermediate state is kept: stages that don't fit degrade
+    # their dependent source predicates to the iterative/superset path —
+    # budget_bytes=0 is pure Algorithm 3, None keeps everything precise.
+    pt_store = PredTrace(db, plan, store=True)
+    pt_store.infer()
+    pt_store.run()
+    store = pt_store.store
+    print(f"store: {store.raw_nbytes()/1024:.1f} KiB raw -> "
+          f"{store.nbytes()/1024:.1f} KiB encoded "
+          f"({store.compression_ratio():.1f}x), encodings {store.encodings()}")
+    a_st = pt_store.query(0)
+    same_st = all(
+        np.array_equal(np.sort(ans.lineage[t]), np.sort(a_st.lineage[t]))
+        for t in ans.lineage
+    )
+    print(f"store-backed lineage matches raw path: {same_st}")
+
+    half = max(store.nbytes() // 2, 1) - 1  # too small for the q4 stage
+    pt_budget = PredTrace(db, plan, budget_bytes=half)
+    pt_budget.infer()
+    pt_budget.run()
+    a_b = pt_budget.query(0)
+    print(f"budget_bytes={half}: kept {len(pt_budget.mat_plan.kept)} of "
+          f"{len(pt_budget.lineage_plan.stages)} stages; superset tables: "
+          f"{a_b.detail.get('superset_tables', [])}")
+
     print("\n== without intermediate results (Algorithm 3) ==")
     pt2 = PredTrace(db, plan)
     pt2.infer_iterative()

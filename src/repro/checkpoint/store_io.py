@@ -1,0 +1,122 @@
+"""Spill the compressed intermediate store to disk and reload it.
+
+A materialized lineage plan outlives the process that executed the pipeline:
+queries can arrive hours later, from another worker, or after a restart.
+This module persists an :class:`~repro.core.store.IntermediateStore` in its
+*encoded* form — the on-disk bytes are the same compressed columns the
+in-situ scan path consumes, so reload is a handful of ``np.load`` calls, not
+a re-execution of the pipeline.
+
+Same durability idioms as ``checkpoint/manager.py``:
+
+* **Atomicity** — writes stage into ``<name>.tmp``; the previous spill is
+  moved aside to ``<name>.old`` before the staged directory is promoted (and
+  ``load_store`` falls back to ``.old``), so no crash point loses both
+  copies.
+* **Integrity** — per-payload SHA-256 prefixes recorded in the manifest and
+  verified on load (``verify=False`` to skip).
+
+Layout (one directory per spill)::
+
+    <root>/<name>.tmp/...          # staged writes
+    <root>/<name>/
+        manifest.json              # stages, encodings, dtypes, hashes
+        s<node>_<i>.npy ...        # one file per encoded payload array
+
+Unlike ``CheckpointManager`` this is numpy-only (no JAX dependency): the
+store serves host-side lineage queries.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+from pathlib import Path
+from typing import Dict
+
+import numpy as np
+
+from ..core.store import IntermediateStore, StoredTable, column_from_state
+
+
+def _hash(arr: np.ndarray) -> str:
+    return hashlib.sha256(np.ascontiguousarray(arr).tobytes()).hexdigest()[:16]
+
+
+def save_store(root, store: IntermediateStore, name: str = "store") -> Path:
+    """Atomically persist every stage of ``store`` under ``root/name``."""
+    root = Path(root)
+    root.mkdir(parents=True, exist_ok=True)
+    tmp, final = root / f"{name}.tmp", root / name
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    manifest: Dict = {
+        "budget_bytes": store.budget_bytes,
+        "nbytes": store.nbytes(),
+        "raw_nbytes": store.raw_nbytes(),
+        "stages": {},
+    }
+    for nid, st in store.stages.items():
+        cols = {}
+        for i, (col, enc) in enumerate(st.enc.items()):
+            meta, arrays = enc.state()
+            files = {}
+            for aname, arr in arrays.items():
+                fname = f"s{nid}_{i}_{aname}.npy"
+                np.save(tmp / fname, arr)
+                files[aname] = {"file": fname, "sha": _hash(arr)}
+            cols[col] = {"meta": meta, "arrays": files}
+        manifest["stages"][str(nid)] = {
+            "name": st.name,
+            "nrows": st.nrows,
+            "raw_nbytes": st.raw_nbytes,
+            "dicts": st.dicts,
+            "columns": cols,
+        }
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    # never a window without a good spill: move the previous one aside,
+    # promote the staged write, then drop the old copy
+    old = root / f"{name}.old"
+    if final.exists():
+        if old.exists():
+            shutil.rmtree(old)
+        os.replace(final, old)
+    os.replace(tmp, final)
+    if old.exists():
+        shutil.rmtree(old)
+    return final
+
+
+def load_store(root, name: str = "store", verify: bool = True) -> IntermediateStore:
+    """Reload a spilled store; encoded columns come back byte-identical, so
+    in-situ scans and lineage answers match the pre-spill store exactly.
+    Falls back to the ``.old`` copy if a crash interrupted a re-spill between
+    demoting the previous directory and promoting the staged one."""
+    path = Path(root) / name
+    if not (path / "manifest.json").exists() and (
+        Path(root) / f"{name}.old" / "manifest.json"
+    ).exists():
+        path = Path(root) / f"{name}.old"
+    manifest = json.loads((path / "manifest.json").read_text())
+    store = IntermediateStore(budget_bytes=manifest.get("budget_bytes"))
+    for nid_s, sm in manifest["stages"].items():
+        enc = {}
+        for col, cm in sm["columns"].items():
+            arrays = {}
+            for aname, fm in cm["arrays"].items():
+                arr = np.load(path / fm["file"])
+                if verify and _hash(arr) != fm["sha"]:
+                    raise IOError(
+                        f"store spill corrupt: stage {nid_s} column {col!r} "
+                        f"payload {aname!r} hash mismatch"
+                    )
+                arrays[aname] = arr
+            enc[col] = column_from_state(cm["meta"], arrays)
+        store.stages[int(nid_s)] = StoredTable(
+            enc, {k: list(v) for k, v in sm["dicts"].items()},
+            sm["name"], sm["nrows"], sm["raw_nbytes"],
+        )
+    return store

@@ -6,9 +6,12 @@ from .executor import ExecResult, Executor
 from .expr import Col, Expr, IsIn, Lit, Param, ParamSet, land, lnot, lor
 from .iterative import IterativeInference, refine
 from .lineage import LineageAnswer, PredTrace
-from .plan import LineageInference, LineagePlan
+from .plan import (
+    LineageInference, LineagePlan, MaterializationPlan, plan_materialization,
+)
 from .pushdown import Pushdown
 from .scan import AtomProgram, NumpyBackend, PallasBackend, ScanEngine
+from .store import InSituBackend, IntermediateStore, StoredTable, encode_column
 from .table import Table
 
 __all__ = [
@@ -17,4 +20,6 @@ __all__ = [
     "oracle_lineage_for_values", "PredTrace", "LineageAnswer",
     "LineageInference", "LineagePlan", "Pushdown", "IterativeInference",
     "refine", "ScanEngine", "AtomProgram", "NumpyBackend", "PallasBackend",
+    "IntermediateStore", "StoredTable", "InSituBackend", "encode_column",
+    "MaterializationPlan", "plan_materialization",
 ]

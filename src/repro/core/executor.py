@@ -24,6 +24,7 @@ import numpy as np
 from . import ops as O
 from .expr import Expr, eval_np
 from .scan import ScanEngine
+from .store import IntermediateStore
 from .table import RID, Table, concat_tables
 
 
@@ -124,8 +125,11 @@ class NodeStats:
 class ExecResult:
     output: Table
     stats: Dict[int, NodeStats]
-    materialized: Dict[int, Table]
+    # node id -> materialized intermediate: a raw Table, or a compressed
+    # StoredTable when the run went through an IntermediateStore
+    materialized: Dict[int, object]
     seconds: float = 0.0
+    store: Optional[IntermediateStore] = None
 
 
 class Executor:
@@ -146,13 +150,17 @@ class Executor:
         self,
         plan: O.Node,
         materialize: Optional[Dict[int, Optional[List[str]]]] = None,
+        store: Optional[IntermediateStore] = None,
     ) -> ExecResult:
         """Execute ``plan``.  ``materialize`` maps node-id -> columns to keep
-        (None = all) for the intermediate results PredTrace decided to save."""
+        (None = all) for the intermediate results PredTrace decided to save.
+        With a ``store``, each saved intermediate is column-projected and
+        *encoded* into it (compressed columnar form) instead of being kept as
+        a raw Table; ``ExecResult.materialized`` then holds StoredTables."""
         materialize = materialize or {}
         cache: Dict[int, Table] = {}
         stats: Dict[int, NodeStats] = {}
-        saved: Dict[int, Table] = {}
+        saved: Dict[int, object] = {}
         t_start = time.perf_counter()
 
         def rec(n: O.Node) -> Table:
@@ -164,12 +172,13 @@ class Executor:
             stats[n.id] = NodeStats(out.nrows, out.nbytes(), dt)
             if n.id in materialize:
                 keep = materialize[n.id]
-                saved[n.id] = out if keep is None else out.project([c for c in keep if out.has(c)])
+                proj = out if keep is None else out.project([c for c in keep if out.has(c)])
+                saved[n.id] = proj if store is None else store.put(n.id, proj)
             cache[n.id] = out
             return out
 
         out = rec(plan)
-        return ExecResult(out, stats, saved, time.perf_counter() - t_start)
+        return ExecResult(out, stats, saved, time.perf_counter() - t_start, store=store)
 
     # ------------------------------------------------------------------ #
     def _exec(self, n: O.Node, rec) -> Table:

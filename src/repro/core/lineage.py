@@ -26,8 +26,12 @@ from .expr import (
     params_of,
 )
 from .iterative import IterativeInference, IterativePlan, RefineResult, refine
-from .plan import LineageInference, LineagePlan, SourcePred, Stage
+from .plan import (
+    LineageInference, LineagePlan, MaterializationPlan, SourcePred, Stage,
+    plan_materialization,
+)
 from .scan import ScanEngine
+from .store import IntermediateStore, StoredTable
 from .table import Table
 
 
@@ -217,6 +221,8 @@ class PredTrace:
         optimize_placement: bool = True,
         precise_minmax: bool = False,
         scan_engine: Optional[ScanEngine] = None,
+        store: Union[bool, IntermediateStore, None] = None,
+        budget_bytes: Optional[int] = None,
     ):
         self.catalog = catalog
         self.plan = plan
@@ -226,6 +232,17 @@ class PredTrace:
         # plan execution (Filter scans) and every lineage query of this plan
         self.scan_engine = scan_engine or ScanEngine()
         self.executor = Executor(catalog, scan_engine=self.scan_engine)
+        # compressed intermediate store + byte budget: store=True (or any
+        # budget_bytes) materializes stages encoded (core/store.py); the
+        # budget planner then drops stages that don't fit and their dependent
+        # source predicates degrade to the iterative/superset path
+        if store is True or (store is None and budget_bytes is not None):
+            store = IntermediateStore(budget_bytes)
+        self.store: Optional[IntermediateStore] = (
+            store if isinstance(store, IntermediateStore) else None
+        )
+        self.budget_bytes = budget_bytes
+        self.mat_plan: Optional[MaterializationPlan] = None
         self.lineage_plan: Optional[LineagePlan] = None
         self.iter_plan: Optional[IterativePlan] = None
         self.exec_result: Optional[ExecResult] = None
@@ -253,12 +270,30 @@ class PredTrace:
 
     # ------------------------------------------------------------------ #
     def run(self) -> ExecResult:
-        """Pipeline execution phase (materializes what the plan requires)."""
+        """Pipeline execution phase (materializes what the plan requires).
+
+        With a store, stages materialize *encoded* (compressed columnar);
+        afterwards the budget planner decides which stages actually fit
+        ``budget_bytes`` — the rest are evicted and their dependent source
+        predicates degrade to the iterative path at query time."""
         if self.lineage_plan is None:
             self.infer()
         self.exec_result = self.executor.run(
-            self.plan, materialize=self.lineage_plan.materialize
+            self.plan, materialize=self.lineage_plan.materialize, store=self.store
         )
+        if self.store is not None:
+            # a user-supplied store may carry its own budget
+            budget = (
+                self.budget_bytes if self.store.budget_bytes is None
+                else self.store.budget_bytes
+            )
+            self.mat_plan = plan_materialization(
+                self.lineage_plan, self.store.sizes(), budget
+            )
+            if self.mat_plan.dropped:
+                self.store.evict(self.mat_plan.dropped)
+                for nid in self.mat_plan.dropped:
+                    self.exec_result.materialized.pop(nid, None)
         return self.exec_result
 
     def run_unmodified(self) -> ExecResult:
@@ -266,11 +301,38 @@ class PredTrace:
         self.exec_result = self.executor.run(self.plan)
         return self.exec_result
 
+    def attach_store(self, store: IntermediateStore) -> None:
+        """Adopt ``store`` (e.g. reloaded via ``checkpoint.store_io``) as this
+        plan's materialized intermediates, so later queries read the spilled
+        encoded stages instead of re-materializing the pipeline."""
+        assert self.exec_result is not None, "run() or run_unmodified() first"
+        if self.lineage_plan is None:
+            self.infer()
+        self.store = store
+        budget = self.budget_bytes if store.budget_bytes is None else store.budget_bytes
+        self.exec_result.store = store
+        self.exec_result.materialized = dict(store.stages)
+        # stages the spilled store no longer holds (evicted before the spill)
+        # are unavailable regardless of budget, as is anything downstream of
+        # them in the param-binding chain
+        missing = {s.node_id for s in self.lineage_plan.stages} - set(store.stages)
+        self.mat_plan = plan_materialization(
+            self.lineage_plan, store.sizes(), budget, unavailable=missing
+        )
+        if self.mat_plan.dropped:
+            store.evict(self.mat_plan.dropped)
+            for nid in self.mat_plan.dropped:
+                self.exec_result.materialized.pop(nid, None)
+
     # ------------------------------------------------------------------ #
-    def _output_binding(self, t_o: Union[int, Dict[str, object]]) -> Dict[str, object]:
+    def _output_binding(
+        self,
+        t_o: Union[int, Dict[str, object]],
+        out_params: Optional[Dict[str, str]] = None,
+    ) -> Dict[str, object]:
         assert self.exec_result is not None, "run() first"
         out = self.exec_result.output
-        lp_params = (
+        lp_params = out_params if out_params is not None else (
             self.lineage_plan.out_params if self.lineage_plan else self.iter_plan.out_params
         )
         binding: Dict[str, object] = {}
@@ -284,35 +346,93 @@ class PredTrace:
                 binding[p] = v.item() if hasattr(v, "item") else v
         return binding
 
+    def _superset_refine(self, t_o: Union[int, Dict[str, object]]) -> RefineResult:
+        """Iterative refinement (Algorithm 3) used as the per-table fallback
+        when budget-dropped stages leave source-predicate params unbound."""
+        if self.iter_plan is None:
+            self.infer_iterative()
+        binding = self._output_binding(t_o, self.iter_plan.out_params)
+        return refine(self.iter_plan, self.catalog, binding,
+                      scan=lambda p, t, b: self.scan_engine.scan(p, t, b))
+
+    def _stage_select(self, st: Stage, stobj, binding, param_stage, stage_sel,
+                      param_col) -> Table:
+        """Matching stage rows as a (small) Table.  Encoded stages scan
+        in situ when the binding shape is a plain conjunction (the common
+        case) and only the selected rows are decoded via gather; the
+        tuple/row-wise binding shapes fall back to the decoded table."""
+        scan = self.scan_engine.scan
+        if isinstance(stobj, StoredTable) and self.store is not None:
+            tg, rw = _binding_groups(st.run_pred, binding, param_stage)
+            if not tg and not rw:
+                m = self.store.scan(st.node_id, st.run_pred, binding,
+                                    self.scan_engine)
+                return stobj.take(np.nonzero(m)[0])
+            table = stobj.to_table()
+        else:
+            table = stobj
+        m = _eval_pred(st.run_pred, table, binding, param_stage, stage_sel,
+                       param_col, scan=scan)
+        return table.mask(m)
+
     def query(self, t_o: Union[int, Dict[str, object]]) -> LineageAnswer:
-        """Precise lineage via materialized intermediates (Algorithm 1)."""
+        """Precise lineage via materialized intermediates (Algorithm 1).
+
+        With a byte-budgeted store, source predicates that depend on a
+        dropped stage's params degrade *per table* to the iterative/superset
+        path (``detail["superset_tables"]``); everything whose stage chain is
+        still materialized stays precise."""
         assert self.lineage_plan is not None and self.exec_result is not None
         t0 = time.perf_counter()
         binding = self._output_binding(t_o)
         scan = self.scan_engine.scan
+        lp = self.lineage_plan
+        dropped = self.mat_plan.dropped if self.mat_plan is not None else set()
+        detail: Dict[str, object] = {}
+
+        # nothing materialized at all (budget 0): the whole query is the
+        # iterative path — identical to ``query_iterative``
+        if lp.stages and len(dropped) >= len(lp.stages):
+            rr = self._superset_refine(t_o)
+            detail["superset_tables"] = sorted({sp.table for sp in lp.source_preds})
+            detail["iterations"] = rr.iterations
+            return LineageAnswer(dict(rr.lineage), time.perf_counter() - t0, detail)
 
         # walk the stage chain, binding parameters from selected rows
+        available = set(binding)
         param_stage: Dict[str, int] = {}
         param_col: Dict[str, str] = {}
         stage_sel: Dict[int, Table] = {}
-        for si, st in enumerate(self.lineage_plan.stages):
-            table = self.exec_result.materialized[st.node_id]
-            pred = st.run_pred
+        for si, st in enumerate(lp.stages):
+            if st.node_id in dropped:
+                continue
+            if (params_of(st.run_pred) | set(st.guards)) - available:
+                continue  # depends on a dropped stage: unusable
+            stobj = self.exec_result.materialized.get(st.node_id)
+            if stobj is None:
+                continue
             if any(_guard_dead(binding.get(g)) for g in st.guards):
-                sel = table.mask(np.zeros(table.nrows, dtype=bool))
+                if isinstance(stobj, StoredTable):
+                    sel = stobj.take(np.empty(0, dtype=np.int64))
+                else:
+                    sel = stobj.mask(np.zeros(stobj.nrows, dtype=bool))
             else:
-                m = _eval_pred(pred, table, binding, param_stage, stage_sel,
-                               param_col, scan=scan)
-                sel = table.mask(m)
+                sel = self._stage_select(st, stobj, binding, param_stage,
+                                         stage_sel, param_col)
             stage_sel[si] = sel
             for p, colname in st.params_out.items():
                 if colname in sel.cols:
                     binding[p] = _clean_binding_value(_uniq(sel.cols[colname]))
                     param_stage[p] = si
                     param_col[p] = colname
+                    available.add(p)
 
         lineage: Dict[str, np.ndarray] = {}
-        for sp in self.lineage_plan.source_preds:
+        fallback: set = set()
+        for sp in lp.source_preds:
+            if (params_of(sp.pred) | set(sp.guards)) - available:
+                fallback.add(sp.table)  # unbound params: superset path below
+                continue
             t = self.catalog[sp.table]
             if sp.pred == FALSE or any(_guard_dead(binding.get(g)) for g in sp.guards):
                 rids = np.array([], dtype=np.int64)
@@ -323,7 +443,16 @@ class PredTrace:
             lineage[sp.table] = (
                 np.union1d(lineage[sp.table], rids) if sp.table in lineage else np.unique(rids)
             )
-        return LineageAnswer(lineage, time.perf_counter() - t0)
+        if fallback:
+            rr = self._superset_refine(t_o)
+            for tab in sorted(fallback):
+                rids = np.asarray(rr.lineage.get(tab, np.array([], dtype=np.int64)))
+                lineage[tab] = (
+                    np.union1d(lineage[tab], rids) if tab in lineage else rids
+                )
+            detail["superset_tables"] = sorted(fallback)
+            detail["iterations"] = rr.iterations
+        return LineageAnswer(lineage, time.perf_counter() - t0, detail)
 
     # ------------------------------------------------------------------ #
     def query_batch(
@@ -340,6 +469,10 @@ class PredTrace:
         B = len(rows)
         if B == 0:
             return []
+        if self.mat_plan is not None and self.mat_plan.dropped:
+            # budget-degraded plans mix precise and iterative answers per
+            # table; answer row-by-row (query() owns that logic)
+            return [self.query(r) for r in rows]
         bindings = [self._output_binding(r) for r in rows]
         scan = self.scan_engine.scan
 
@@ -485,6 +618,10 @@ class PredTrace:
 
         for si, st in enumerate(self.lineage_plan.stages):
             table = self.exec_result.materialized[st.node_id]
+            if isinstance(table, StoredTable):
+                # the batch path leans on the engine's identity-keyed sorted
+                # indexes; read the store through its cached decoded view
+                table = table.to_table()
             stage_tables[si] = table
             idxs = batch_indices(st.run_pred, table, st.guards)
             lens = np.fromiter(
@@ -571,7 +708,9 @@ class PredTrace:
         if self.exec_result is None:
             self.run_unmodified()
         t0 = time.perf_counter()
-        binding = self._output_binding(t_o)
+        # bind via the iterative plan's own params: a PredTrace that also ran
+        # infer() has a second, differently-named out-param set
+        binding = self._output_binding(t_o, self.iter_plan.out_params)
         if scan is None:
             scan = lambda pred, t, b: self.scan_engine.scan(pred, t, b)
         rr: RefineResult = refine(self.iter_plan, self.catalog, binding, max_iters, scan=scan)
@@ -588,7 +727,7 @@ class PredTrace:
         if self.exec_result is None:
             self.run_unmodified()
         t0 = time.perf_counter()
-        binding = self._output_binding(t_o)
+        binding = self._output_binding(t_o, self.iter_plan.out_params)
         lineage: Dict[str, np.ndarray] = {}
         for sid, (tab, pred) in self.iter_plan.g1.items():
             t = self.catalog[tab]

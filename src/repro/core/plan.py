@@ -77,6 +77,85 @@ class LineagePlan:
         return "\n".join(lines)
 
 
+# --------------------------------------------------------------------------- #
+# budget-aware materialization planning
+# --------------------------------------------------------------------------- #
+
+
+@dataclass
+class MaterializationPlan:
+    """Which :class:`LineagePlan` stages to actually keep under a byte budget.
+
+    ``kept`` stages stay in the intermediate store (precise bindings);
+    ``dropped`` stages degrade the source predicates that depend on their
+    params to the iterative/superset path — per stage, not all-or-nothing."""
+
+    budget_bytes: Optional[int]
+    kept: List[int]
+    dropped: Set[int]
+    sizes: Dict[int, int]
+
+    @property
+    def kept_bytes(self) -> int:
+        return int(sum(self.sizes.get(nid, 0) for nid in self.kept))
+
+    @property
+    def degraded(self) -> bool:
+        return bool(self.dropped)
+
+
+def stage_param_deps(lp: "LineagePlan") -> Dict[int, Set[int]]:
+    """Stage node-id -> node-ids of earlier stages whose bound params feed its
+    run-predicate or guards.  A stage whose dependency is dropped is useless
+    (its predicate has permanently unbound params), so the planner drops it
+    too."""
+    bound_by: Dict[str, int] = {}
+    deps: Dict[int, Set[int]] = {}
+    for st in lp.stages:
+        need = params_of(st.run_pred) | set(st.guards)
+        deps[st.node_id] = {bound_by[p] for p in need if p in bound_by}
+        for p in st.params_out:
+            bound_by.setdefault(p, st.node_id)
+    return deps
+
+
+def plan_materialization(
+    lp: "LineagePlan",
+    sizes: Dict[int, int],
+    budget_bytes: Optional[int],
+    unavailable: Optional[Set[int]] = None,
+) -> MaterializationPlan:
+    """Choose which stages fit a byte budget (compressed, column-projected
+    sizes from the store's stats pass).
+
+    Greedy in stage order — stages are ordered output-first, so earlier
+    stages are the root of the param-binding chain: keeping a later stage
+    without its binding ancestors buys nothing.  ``budget_bytes=None`` keeps
+    everything (the current precise behaviour); ``0`` drops everything (the
+    pure Algorithm-3 path).  ``unavailable`` marks stages the store cannot
+    serve at all (e.g. evicted before a spill) — they are dropped regardless
+    of budget, along with everything depending on them."""
+    unavailable = unavailable or set()
+    if budget_bytes is None and not unavailable:
+        return MaterializationPlan(None, [s.node_id for s in lp.stages], set(), dict(sizes))
+    budget = float("inf") if budget_bytes is None else budget_bytes
+    deps = stage_param_deps(lp)
+    kept: List[int] = []
+    dropped: Set[int] = set()
+    total = 0
+    for st in lp.stages:
+        sz = int(sizes.get(st.node_id, 0))
+        if st.node_id in unavailable or deps[st.node_id] & dropped:
+            dropped.add(st.node_id)
+            continue
+        if total + sz <= budget:
+            kept.append(st.node_id)
+            total += sz
+        else:
+            dropped.add(st.node_id)
+    return MaterializationPlan(budget_bytes, kept, dropped, dict(sizes))
+
+
 class _FailureAt(Exception):
     def __init__(self, node: O.Node, path: List[O.Node]):
         self.node = node

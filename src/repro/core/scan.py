@@ -370,6 +370,8 @@ class ScanStats:
     scans: int = 0
     batch_scans: int = 0
     batch_rows: int = 0
+    # scans answered on encoded columns without decoding (core/store.py)
+    insitu_scans: int = 0
 
     def snapshot(self) -> Dict[str, int]:
         return dict(self.__dict__)

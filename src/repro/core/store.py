@@ -1,0 +1,1044 @@
+"""Compressed columnar intermediate store with in-situ predicate scans.
+
+PredTrace's precise-lineage path (Algorithm 1) hinges on saving intermediate
+results, which is exactly the cost the paper calls out as making
+materialization "not viable" at scale.  This module makes that cost small:
+materialized stages are stored as *encoded* columns — picked per column by a
+stats pass — and the lineage-query scans run **in situ** on the encoded form,
+decoding a column only when an atom genuinely needs the raw values.
+
+Encodings (one :class:`EncodedColumn` subclass each):
+
+* **dict**    — low-cardinality columns: small-int codes into the *sorted*
+                unique values.  Because the code order equals the value order,
+                every comparison atom ``col <op> v`` rewrites to a code-space
+                comparison against ``searchsorted(values, v)`` — no decode.
+* **rle**     — run-heavy columns: (run value, run length) pairs.  Atoms are
+                evaluated once per *run* and the run mask expanded, so a scan
+                touches ``n_runs`` elements instead of ``n`` rows.
+* **for**     — frame-of-reference: integers re-based at their minimum and
+                bit-packed into the smallest unsigned dtype that holds the
+                range.  Atoms compare the packed lanes against the shifted
+                threshold ``v - base``.
+* **delta**   — sorted integer ids: per-block anchors + intra-block deltas in
+                a small dtype.  A comparison atom becomes an O(block + log
+                n_blocks) binary search over the anchors (decode exactly one
+                block), producing a contiguous row range — the compressed
+                analogue of pruning RLE runs by run value.
+* **bitpack** — booleans / validity masks at one bit per row (``packbits``).
+* **plain**   — the identity fallback; never worse than the raw column.
+
+The stats pass (:func:`analyze_column` + :func:`choose_encoding`) estimates
+the encoded size of every applicable encoding *without encoding* — that is
+what picks each column's encoding, and :func:`estimate_table_nbytes` exposes
+it for pre-run sizing.  The budget-aware materialization planner
+(``plan.plan_materialization``) then decides which stages to keep from the
+store's *actual* encoded sizes after the pipeline-execution phase.
+
+:class:`InSituBackend` consumes the ScanEngine's compiled
+:class:`~repro.core.scan.AtomProgram` representation unchanged: comparison
+and membership atoms take the encoded path above when the column's encoding
+supports them and fall back **per atom** to the NumPy oracle over a lazily
+decoded column cache, so in-situ answers are bit-identical to scanning the
+decoded table.
+
+:class:`IntermediateStore` is the executor-facing container: stages are
+``put()`` during the pipeline-execution phase, queried through ``scan()``
+(in situ) or ``table()`` (decoded, cached), spilled to disk and reloaded by
+``repro.checkpoint.store_io``, and ``evict()``-ed by the budget planner.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Iterator, List, Mapping, Optional, Tuple
+
+import numpy as np
+
+from .expr import eval_np
+from .scan import EQ, OPS, _NP_CMP, AtomProgram, NumpyBackend, ScanEngine, _is_setlike
+from .table import RID, Table
+
+_EQ, _NE = OPS["=="], OPS["!="]
+_LT, _LE, _GT, _GE = OPS["<"], OPS["<="], OPS[">"], OPS[">="]
+
+_MISSING = object()
+
+DELTA_BLOCK = 1024  # rows per delta-encoding block (one anchor each)
+
+
+def _is_nan(v) -> bool:
+    if type(v) is int:  # the overwhelmingly common binding type
+        return False
+    try:
+        return bool(v != v)
+    except (TypeError, ValueError):
+        return False
+
+
+def _const_mask(op: int, n: int, true_ops: Tuple[int, ...]) -> np.ndarray:
+    return np.ones(n, bool) if op in true_ops else np.zeros(n, bool)
+
+
+# --------------------------------------------------------------------------- #
+# encoded columns
+# --------------------------------------------------------------------------- #
+
+
+class EncodedColumn:
+    """One encoded column: decode / gather plus optional in-situ atom masks.
+
+    ``cmp_mask`` / ``isin_mask`` return ``None`` when the encoding cannot
+    answer the atom without decoding — the caller falls back to the oracle.
+    """
+
+    kind = "plain"
+    n: int
+    dtype: np.dtype
+
+    def decode(self) -> np.ndarray:
+        raise NotImplementedError
+
+    def gather(self, idx: np.ndarray) -> np.ndarray:
+        return self.decode()[idx]
+
+    def nbytes(self) -> int:
+        raise NotImplementedError
+
+    def cmp_mask(self, op: int, v) -> Optional[np.ndarray]:
+        return None
+
+    def isin_mask(self, vals: np.ndarray) -> Optional[np.ndarray]:
+        return None
+
+    # (meta, arrays) for checkpoint spill; see ``column_from_state``
+    def state(self) -> Tuple[Dict, Dict[str, np.ndarray]]:
+        raise NotImplementedError
+
+
+class PlainColumn(EncodedColumn):
+    kind = "plain"
+
+    def __init__(self, values: np.ndarray):
+        self.values = values
+        self.n = len(values)
+        self.dtype = values.dtype
+
+    def decode(self):
+        return self.values
+
+    def gather(self, idx):
+        return self.values[idx]
+
+    def nbytes(self):
+        return int(self.values.nbytes)
+
+    def cmp_mask(self, op, v):
+        return _NP_CMP[op](self.values, v)
+
+    def isin_mask(self, vals):
+        return np.isin(self.values, vals)
+
+    def state(self):
+        return {"kind": self.kind}, {"values": self.values}
+
+
+class DictColumn(EncodedColumn):
+    """Codes into the sorted unique values; comparisons stay in code space."""
+
+    kind = "dict"
+
+    def __init__(self, codes: np.ndarray, values: np.ndarray):
+        self.codes = codes
+        self.values = values
+        self.n = len(codes)
+        self.dtype = values.dtype
+
+    @staticmethod
+    def encode(arr: np.ndarray) -> "DictColumn":
+        values, codes = np.unique(arr, return_inverse=True)
+        return DictColumn(codes.astype(_code_dtype(len(values))), values)
+
+    def decode(self):
+        return self.values[self.codes]
+
+    def gather(self, idx):
+        return self.values[self.codes[idx]]
+
+    def nbytes(self):
+        return int(self.codes.nbytes + self.values.nbytes)
+
+    def cmp_mask(self, op, v):
+        if _is_nan(v):  # IEEE: NaN compares False everywhere except !=
+            return _const_mask(op, self.n, (_NE,))
+        codes = self.codes
+        if op == _EQ or op == _NE:
+            # values are unique, so one search + one scalar probe suffices
+            lo = int(self.values.searchsorted(v, side="left"))
+            present = lo < len(self.values) and self.values[lo] == v
+            if op == _EQ:
+                return codes == lo if present else np.zeros(self.n, bool)
+            return codes != lo if present else np.ones(self.n, bool)
+        if op == _LT or op == _GE:
+            lo = int(self.values.searchsorted(v, side="left"))
+            return codes < lo if op == _LT else codes >= lo
+        hi = int(self.values.searchsorted(v, side="right"))
+        return codes < hi if op == _LE else codes >= hi  # _LE / _GT
+
+    def isin_mask(self, vals):
+        arr = np.asarray(vals)
+        if arr.size == 0:
+            return np.zeros(self.n, bool)
+        nu = len(self.values)
+        pos = np.minimum(np.searchsorted(self.values, arr), nu - 1)
+        hit = self.values[pos] == arr  # NaN never matches (np.isin semantics)
+        lut = np.zeros(nu, bool)
+        lut[pos[hit]] = True
+        return lut[self.codes]
+
+    def state(self):
+        return {"kind": self.kind}, {"codes": self.codes, "values": self.values}
+
+
+class RLEColumn(EncodedColumn):
+    """Run-length encoding; atoms evaluate per run and expand the run mask."""
+
+    kind = "rle"
+
+    def __init__(self, run_values: np.ndarray, run_lengths: np.ndarray):
+        self.run_values = run_values
+        self.run_lengths = run_lengths
+        self.n = int(run_lengths.sum())
+        self.dtype = run_values.dtype
+        self._ends: Optional[np.ndarray] = None
+
+    @staticmethod
+    def encode(arr: np.ndarray) -> "RLEColumn":
+        n = len(arr)
+        starts = np.concatenate([[0], np.flatnonzero(arr[1:] != arr[:-1]) + 1])
+        lengths = np.diff(np.concatenate([starts, [n]])).astype(np.int32)
+        return RLEColumn(arr[starts], lengths)
+
+    def _run_ends(self) -> np.ndarray:
+        if self._ends is None:
+            self._ends = np.cumsum(self.run_lengths)
+        return self._ends
+
+    def decode(self):
+        return np.repeat(self.run_values, self.run_lengths)
+
+    def gather(self, idx):
+        ri = np.searchsorted(self._run_ends(), np.asarray(idx), side="right")
+        return self.run_values[ri]
+
+    def nbytes(self):
+        return int(self.run_values.nbytes + self.run_lengths.nbytes)
+
+    def cmp_mask(self, op, v):
+        return np.repeat(_NP_CMP[op](self.run_values, v), self.run_lengths)
+
+    def isin_mask(self, vals):
+        return np.repeat(np.isin(self.run_values, vals), self.run_lengths)
+
+    def state(self):
+        return {"kind": self.kind}, {
+            "run_values": self.run_values, "run_lengths": self.run_lengths,
+        }
+
+
+class FORColumn(EncodedColumn):
+    """Frame-of-reference: ``value = packed + base`` with packed unsigned."""
+
+    kind = "for"
+
+    def __init__(self, packed: np.ndarray, base: int, dtype: np.dtype):
+        self.packed = packed
+        self.base = int(base)
+        self.n = len(packed)
+        self.dtype = np.dtype(dtype)
+
+    @staticmethod
+    def encode(arr: np.ndarray, pack_dtype: np.dtype) -> "FORColumn":
+        base = int(arr.min())
+        packed = (arr.astype(np.int64) - base).astype(pack_dtype)
+        return FORColumn(packed, base, arr.dtype)
+
+    def decode(self):
+        return (self.packed.astype(np.int64) + self.base).astype(self.dtype)
+
+    def gather(self, idx):
+        return (self.packed[idx].astype(np.int64) + self.base).astype(self.dtype)
+
+    def nbytes(self):
+        return int(self.packed.nbytes)
+
+    def cmp_mask(self, op, v):
+        if _is_nan(v):
+            return _const_mask(op, self.n, (_NE,))
+        # shift the threshold into frame space; numpy compares python scalars
+        # outside the packed dtype's range exactly (no wraparound)
+        t = (int(v) if isinstance(v, (int, np.integer)) else float(v)) - self.base
+        return _NP_CMP[op](self.packed, t)
+
+    def isin_mask(self, vals):
+        arr = np.asarray(vals)
+        if arr.size == 0:
+            return np.zeros(self.n, bool)
+        if arr.dtype.kind == "f":
+            t = arr - float(self.base)
+        else:
+            t = arr.astype(np.int64) - self.base
+        return np.isin(self.packed.astype(np.int64), t)
+
+    def state(self):
+        return (
+            {"kind": self.kind, "base": self.base, "dtype": self.dtype.str},
+            {"packed": self.packed},
+        )
+
+
+class DeltaColumn(EncodedColumn):
+    """Sorted integers as per-block anchors + small intra-block deltas.
+
+    Comparison atoms binary-search the anchors, decode exactly one block, and
+    return a contiguous index range — O(block + log n_blocks) per atom
+    instead of an O(n) scan."""
+
+    kind = "delta"
+
+    def __init__(self, anchors: np.ndarray, deltas: np.ndarray, n: int,
+                 dtype: np.dtype, block: int = DELTA_BLOCK):
+        self.anchors = anchors  # value at each block start, original dtype
+        self.deltas = deltas    # 1-D length n, small unsigned; block starts 0
+        self.n = n
+        self.dtype = np.dtype(dtype)
+        self.block = block
+        # touched-block cache: comparisons and gathers revisit the same few
+        # blocks; worst case (every block touched) it holds the decoded
+        # column, i.e. it degrades to the lazy decode the fallback path pays
+        self._bcache: Dict[int, np.ndarray] = {}
+
+    @staticmethod
+    def encode(arr: np.ndarray, delta_dtype: np.dtype,
+               block: int = DELTA_BLOCK) -> "DeltaColumn":
+        n = len(arr)
+        d = np.zeros(n, dtype=np.int64)
+        d[1:] = arr.astype(np.int64)[1:] - arr.astype(np.int64)[:-1]
+        d[::block] = 0  # the anchor carries each block's absolute value
+        return DeltaColumn(arr[::block].copy(), d.astype(delta_dtype), n, arr.dtype, block)
+
+    def decode(self):
+        nb = len(self.anchors)
+        d = np.zeros(nb * self.block, dtype=np.int64)
+        d[: self.n] = self.deltas
+        out = self.anchors.astype(np.int64)[:, None] + np.cumsum(
+            d.reshape(nb, self.block), axis=1
+        )
+        return out.reshape(-1)[: self.n].astype(self.dtype)
+
+    def _block_vals(self, b: int) -> np.ndarray:
+        vals = self._bcache.get(b)
+        if vals is None:
+            lo = b * self.block
+            hi = min(lo + self.block, self.n)
+            vals = np.cumsum(self.deltas[lo:hi], dtype=np.int64)
+            vals += int(self.anchors[b])
+            self._bcache[b] = vals
+        return vals
+
+    def gather(self, idx):
+        idx = np.asarray(idx)
+        if len(idx) == 0:
+            return np.empty(0, self.dtype)
+        bi = idx // self.block
+        off = idx % self.block
+        blocks = np.unique(bi)
+        if len(blocks) == 1:  # common: selected rows cluster in one block
+            return self._block_vals(int(blocks[0]))[off].astype(self.dtype)
+        out = np.empty(len(idx), dtype=np.int64)
+        for b in blocks:  # touched blocks only
+            sel = bi == b
+            out[sel] = self._block_vals(int(b))[off[sel]]
+        return out.astype(self.dtype)
+
+    def nbytes(self):
+        return int(self.anchors.nbytes + self.deltas.nbytes)
+
+    def _boundary(self, v, side: str) -> int:
+        b = int(self.anchors.searchsorted(v, side=side)) - 1
+        if b < 0:
+            return 0
+        pos = int(self._block_vals(b).searchsorted(v, side=side))
+        return min(b * self.block + pos, self.n)
+
+    def _eq_range(self, v) -> Tuple[int, int]:
+        """[lo, hi) of rows equal to ``v``.  Fast path: unless a run of ``v``
+        crosses a block boundary (the next anchor equals ``v``), the whole
+        range lives in one block — one anchor search, one cached block."""
+        ar = self.anchors
+        bl = int(ar.searchsorted(v, side="left")) - 1
+        nxt = bl + 1
+        if nxt < len(ar) and ar[nxt] == v:
+            return self._boundary(v, "left"), self._boundary(v, "right")
+        if bl < 0:
+            return 0, 0
+        vals = self._block_vals(bl)
+        base = bl * self.block
+        lo = base + int(vals.searchsorted(v, side="left"))
+        hi = base + int(vals.searchsorted(v, side="right"))
+        return min(lo, self.n), min(hi, self.n)
+
+    def cmp_mask(self, op, v):
+        if _is_nan(v):
+            return _const_mask(op, self.n, (_NE,))
+        if op in (_LT, _GE):
+            lo = hi = self._boundary(v, "left")
+        elif op in (_LE, _GT):
+            lo = hi = self._boundary(v, "right")
+        else:
+            lo, hi = self._eq_range(v)
+        m = np.zeros(self.n, bool)
+        if op == _LT or op == _LE:
+            m[:lo] = True
+        elif op == _GE or op == _GT:
+            m[hi if op == _GT else lo:] = True
+        elif op == _EQ:
+            m[lo:hi] = True
+        else:  # _NE
+            m[:] = True
+            m[lo:hi] = False
+        return m
+
+    def state(self):
+        return (
+            {"kind": self.kind, "n": self.n, "dtype": self.dtype.str,
+             "block": self.block},
+            {"anchors": self.anchors, "deltas": self.deltas},
+        )
+
+
+class BitPackColumn(EncodedColumn):
+    """Booleans / validity masks at one bit per row."""
+
+    kind = "bitpack"
+
+    def __init__(self, bits: np.ndarray, n: int):
+        self.bits = bits
+        self.n = n
+        self.dtype = np.dtype(bool)
+
+    @staticmethod
+    def encode(arr: np.ndarray) -> "BitPackColumn":
+        return BitPackColumn(np.packbits(arr.astype(bool)), len(arr))
+
+    def decode(self):
+        return np.unpackbits(self.bits, count=self.n).astype(bool)
+
+    def gather(self, idx):
+        idx = np.asarray(idx)
+        return ((self.bits[idx >> 3] >> (7 - (idx & 7))) & 1).astype(bool)
+
+    def nbytes(self):
+        return int(self.bits.nbytes)
+
+    def state(self):
+        return {"kind": self.kind, "n": self.n}, {"bits": self.bits}
+
+
+class ScaledColumn(EncodedColumn):
+    """Floats that are exactly ``k / scale`` (integral floats, money with two
+    decimals) stored as an encoded *integer* column.  Encode verifies bitwise
+    round-tripping (``decode() == original`` elementwise), so the encoding is
+    lossless by construction; comparison atoms defer to the decoded oracle —
+    re-scaling a float threshold exactly is not generally possible."""
+
+    kind = "scaled"
+
+    def __init__(self, inner: EncodedColumn, scale: int, dtype: np.dtype):
+        self.inner = inner
+        self.scale = int(scale)
+        self.n = inner.n
+        self.dtype = np.dtype(dtype)
+
+    def decode(self):
+        return (self.inner.decode().astype(np.float64) / self.scale).astype(self.dtype)
+
+    def gather(self, idx):
+        return (self.inner.gather(idx).astype(np.float64) / self.scale).astype(self.dtype)
+
+    def nbytes(self):
+        return self.inner.nbytes() + 8
+
+    def state(self):
+        meta, arrays = self.inner.state()
+        return (
+            {"kind": self.kind, "scale": self.scale, "dtype": self.dtype.str,
+             "inner": meta},
+            arrays,
+        )
+
+
+# --------------------------------------------------------------------------- #
+# stats pass + encoding choice
+# --------------------------------------------------------------------------- #
+
+
+@dataclass
+class ColumnStats:
+    n: int
+    dtype: np.dtype
+    nbytes_raw: int
+    n_unique: int = 0
+    n_runs: int = 0
+    is_sorted: bool = False
+    has_nan: bool = False
+    vmin: Optional[int] = None
+    vmax: Optional[int] = None
+    max_delta: Optional[int] = None
+    # decimal scale for floats exactly representable as k/scale; vmin/vmax/
+    # max_delta then describe the scaled integer image (a monotone map, so
+    # n_unique/n_runs/is_sorted carry over unchanged)
+    scale: Optional[int] = None
+
+
+_SCALES = (1, 100)  # integral floats, money with two decimals
+
+
+def _int_span(arr: np.ndarray) -> Tuple[int, int, Optional[int]]:
+    vmin, vmax = int(arr.min()), int(arr.max())
+    d = arr.astype(np.int64)[1:] - arr.astype(np.int64)[:-1]
+    max_delta = int(d.max()) if len(d) and bool((d >= 0).all()) else None
+    return vmin, vmax, max_delta
+
+
+def analyze_column(arr: np.ndarray) -> ColumnStats:
+    """One pass of per-column statistics driving both the encoding choice and
+    the planner's compressed-size estimate."""
+    n = len(arr)
+    st = ColumnStats(n=n, dtype=arr.dtype, nbytes_raw=int(arr.nbytes))
+    if n == 0:
+        return st
+    k = arr.dtype.kind
+    st.has_nan = bool(np.isnan(arr).any()) if k == "f" else False
+    st.n_runs = int(np.count_nonzero(arr[1:] != arr[:-1])) + 1
+    st.is_sorted = bool((arr[1:] >= arr[:-1]).all()) if n > 1 else True
+    st.n_unique = int(len(np.unique(arr)))
+    if k in "iu":
+        st.vmin, st.vmax, st.max_delta = _int_span(arr)
+        if not st.is_sorted:
+            st.max_delta = None
+    elif k == "f" and not st.has_nan and bool(np.isfinite(arr).all()):
+        for scale in _SCALES:
+            scaled = np.round(arr * scale)
+            if (
+                float(np.abs(scaled).max(initial=0)) < 2**31
+                and np.array_equal(scaled / scale, arr)
+            ):
+                st.scale = scale
+                st.vmin, st.vmax, st.max_delta = _int_span(scaled)
+                if not st.is_sorted:
+                    st.max_delta = None
+                break
+    return st
+
+
+def _code_dtype(nu: int) -> np.dtype:
+    # searchsorted positions go up to nu inclusive; keep them representable
+    if nu <= 0xFF:
+        return np.dtype(np.uint8)
+    if nu <= 0xFFFF:
+        return np.dtype(np.uint16)
+    return np.dtype(np.uint32)
+
+
+def _pack_dtype(rng: int) -> Optional[np.dtype]:
+    if rng < 2**8:
+        return np.dtype(np.uint8)
+    if rng < 2**16:
+        return np.dtype(np.uint16)
+    if rng < 2**32:
+        return np.dtype(np.uint32)
+    return None
+
+
+def _int_encoding_ests(n: int, item: int, vmin: int, vmax: int,
+                       is_sorted: bool, max_delta: Optional[int]) -> Dict[str, int]:
+    out: Dict[str, int] = {}
+    pd = _pack_dtype(vmax - vmin)
+    if pd is not None and pd.itemsize < item:
+        out["for"] = n * pd.itemsize
+    if is_sorted and max_delta is not None:
+        dd = _pack_dtype(max_delta)
+        if dd is not None:
+            nb = -(-n // DELTA_BLOCK)
+            out["delta"] = n * dd.itemsize + nb * item
+    return out
+
+
+def estimate_encodings(st: ColumnStats) -> Dict[str, int]:
+    """Estimated encoded bytes per applicable encoding (stats only)."""
+    out: Dict[str, int] = {"plain": st.nbytes_raw}
+    if st.n == 0:
+        return out
+    item = st.dtype.itemsize
+    if st.dtype.kind == "b":
+        out["bitpack"] = (st.n + 7) // 8
+        return out
+    if st.dtype.kind in "iuf" and not st.has_nan and st.n_unique <= 0xFFFF:
+        out["dict"] = st.n * _code_dtype(st.n_unique).itemsize + st.n_unique * item
+    out["rle"] = st.n_runs * (item + 4)
+    if st.dtype.kind in "iu" and st.vmin is not None:
+        out.update(_int_encoding_ests(st.n, item, st.vmin, st.vmax,
+                                      st.is_sorted, st.max_delta))
+    elif st.scale is not None:
+        # the scaled int32 image shares n_unique/n_runs/sortedness with the
+        # float original; its candidate encodings compete as one entry
+        sitem = 4
+        ints = dict(_int_encoding_ests(st.n, sitem, st.vmin, st.vmax,
+                                       st.is_sorted, st.max_delta))
+        ints["plain"] = st.n * sitem
+        ints["rle"] = st.n_runs * (sitem + 4)
+        if st.n_unique <= 0xFFFF:
+            ints["dict"] = st.n * _code_dtype(st.n_unique).itemsize + st.n_unique * sitem
+        out["scaled"] = min(ints.values()) + 8
+    return out
+
+
+def choose_encoding(st: ColumnStats) -> Tuple[str, int]:
+    """(kind, estimated bytes) minimizing the stats-pass size estimate."""
+    ests = estimate_encodings(st)
+    kind = min(ests, key=lambda k: (ests[k], k != "plain"))
+    return kind, ests[kind]
+
+
+def estimate_encoded_nbytes(arr: np.ndarray) -> int:
+    """Compressed-size estimate for one column without encoding it."""
+    return choose_encoding(analyze_column(arr))[1]
+
+
+def encode_column(arr: np.ndarray) -> EncodedColumn:
+    arr = np.asarray(arr)
+    st = analyze_column(arr)
+    kind, _ = choose_encoding(st)
+    if kind == "bitpack":
+        return BitPackColumn.encode(arr)
+    if kind == "dict":
+        return DictColumn.encode(arr)
+    if kind == "rle":
+        return RLEColumn.encode(arr)
+    if kind == "for":
+        return FORColumn.encode(arr, _pack_dtype(st.vmax - st.vmin))
+    if kind == "delta":
+        return DeltaColumn.encode(arr, _pack_dtype(st.max_delta))
+    if kind == "scaled":
+        ints = np.round(arr * st.scale).astype(np.int32)
+        enc = ScaledColumn(encode_column(ints), st.scale, arr.dtype)
+        # lossless by verification, not by construction: keep only if the
+        # round trip is exact elementwise
+        if np.array_equal(enc.decode(), arr):
+            return enc
+    return PlainColumn(arr)
+
+
+def column_from_state(meta: Dict, arrays: Dict[str, np.ndarray]) -> EncodedColumn:
+    """Rebuild an :class:`EncodedColumn` from its ``state()`` (checkpoint IO)."""
+    kind = meta["kind"]
+    if kind == "plain":
+        return PlainColumn(arrays["values"])
+    if kind == "dict":
+        return DictColumn(arrays["codes"], arrays["values"])
+    if kind == "rle":
+        return RLEColumn(arrays["run_values"], arrays["run_lengths"])
+    if kind == "for":
+        return FORColumn(arrays["packed"], meta["base"], np.dtype(meta["dtype"]))
+    if kind == "delta":
+        return DeltaColumn(arrays["anchors"], arrays["deltas"], meta["n"],
+                           np.dtype(meta["dtype"]), meta["block"])
+    if kind == "bitpack":
+        return BitPackColumn(arrays["bits"], meta["n"])
+    if kind == "scaled":
+        return ScaledColumn(column_from_state(meta["inner"], arrays),
+                            meta["scale"], np.dtype(meta["dtype"]))
+    raise ValueError(f"unknown encoded-column kind {kind!r}")
+
+
+# --------------------------------------------------------------------------- #
+# stored tables
+# --------------------------------------------------------------------------- #
+
+
+class _LazyCols(Mapping):
+    """Mapping view decoding columns on first access (ScanEngine/eval_np
+    compatible), so oracle fallbacks touch only the columns they reference."""
+
+    def __init__(self, st: "StoredTable"):
+        self._st = st
+        self._cache: Dict[str, np.ndarray] = {}
+
+    def __getitem__(self, k: str) -> np.ndarray:
+        v = self._cache.get(k)
+        if v is None:
+            v = self._st.enc[k].decode()
+            self._cache[k] = v
+        return v
+
+    def __contains__(self, k) -> bool:
+        return k in self._st.enc
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(self._st.enc)
+
+    def __len__(self) -> int:
+        return len(self._st.enc)
+
+    def get(self, k, default=None):
+        return self[k] if k in self._st.enc else default
+
+
+class StoredTable:
+    """An encoded materialized stage.  Presents the ``nrows`` / ``cols`` /
+    ``columns`` surface of :class:`~repro.core.table.Table` (columns decode
+    lazily), plus ``take``/``gather`` for binding extraction at selected rows
+    without a full decode."""
+
+    def __init__(self, enc: Dict[str, EncodedColumn], dicts: Dict[str, List[str]],
+                 name: Optional[str], nrows: int, raw_nbytes: int):
+        self.enc = enc
+        self.dicts = dicts
+        self.name = name
+        self._nrows = nrows
+        self.raw_nbytes = raw_nbytes
+        self.cols = _LazyCols(self)
+        self._table: Optional[Table] = None
+        # per-program atom evaluation order (InSituBackend), keyed by program
+        # identity; each entry pins the program so its id stays valid
+        self._work_cache: Dict[int, Tuple[AtomProgram, List]] = {}
+
+    @property
+    def nrows(self) -> int:
+        return self._nrows
+
+    @property
+    def columns(self) -> List[str]:
+        return [c for c in self.enc if c != RID]
+
+    def has(self, col: str) -> bool:
+        return col in self.enc
+
+    def nbytes(self) -> int:
+        return int(sum(e.nbytes() for e in self.enc.values()))
+
+    def compression_ratio(self) -> float:
+        return self.raw_nbytes / max(self.nbytes(), 1)
+
+    def encodings(self) -> Dict[str, str]:
+        return {c: e.kind for c, e in self.enc.items()}
+
+    def to_table(self, cache: bool = True) -> Table:
+        """Fully decoded :class:`Table`.  Cached by default so identity-keyed
+        engine caches (sorted-column indexes, slabs) stay warm across calls;
+        ``cache=False`` decodes fresh (the decode-then-scan baseline)."""
+        if not cache:
+            return Table({k: e.decode() for k, e in self.enc.items()},
+                         dict(self.dicts), self.name)
+        if self._table is None:
+            self._table = Table({k: self.cols[k] for k in self.enc},
+                                dict(self.dicts), self.name)
+        return self._table
+
+    def take(self, idx: np.ndarray) -> Table:
+        """Rows at ``idx`` as a (small) decoded Table via per-encoding gather."""
+        return Table({k: e.gather(idx) for k, e in self.enc.items()},
+                     dict(self.dicts), self.name)
+
+    def gather(self, col: str, idx: np.ndarray) -> np.ndarray:
+        return self.enc[col].gather(idx)
+
+
+def encode_table(table: Table) -> StoredTable:
+    enc = {k: encode_column(np.asarray(v)) for k, v in table.cols.items()}
+    dicts = {k: v for k, v in table.dicts.items() if k in table.cols}
+    return StoredTable(enc, dicts, table.name, table.nrows, table.nbytes())
+
+
+def estimate_table_nbytes(table: Table, keep: Optional[List[str]] = None) -> int:
+    """Stats-pass compressed-size estimate of a (column-projected) table."""
+    t = table if keep is None else table.project([c for c in keep if table.has(c)])
+    return int(sum(estimate_encoded_nbytes(np.asarray(v)) for v in t.cols.values()))
+
+
+# --------------------------------------------------------------------------- #
+# in-situ scan backend
+# --------------------------------------------------------------------------- #
+
+
+# full-scan cost classes per encoding: cheap lane compares first, then
+# delta's binary searches, then the decoded-cache fallbacks.  A conjunction
+# commutes, so evaluation order is free — the sort is stable within a class.
+_SCAN_COST = {"for": 0, "dict": 0, "rle": 0, "delta": 1, "plain": 1,
+              "bitpack": 1, "scaled": 2}
+
+# switch to candidate filtering once the surviving fraction drops below 1/16
+# — but only on stages big enough that O(n) masks dominate the per-gather
+# fixed cost; small stages finish faster with straight-line full masks
+_CAND_FRACTION = 16
+_CAND_MIN_ROWS = 8192
+
+# below this row count a delta/scaled atom is answered faster by a vectorized
+# compare over the (lazily cached) decoded column than by binary searches —
+# and a small stage's decoded cache is negligible by definition
+_SMALL_STAGE_ROWS = 4096
+
+
+class InSituBackend(NumpyBackend):
+    """Evaluates a compiled :class:`AtomProgram` directly on encoded columns.
+
+    Per-atom dispatch: the encoding answers the atom when it can (dict code
+    compare, RLE run prune, FOR frame shift, delta anchor search); anything
+    else — column-vs-column atoms, residual expressions, array bindings on
+    non-equality atoms — falls back to the inherited NumPy oracle over the
+    StoredTable's lazily decoded column cache.  Atoms run cheapest encoding
+    first, and once the running mask is selective the remaining atoms are
+    evaluated only on the surviving rows via ``gather``.  Answers are always
+    identical to scanning the decoded table: every atom is elementwise, so
+    reordering and restriction commute with the conjunction."""
+
+    name = "insitu"
+
+    def scan(self, prog: AtomProgram, st: StoredTable,
+             binding: Dict[str, object]) -> np.ndarray:
+        n = st.nrows
+        # keyed by program identity: programs are interned per engine by
+        # structure, and the entry pins the program so the id stays valid
+        entry = st._work_cache.get(id(prog))
+        if entry is None:
+            work = [("cmp", a) for a in prog.cmp_atoms]
+            work += [("isin", a) for a in prog.isin_atoms]
+            if len(work) > 1:
+                work.sort(key=lambda w: _SCAN_COST.get(
+                    st.enc[w[1].col].kind if w[1].col in st.enc else "plain", 1
+                ))
+            entry = (prog, work)
+            st._work_cache[id(prog)] = entry
+        work = entry[1]
+        has_residual = (
+            prog.residual_static is not None or prog.residual_dynamic is not None
+        )
+        mask: Optional[np.ndarray] = None
+        idx: Optional[np.ndarray] = None
+        rest: List[Tuple[str, object]] = []
+        for i, (what, a) in enumerate(work):
+            if what == "cmp":
+                m = self._cmp_insitu(a, st, binding, n)
+                if m is None:
+                    m = self._cmp_mask(a, st, binding, n)
+            else:
+                m = self._isin_insitu(a, st, binding)
+                if m is None:
+                    m = self._isin_mask(a, st, binding, n)
+            # every mask producer returns a fresh array, so the first one can
+            # be adopted and updated in place
+            mask = m if mask is None else mask.__iand__(m)
+            if n >= _CAND_MIN_ROWS and (i + 1 < len(work) or has_residual):
+                cnt = int(np.count_nonzero(mask))
+                if cnt * _CAND_FRACTION <= n:
+                    idx = np.flatnonzero(mask)
+                    rest = work[i + 1:]
+                    break
+        if idx is None:
+            if mask is None:
+                mask = np.ones(n, dtype=bool)
+            for r in (prog.residual_static, prog.residual_dynamic):
+                if r is not None:
+                    mask &= np.asarray(eval_np(r, st.cols, binding, n=n), bool)
+            return mask
+
+        # candidate mode: every remaining atom sees only the survivors
+        for what, a in rest:
+            if not len(idx):
+                break
+            keep = (self._cmp_cand(a, st, binding, idx) if what == "cmp"
+                    else self._isin_cand(a, st, binding, idx))
+            idx = idx[keep]
+        # residuals: the static one is paramless (restriction commutes, so
+        # gather the survivors); the dynamic one may hold row-aligned array
+        # bindings whose broadcast semantics need the full column length
+        if prog.residual_static is not None and len(idx):
+            env = {c: st.enc[c].gather(idx)
+                   for c in prog.residual_static_cols if c in st.enc}
+            idx = idx[np.asarray(
+                eval_np(prog.residual_static, env, {}, n=len(idx)), bool
+            )]
+        if prog.residual_dynamic is not None and len(idx):
+            if any(isinstance(v, np.ndarray) and v.ndim == 1
+                   for v in binding.values()):
+                env = {c: st.cols[c]
+                       for c in prog.residual_dynamic_cols if c in st.enc}
+                m = np.asarray(
+                    eval_np(prog.residual_dynamic, env, binding, n=n), bool
+                )
+                idx = idx[m[idx]]
+            else:
+                env = {c: st.enc[c].gather(idx)
+                       for c in prog.residual_dynamic_cols if c in st.enc}
+                idx = idx[np.asarray(
+                    eval_np(prog.residual_dynamic, env, binding, n=len(idx)), bool
+                )]
+        out = np.zeros(n, dtype=bool)
+        out[idx] = True
+        return out
+
+    # -- full-column in-situ masks (None => decoded-oracle fallback) -------- #
+    def _cmp_insitu(self, a, st: StoredTable, binding, n) -> Optional[np.ndarray]:
+        enc = st.enc.get(a.col)
+        if enc is None or a.kind == "col":
+            return None  # oracle path (raises the same KeyError when missing)
+        if n <= _SMALL_STAGE_ROWS and enc.kind in ("delta", "scaled"):
+            return None  # decoded-cache compare wins below the block scale
+        v = a.rhs if a.kind == "lit" else binding.get(a.rhs, _MISSING)
+        if v is _MISSING:
+            return None
+        if _is_setlike(v):
+            # membership semantics apply to *param* bindings only; a literal
+            # array rhs broadcasts elementwise in the oracle — defer to it
+            if a.kind != "param" or a.op != EQ:
+                return None
+            arr = np.asarray(v)
+            if arr.size == 0:
+                return np.zeros(n, dtype=bool)
+            return enc.isin_mask(arr)
+        if isinstance(v, np.generic):
+            v = v.item()
+        return enc.cmp_mask(a.op, v)
+
+    def _isin_insitu(self, a, st: StoredTable, binding) -> Optional[np.ndarray]:
+        enc = st.enc.get(a.col)
+        if enc is None:
+            return None
+        vals = a.rhs if a.kind == "lit" else binding.get(a.rhs, _MISSING)
+        if vals is _MISSING:
+            return None
+        arr = np.asarray(vals)
+        if arr.size == 0:
+            return np.zeros(st.nrows, dtype=bool)
+        return enc.isin_mask(arr)
+
+    # -- candidate filters: the same atom semantics on gathered rows -------- #
+    def _col_at(self, st: StoredTable, col: str, idx: np.ndarray) -> np.ndarray:
+        enc = st.enc.get(col)
+        if enc is not None:
+            return enc.gather(idx)
+        return st.cols[col][idx]  # KeyError matches the oracle path
+
+    def _cmp_cand(self, a, st: StoredTable, binding, idx) -> np.ndarray:
+        colv = self._col_at(st, a.col, idx)
+        if a.kind == "col":
+            return _NP_CMP[a.op](colv, self._col_at(st, a.rhs, idx))
+        if a.kind == "lit":
+            v = a.rhs
+        elif a.rhs not in binding:
+            raise KeyError(f"unbound parameter {a.rhs}")
+        else:
+            v = binding[a.rhs]
+        if _is_setlike(v):
+            # mirror NumpyBackend._cmp_mask: membership for param bindings,
+            # elementwise broadcast for literal arrays (restricted to the
+            # surviving rows when row-aligned)
+            if a.kind != "param":
+                arr = np.asarray(v)
+                if arr.ndim == 1 and len(arr) == st.nrows:
+                    arr = arr[idx]
+                return _NP_CMP[a.op](colv, arr)
+            if a.op == EQ:
+                arr = np.asarray(v)
+                if arr.size == 0:
+                    return np.zeros(len(idx), dtype=bool)
+                return np.isin(colv, arr)
+            # array bound to a non-equality atom: the oracle's broadcast /
+            # error semantics depend on the full column length, so evaluate
+            # full-table and restrict — restriction of the inputs would
+            # misalign row-aligned binding arrays
+            m = np.asarray(
+                eval_np(a.expr, {a.col: st.cols[a.col]}, binding, n=st.nrows), bool
+            )
+            return m[idx]
+        return _NP_CMP[a.op](colv, v)
+
+    def _isin_cand(self, a, st: StoredTable, binding, idx) -> np.ndarray:
+        if a.kind == "lit":
+            vals = a.rhs
+        elif a.rhs not in binding:
+            raise KeyError(f"unbound parameter {a.rhs}")
+        else:
+            vals = binding[a.rhs]
+        arr = np.asarray(vals)
+        colv = self._col_at(st, a.col, idx)
+        if arr.size == 0:
+            return np.zeros(len(idx), dtype=bool)
+        return np.isin(colv, arr)
+
+
+# --------------------------------------------------------------------------- #
+# the store
+# --------------------------------------------------------------------------- #
+
+
+class IntermediateStore:
+    """Encoded materialized stages, keyed by plan-node id.
+
+    The executor ``put()``s each stage as the pipeline-execution phase
+    produces it; the budget planner (``plan.plan_materialization``) then
+    ``evict()``s stages that don't fit ``budget_bytes``, and the lineage
+    query phase reads through ``scan()`` (in situ) / ``table()`` (decoded,
+    cached) / ``StoredTable.take`` (gather at selected rows)."""
+
+    def __init__(self, budget_bytes: Optional[int] = None):
+        self.budget_bytes = budget_bytes
+        self.stages: Dict[int, StoredTable] = {}
+        self.backend = InSituBackend()
+
+    # ------------------------------------------------------------------ #
+    def put(self, node_id: int, table: Table) -> StoredTable:
+        st = encode_table(table)
+        self.stages[node_id] = st
+        return st
+
+    def __contains__(self, node_id: int) -> bool:
+        return node_id in self.stages
+
+    def get(self, node_id: int) -> StoredTable:
+        return self.stages[node_id]
+
+    def table(self, node_id: int) -> Table:
+        """Decoded view of one stage (cached on the StoredTable)."""
+        return self.stages[node_id].to_table()
+
+    def evict(self, node_ids) -> None:
+        for nid in list(node_ids):
+            self.stages.pop(nid, None)
+
+    # ------------------------------------------------------------------ #
+    def scan(self, node_id: int, pred, binding: Optional[Dict[str, object]],
+             engine: ScanEngine) -> np.ndarray:
+        """In-situ boolean mask of ``pred`` over a stored stage, using the
+        engine's compiled (and cached) atom program."""
+        prog = engine.compile(pred)
+        engine.stats.scans += 1
+        engine.stats.insitu_scans += 1
+        return self.backend.scan(prog, self.stages[node_id], binding or {})
+
+    # ------------------------------------------------------------------ #
+    def sizes(self) -> Dict[int, int]:
+        return {nid: st.nbytes() for nid, st in self.stages.items()}
+
+    def nbytes(self) -> int:
+        return int(sum(st.nbytes() for st in self.stages.values()))
+
+    def raw_nbytes(self) -> int:
+        return int(sum(st.raw_nbytes for st in self.stages.values()))
+
+    def compression_ratio(self) -> float:
+        return self.raw_nbytes() / max(self.nbytes(), 1)
+
+    def encodings(self) -> Dict[int, Dict[str, str]]:
+        return {nid: st.encodings() for nid, st in self.stages.items()}

@@ -1,0 +1,187 @@
+"""Budget-aware materialization planner (plan.plan_materialization) and the
+per-stage degradation path in PredTrace.
+
+Contract (ISSUE satellite):
+  * ``budget_bytes=None`` (infinite) reproduces the current precise answers.
+  * ``budget_bytes=0`` reproduces ``query_iterative`` answers exactly
+    (superset allowed by the paper; these queries converge to 0 FPR).
+  * Intermediate budgets stay *sound*: every answer covers the precise
+    lineage, and tables whose stage chain survived stay precise.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import Executor, PredTrace
+from repro.core.plan import (
+    LineagePlan, MaterializationPlan, Stage, plan_materialization,
+    stage_param_deps,
+)
+from repro.core.expr import BinOp, Col, Param, land
+from repro.tpch import ALL_QUERIES
+
+from conftest import lineage_sets
+
+BUDGET_QUERIES = ["q3", "q4", "q5", "q10"]
+
+
+def _plan_with_stages():
+    """A synthetic two-stage LineagePlan: stage 20's predicate consumes a
+    param bound by stage 10 (chain dependency)."""
+    p0 = BinOp("==", Col("k"), Param("v_out"))
+    st0 = Stage(10, run_pred=p0, params_out={"v_mid": "k"})
+    p1 = land(BinOp("==", Col("j"), Param("v_mid")), Col("x") > 3)
+    st1 = Stage(20, run_pred=p1, params_out={"v_leaf": "j"})
+    return LineagePlan(plan=None, out_params={"v_out": "k"},
+                       stages=[st0, st1], source_preds=[])
+
+
+def test_stage_param_deps_chain():
+    lp = _plan_with_stages()
+    deps = stage_param_deps(lp)
+    assert deps[10] == set()
+    assert deps[20] == {10}
+
+
+def test_planner_infinite_budget_keeps_all():
+    lp = _plan_with_stages()
+    mp = plan_materialization(lp, {10: 100, 20: 100}, None)
+    assert mp.kept == [10, 20] and not mp.dropped and not mp.degraded
+
+
+def test_planner_zero_budget_drops_all():
+    lp = _plan_with_stages()
+    mp = plan_materialization(lp, {10: 100, 20: 100}, 0)
+    assert mp.kept == [] and mp.dropped == {10, 20}
+
+
+def test_planner_respects_budget_and_dependencies():
+    lp = _plan_with_stages()
+    # both fit
+    mp = plan_materialization(lp, {10: 100, 20: 100}, 200)
+    assert mp.kept == [10, 20] and mp.kept_bytes == 200
+    # only the first fits; the second is over budget
+    mp = plan_materialization(lp, {10: 100, 20: 100}, 150)
+    assert mp.kept == [10] and mp.dropped == {20}
+    # first doesn't fit => dependency closure drops the second even though
+    # it would fit on its own
+    mp = plan_materialization(lp, {10: 1000, 20: 10}, 100)
+    assert mp.kept == [] and mp.dropped == {10, 20}
+    assert isinstance(mp, MaterializationPlan)
+
+
+def _prepared(db, plan, **kw):
+    res = Executor(db).run(plan)
+    pt = PredTrace(db, plan, **kw)
+    pt.infer(stats=res.stats)
+    pt.run()
+    return pt
+
+
+@pytest.mark.parametrize("qname", BUDGET_QUERIES)
+def test_infinite_budget_reproduces_precise(tpch_db, qname):
+    plan = ALL_QUERIES[qname](tpch_db)
+    if Executor(tpch_db).run(plan).output.nrows == 0:
+        pytest.skip(f"{qname} empty at this scale factor")
+    pt = _prepared(tpch_db, plan)
+    pt_inf = _prepared(tpch_db, plan, store=True, budget_bytes=None)
+    assert pt_inf.mat_plan is not None and not pt_inf.mat_plan.degraded
+    for r in range(min(6, pt.exec_result.output.nrows)):
+        assert (lineage_sets(pt.query(r).lineage)
+                == lineage_sets(pt_inf.query(r).lineage)), (qname, r)
+
+
+@pytest.mark.parametrize("qname", BUDGET_QUERIES)
+def test_zero_budget_reproduces_query_iterative(tpch_db, qname):
+    plan = ALL_QUERIES[qname](tpch_db)
+    if Executor(tpch_db).run(plan).output.nrows == 0:
+        pytest.skip(f"{qname} empty at this scale factor")
+    pt0 = _prepared(tpch_db, plan, budget_bytes=0)
+    if pt0.lineage_plan.stages:
+        assert pt0.mat_plan.dropped, "budget 0 must drop every stage"
+    pt_iter = PredTrace(tpch_db, plan)
+    pt_iter.infer_iterative()
+    pt_iter.run_unmodified()
+    for r in range(min(6, pt0.exec_result.output.nrows)):
+        got = lineage_sets(pt0.query(r).lineage)
+        want = lineage_sets(pt_iter.query_iterative(r).lineage)
+        assert got == want, (qname, r)
+
+
+@pytest.mark.parametrize("qname", BUDGET_QUERIES)
+def test_partial_budget_is_sound_superset(tpch_db, qname):
+    plan = ALL_QUERIES[qname](tpch_db)
+    if Executor(tpch_db).run(plan).output.nrows == 0:
+        pytest.skip(f"{qname} empty at this scale factor")
+    pt = _prepared(tpch_db, plan)
+    pt_full = _prepared(tpch_db, plan, store=True)
+    total = pt_full.store.nbytes()
+    for frac in (0.5, 0.25, 0.0):
+        pt_b = _prepared(tpch_db, plan, budget_bytes=int(total * frac))
+        assert pt_b.mat_plan.kept_bytes <= max(int(total * frac), 0)
+        for r in range(min(4, pt.exec_result.output.nrows)):
+            want = lineage_sets(pt.query(r).lineage)
+            ans = pt_b.query(r)
+            got = lineage_sets(ans.lineage)
+            for tab in want:  # sound: never misses true lineage
+                assert want[tab] <= got.get(tab, set()), (qname, frac, r, tab)
+            if pt_b.mat_plan.dropped:
+                assert ans.detail.get("superset_tables"), (qname, frac)
+
+
+def test_budget_query_batch_delegates(tpch_db):
+    plan = ALL_QUERIES["q3"](tpch_db)
+    if Executor(tpch_db).run(plan).output.nrows == 0:
+        pytest.skip("q3 empty at this scale factor")
+    pt0 = _prepared(tpch_db, plan, budget_bytes=0)
+    n = min(4, pt0.exec_result.output.nrows)
+    batch = pt0.query_batch(list(range(n)))
+    for r, ans in enumerate(batch):
+        assert (lineage_sets(ans.lineage)
+                == lineage_sets(pt0.query(r).lineage)), r
+
+
+def test_user_supplied_store_budget_is_enforced(tpch_db):
+    from repro.core.store import IntermediateStore
+
+    plan = ALL_QUERIES["q3"](tpch_db)
+    if Executor(tpch_db).run(plan).output.nrows == 0:
+        pytest.skip("q3 empty at this scale factor")
+    pt = _prepared(tpch_db, plan, store=IntermediateStore(budget_bytes=1))
+    assert pt.lineage_plan.stages, "q3 should need a materialized stage"
+    assert pt.mat_plan.dropped, "a 1-byte budget on the store must drop stages"
+    assert pt.store.nbytes() <= 1
+
+
+def test_attach_store_of_evicted_spill_degrades(tmp_path, tpch_db):
+    """A spill taken after budget eviction misses stages; attaching it must
+    mark them (and their dependents) dropped, not crash query/query_batch."""
+    from repro.checkpoint.store_io import load_store, save_store
+
+    plan = ALL_QUERIES["q3"](tpch_db)
+    if Executor(tpch_db).run(plan).output.nrows == 0:
+        pytest.skip("q3 empty at this scale factor")
+    pt_b = _prepared(tpch_db, plan, budget_bytes=0)  # evicts every stage
+    save_store(tmp_path, pt_b.store)
+    pt2 = PredTrace(tpch_db, plan)
+    pt2.infer()
+    pt2.run_unmodified()
+    pt2.attach_store(load_store(tmp_path))
+    assert pt2.mat_plan.dropped == {s.node_id for s in pt2.lineage_plan.stages}
+    pt_precise = _prepared(tpch_db, plan)
+    for r in range(min(3, pt2.exec_result.output.nrows)):
+        want = lineage_sets(pt_precise.query(r).lineage)
+        for ans in (pt2.query(r), pt2.query_batch([r])[0]):
+            got = lineage_sets(ans.lineage)
+            for tab in want:
+                assert want[tab] <= got.get(tab, set()), (r, tab)
+
+
+def test_detail_reports_superset_tables(tpch_db):
+    plan = ALL_QUERIES["q4"](tpch_db)
+    if Executor(tpch_db).run(plan).output.nrows == 0:
+        pytest.skip("q4 empty at this scale factor")
+    pt0 = _prepared(tpch_db, plan, budget_bytes=0)
+    ans = pt0.query(0)
+    assert set(ans.detail["superset_tables"]) == set(ans.lineage)
+    assert "iterations" in ans.detail

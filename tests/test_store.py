@@ -1,0 +1,398 @@
+"""Compressed columnar intermediate store (core/store.py).
+
+Differential guarantees:
+  1. Every encoding round-trips bit-exactly (decode == original, gather ==
+     fancy indexing) across dtypes, including NaN floats and empty columns.
+  2. In-situ comparison/membership masks == NumPy semantics on the raw
+     array, for every op, threshold shape, and boundary value.
+  3. ``InSituBackend.scan`` over an encoded stage == ``ScanEngine.scan``
+     over the raw table for every compiled predicate shape, and store-backed
+     ``PredTrace.query`` == the raw-table path on TPC-H Q3/Q5/Q10.
+  4. Spill/reload through ``checkpoint.store_io`` preserves answers and
+     encoded bytes.
+"""
+
+import numpy as np
+import pytest
+
+from repro.checkpoint.store_io import load_store, save_store
+from repro.core import Executor, PredTrace, ScanEngine
+from repro.core.expr import Col, IsIn, Param, UnaryOp, land, lor
+from repro.core.scan import OPS, _NP_CMP
+from repro.core.store import (
+    DELTA_BLOCK,
+    DeltaColumn,
+    InSituBackend,
+    analyze_column,
+    choose_encoding,
+    column_from_state,
+    encode_column,
+    encode_table,
+    estimate_encoded_nbytes,
+)
+from repro.core.table import Table
+from repro.tpch import ALL_QUERIES
+
+from conftest import lineage_sets
+
+
+def _rng():
+    return np.random.default_rng(7)
+
+
+def _case_columns():
+    rng = _rng()
+    n = 6000
+    return {
+        "sorted_ids": np.sort(rng.integers(0, 10**7, n)).astype(np.int64),
+        "arange": np.arange(n, dtype=np.int64),
+        "small_range": rng.integers(0, 200, n).astype(np.int64),
+        "low_card_i32": rng.integers(0, 12, n).astype(np.int32),
+        "runs": np.repeat(rng.integers(0, 50, n // 40), 40),
+        "floats": rng.normal(size=n),
+        "float_nan": np.where(rng.random(n) < 0.1, np.nan, rng.normal(size=n)),
+        "float_lowcard": rng.choice([0.5, 1.25, 7.0], n),
+        "money": np.round(rng.uniform(-999, 9999, n) * 100) / 100,
+        "int_floats": rng.integers(0, 500, n).astype(np.float64),
+        "bools": rng.random(n) < 0.3,
+        "const": np.full(n, 42, dtype=np.int64),
+        "empty_i64": np.array([], dtype=np.int64),
+        "single": np.array([7], dtype=np.int64),
+        "neg_range": rng.integers(-10**6, -10**6 + 300, n).astype(np.int64),
+    }
+
+
+# --------------------------------------------------------------------------- #
+# 1. round-trips
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("name", sorted(_case_columns()))
+def test_roundtrip_decode_and_gather(name):
+    arr = _case_columns()[name]
+    enc = encode_column(arr)
+    dec = enc.decode()
+    assert dec.dtype == arr.dtype
+    assert np.array_equal(dec, arr, equal_nan=True)
+    assert enc.nbytes() <= max(arr.nbytes, 16), (name, enc.kind)
+    if len(arr):
+        idx = _rng().integers(0, len(arr), 500)
+        assert np.array_equal(enc.gather(idx), arr[idx], equal_nan=True)
+    # serialization round-trip (checkpoint spill payload)
+    meta, arrays = enc.state()
+    back = column_from_state(meta, arrays)
+    assert back.kind == enc.kind
+    assert np.array_equal(back.decode(), arr, equal_nan=True)
+
+
+def test_expected_encoding_choices():
+    cols = _case_columns()
+    expect = {
+        "sorted_ids": "delta", "arange": "delta", "small_range": "for",
+        "runs": "rle", "bools": "bitpack",
+        # exact centi-integers: the scaled-int image compresses better than
+        # a float dictionary
+        "float_lowcard": "scaled",
+        "money": "scaled", "int_floats": "scaled", "floats": "plain",
+        "float_nan": "plain", "const": "rle",
+    }
+    for name, kind in expect.items():
+        assert encode_column(cols[name]).kind == kind, name
+
+
+def test_stats_estimate_matches_actual_within_slack():
+    for name, arr in _case_columns().items():
+        if not len(arr):
+            continue
+        est = estimate_encoded_nbytes(arr)
+        actual = encode_column(arr).nbytes()
+        assert est <= arr.nbytes + 16
+        # the stats pass drives the budget planner: it must track reality
+        assert actual <= 2 * est + 64, (name, est, actual)
+
+
+def test_delta_runs_crossing_blocks():
+    # long runs of equal values spanning block boundaries exercise the
+    # multi-block equality-range path
+    arr = np.repeat(np.arange(8, dtype=np.int64), DELTA_BLOCK + 37)
+    enc = DeltaColumn.encode(arr, np.dtype(np.uint8))
+    assert np.array_equal(enc.decode(), arr)
+    for opn, opc in OPS.items():
+        for v in (-1, 0, 3, 7, 8, 2.5):
+            assert np.array_equal(
+                enc.cmp_mask(opc, v), np.asarray(_NP_CMP[opc](arr, v), bool)
+            ), (opn, v)
+    idx = _rng().integers(0, len(arr), 400)
+    assert np.array_equal(enc.gather(idx), arr[idx])
+
+
+# --------------------------------------------------------------------------- #
+# 2. in-situ atom masks == numpy semantics
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("name", sorted(_case_columns()))
+def test_cmp_masks_match_numpy(name):
+    arr = _case_columns()[name]
+    enc = encode_column(arr)
+    probes = [0, -1, 42, 10**9, 3.5, -0.25, float("nan")]
+    if len(arr):
+        probes += [arr[len(arr) // 2], arr.min(), arr.max()]
+    for opname, opc in OPS.items():
+        for v in probes:
+            v = v.item() if isinstance(v, np.generic) else v
+            if isinstance(v, (bool, np.bool_)):
+                continue
+            got = enc.cmp_mask(opc, v)
+            if got is None:
+                continue  # encoding defers to the decoded oracle
+            want = np.asarray(_NP_CMP[opc](arr, v), bool)
+            assert np.array_equal(got, want), (name, enc.kind, opname, v)
+
+
+@pytest.mark.parametrize("name", sorted(_case_columns()))
+def test_isin_masks_match_numpy(name):
+    arr = _case_columns()[name]
+    if not len(arr):
+        return
+    rng = _rng()
+    sets = [
+        arr[rng.integers(0, len(arr), 5)],
+        np.array([0, 42, 10**9]),
+        np.array([], dtype=np.int64),
+        np.array([np.nan, 1.0]),
+    ]
+    enc = encode_column(arr)
+    for vals in sets:
+        got = enc.isin_mask(np.asarray(vals))
+        if got is None:
+            continue
+        want = (np.isin(arr, np.asarray(vals)) if len(vals)
+                else np.zeros(len(arr), bool))
+        assert np.array_equal(got, want), (name, enc.kind, vals[:3])
+
+
+# --------------------------------------------------------------------------- #
+# 3. in-situ scans == ScanEngine over raw tables
+# --------------------------------------------------------------------------- #
+
+
+def _scan_table(n):
+    rng = _rng()
+    return Table.from_dict(
+        {
+            "a": rng.integers(0, 50, n).astype(np.int32),
+            "b": np.sort(rng.integers(0, 10**7, n)).astype(np.int64),
+            "c": rng.integers(0, 200, n).astype(np.int64),
+            "d": rng.normal(size=n),
+            "e": np.round(rng.uniform(0, 100, n) * 100) / 100,
+        },
+        name="t",
+    )
+
+
+def _preds(t):
+    n = t.nrows
+    return [
+        (Col("a") >= 10, {}),
+        (land(Col("b").eq(Param("v")), Col("c") < 100),
+         {"v": int(t.cols["b"][n // 2])}),
+        (Col("b").eq(Param("v")), {"v": t.cols["b"][:50]}),
+        (land(Col("a").eq(Param("v")), Col("d") <= 0.25, Col("e") > 55.25),
+         {"v": 7}),
+        (IsIn(Col("a"), (1, 2, 3)), {}),
+        (IsIn(Col("a"), Param("s")), {"s": np.array([4, 44])}),
+        (land(Col("a") < Col("c"), Col("b") >= 5 * 10**6), {}),
+        (lor(Col("a") < 2, Col("c") > 190), {}),
+        (land(UnaryOp("year", Col("c")).eq(0), Col("b") > 100), {}),
+        (Col("e").eq(Param("w")), {"w": float(t.cols["e"][17])}),
+    ]
+
+
+# 40000 rows crosses the candidate-mode threshold; 1000 stays on the
+# small-stage decoded fallback — both must agree with the engine
+@pytest.mark.parametrize("n", [1000, 40000])
+def test_insitu_scan_matches_engine(n):
+    t = _scan_table(n)
+    st = encode_table(t)
+    eng = ScanEngine()
+    be = InSituBackend()
+    for pred, binding in _preds(t):
+        got = be.scan(eng.compile(pred), st, binding)
+        want = eng.scan(pred, t, binding)
+        assert np.array_equal(got, want), pred
+
+
+@pytest.mark.parametrize("n", [1000, 40000])
+def test_insitu_lit_array_broadcasts_like_oracle(n):
+    """A literal 1-D array rhs on ``==`` broadcasts elementwise in the
+    oracle (only *param* bindings mean membership) — the in-situ path must
+    agree, in both full-mask and candidate mode."""
+    from repro.core.expr import BinOp, Lit
+
+    t = _scan_table(n)
+    st = encode_table(t)
+    eng = ScanEngine()
+    be = InSituBackend()
+    arr = _rng().integers(0, 50, n).astype(np.int32)
+    cases = [
+        (BinOp("==", Col("a"), Lit(arr)), {}),
+        # selective cheap pivot first so the lit-array atom runs in
+        # candidate mode on large tables
+        (land(Col("a").eq(Param("v")), BinOp("==", Col("b"), Lit(arr.astype(np.int64)))),
+         {"v": 7}),
+    ]
+    for pred, binding in cases:
+        got = be.scan(eng.compile(pred), st, binding)
+        want = eng.scan(pred, t, binding)
+        assert np.array_equal(got, want), pred
+
+
+@pytest.mark.parametrize("n", [1000, 40000])
+def test_insitu_rowwise_array_param_matches_oracle(n):
+    """A param bound to a row-aligned array on a non-equality atom (and in
+    residuals) broadcasts elementwise in the oracle; candidate mode must not
+    misalign it against the gathered survivors."""
+    t = _scan_table(n)
+    st = encode_table(t)
+    eng = ScanEngine()
+    be = InSituBackend()
+    w = _rng().integers(0, 200, n).astype(np.int64)
+    cases = [
+        # selective equality pivot first, then the array-bound comparison
+        (land(Col("a").eq(Param("v")), Col("c") < Param("w")), {"v": 7, "w": w}),
+        # array binding inside a param-bearing residual (OR-tree)
+        (land(Col("a").eq(Param("v")), lor(Col("c") < Param("w"), Col("a") < 0)),
+         {"v": 7, "w": w}),
+    ]
+    for pred, binding in cases:
+        got = be.scan(eng.compile(pred), st, binding)
+        want = eng.scan(pred, t, binding)
+        assert np.array_equal(got, want), pred
+
+
+@pytest.mark.parametrize("qname", ["q3", "q5", "q10"])
+def test_store_backed_query_matches_raw_tpch(tpch_db, qname):
+    plan = ALL_QUERIES[qname](tpch_db)
+    res = Executor(tpch_db).run(plan)
+    if res.output.nrows == 0:
+        pytest.skip(f"{qname} empty at this scale factor")
+    pt_raw = PredTrace(tpch_db, plan)
+    pt_raw.infer(stats=res.stats)
+    pt_raw.run()
+    pt_st = PredTrace(tpch_db, plan, store=True)
+    pt_st.infer(stats=res.stats)
+    pt_st.run()
+    assert pt_st.store.stages, "expected materialized stages in the store"
+    assert pt_st.store.compression_ratio() > 1.0
+    n = min(8, res.output.nrows)
+    for r in range(n):
+        assert (lineage_sets(pt_raw.query(r).lineage)
+                == lineage_sets(pt_st.query(r).lineage)), (qname, r)
+    # batch path reads through the store too
+    batch = pt_st.query_batch(list(range(n)))
+    for r, ans in enumerate(batch):
+        assert (lineage_sets(ans.lineage)
+                == lineage_sets(pt_raw.query(r).lineage)), (qname, r)
+    assert pt_st.scan_engine.stats.insitu_scans > 0
+
+
+def test_insitu_stage_scan_matches_engine_on_decoded(tpch_db):
+    """The tentpole contract, stated directly: for each materialized stage,
+    ``store.scan`` == ``ScanEngine.scan`` over the decoded table."""
+    for qname in ("q3", "q5", "q10"):
+        plan = ALL_QUERIES[qname](tpch_db)
+        res = Executor(tpch_db).run(plan)
+        if res.output.nrows == 0:
+            continue
+        pt = PredTrace(tpch_db, plan, store=True)
+        pt.infer(stats=res.stats)
+        pt.run()
+        binding = pt._output_binding(0)
+        for st in pt.lineage_plan.stages:
+            from repro.core.expr import params_of
+
+            if params_of(st.run_pred) - set(binding):
+                continue
+            got = pt.store.scan(st.node_id, st.run_pred, binding, pt.scan_engine)
+            want = pt.scan_engine.scan(
+                st.run_pred, pt.store.table(st.node_id), binding
+            )
+            assert np.array_equal(got, want), (qname, st.node_id)
+
+
+# --------------------------------------------------------------------------- #
+# 4. checkpoint spill
+# --------------------------------------------------------------------------- #
+
+
+def test_spill_reload_roundtrip(tmp_path, tpch_db):
+    plan = ALL_QUERIES["q3"](tpch_db)
+    res = Executor(tpch_db).run(plan)
+    if res.output.nrows == 0:
+        pytest.skip("q3 empty at this scale factor")
+    pt = PredTrace(tpch_db, plan, store=True)
+    pt.infer(stats=res.stats)
+    pt.run()
+    want = lineage_sets(pt.query(0).lineage)
+    save_store(tmp_path, pt.store)
+    reloaded = load_store(tmp_path)
+    assert reloaded.nbytes() == pt.store.nbytes()
+    assert set(reloaded.stages) == set(pt.store.stages)
+    pt.attach_store(reloaded)
+    assert lineage_sets(pt.query(0).lineage) == want
+
+
+def test_spill_detects_corruption(tmp_path):
+    t = _scan_table(500)
+    from repro.core.store import IntermediateStore
+
+    store = IntermediateStore()
+    store.put(1, t)
+    path = save_store(tmp_path, store)
+    # flip bytes in one payload file
+    victim = next(p for p in path.iterdir() if p.suffix == ".npy")
+    data = bytearray(victim.read_bytes())
+    data[-1] ^= 0xFF
+    victim.write_bytes(bytes(data))
+    with pytest.raises(IOError):
+        load_store(tmp_path)
+    # unverified load still works (caller's choice)
+    load_store(tmp_path, verify=False)
+
+
+def test_load_falls_back_to_old_spill(tmp_path):
+    """A crash between demoting the previous spill and promoting the staged
+    one leaves ``store.old`` — load_store must recover from it."""
+    import os
+
+    from repro.core.store import IntermediateStore
+
+    t = _scan_table(300)
+    store = IntermediateStore()
+    store.put(1, t)
+    save_store(tmp_path, store)
+    os.replace(tmp_path / "store", tmp_path / "store.old")  # simulated crash
+    reloaded = load_store(tmp_path)
+    assert set(reloaded.stages) == {1}
+    assert np.array_equal(reloaded.table(1).cols["a"], t.cols["a"])
+
+
+def test_atomic_save_replaces_previous(tmp_path):
+    from repro.core.store import IntermediateStore
+
+    t = _scan_table(200)
+    store = IntermediateStore()
+    store.put(1, t)
+    save_store(tmp_path, store)
+    store.put(2, t)
+    save_store(tmp_path, store)
+    assert set(load_store(tmp_path).stages) == {1, 2}
+
+
+def test_analyze_column_stats_shape():
+    arr = np.sort(_rng().integers(0, 1000, 2000)).astype(np.int64)
+    st = analyze_column(arr)
+    assert st.is_sorted and st.vmin is not None and st.max_delta is not None
+    kind, est = choose_encoding(st)
+    assert kind == "delta" and est < arr.nbytes

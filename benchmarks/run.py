@@ -30,6 +30,7 @@ def main() -> None:
         bench_coverage, bench_fpr, bench_inter_opt, bench_no_inter,
         bench_overhead, bench_query_scaling, bench_query_time,
     )
+    from .partition_bench import bench_partition
     from .pipelines import bench_pipelines
     from .roofline_bench import bench_roofline
     from .scan_bench import bench_scan_engine
@@ -47,6 +48,7 @@ def main() -> None:
         "kernels": bench_kernels,         # kernel-path scans
         "scan_engine": bench_scan_engine, # batched vs single-row query latency
         "store": bench_store,             # compressed store + budget planner
+        "partition": bench_partition,     # zone-map pruning + parallel scans
         "roofline": bench_roofline,       # §Roofline (reads dry-run artifacts)
     }
     selected = args.only.split(",") if args.only else list(benches)

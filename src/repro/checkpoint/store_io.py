@@ -7,6 +7,14 @@ This module persists an :class:`~repro.core.store.IntermediateStore` in its
 in-situ scan path consumes, so reload is a handful of ``np.load`` calls, not
 a re-execution of the pipeline.
 
+Partitioned stages (zone-mapped fixed-size row chunks) spill **partition-
+wise**: every chunk's columns are encoded and written as independent
+payloads, and the stage's zone maps land in the manifest sidecar.  A later
+query can therefore zone-map-prune against the manifest alone and load *only
+the surviving chunks* (:func:`load_stage_partitions` /
+:func:`scan_spilled_stage`) — the disk-level analogue of the in-memory
+partition pruning in ``core/store.py``.
+
 Same durability idioms as ``checkpoint/manager.py``:
 
 * **Atomicity** — writes stage into ``<name>.tmp``; the previous spill is
@@ -21,7 +29,9 @@ Layout (one directory per spill)::
     <root>/<name>.tmp/...          # staged writes
     <root>/<name>/
         manifest.json              # stages, encodings, dtypes, hashes
-        s<node>_<i>.npy ...        # one file per encoded payload array
+        s<node>_<i>_<arr>.npy ...  # whole-column payloads (unpartitioned)
+        s<node>_p<p>_<i>_<arr>.npy # per-partition payloads (partitioned)
+        s<node>_zones.npz          # zone-map sidecar (partitioned)
 
 Unlike ``CheckpointManager`` this is numpy-only (no JAX dependency): the
 store serves host-side lineage queries.
@@ -34,19 +44,42 @@ import json
 import os
 import shutil
 from pathlib import Path
-from typing import Dict
+from typing import Dict, Optional, Tuple
 
 import numpy as np
 
-from ..core.store import IntermediateStore, StoredTable, column_from_state
+from ..core.scan import partition_safe, prune_zone_maps
+from ..core.store import (
+    IntermediateStore, StoredTable, column_from_state, encode_column,
+)
+from ..core.table import Table, ZoneMaps, alive_runs
 
 
 def _hash(arr: np.ndarray) -> str:
     return hashlib.sha256(np.ascontiguousarray(arr).tobytes()).hexdigest()[:16]
 
 
+def _hash_file(path: Path) -> str:
+    return hashlib.sha256(path.read_bytes()).hexdigest()[:16]
+
+
+def _save_payloads(tmp: Path, prefix: str, enc_cols) -> Dict:
+    """One stage's (or chunk's) encoded columns -> manifest column dict."""
+    cols = {}
+    for i, (col, enc) in enumerate(enc_cols.items()):
+        meta, arrays = enc.state()
+        files = {}
+        for aname, arr in arrays.items():
+            fname = f"{prefix}_{i}_{aname}.npy"
+            np.save(tmp / fname, arr)
+            files[aname] = {"file": fname, "sha": _hash(arr)}
+        cols[col] = {"meta": meta, "arrays": files}
+    return cols
+
+
 def save_store(root, store: IntermediateStore, name: str = "store") -> Path:
-    """Atomically persist every stage of ``store`` under ``root/name``."""
+    """Atomically persist every stage of ``store`` under ``root/name``.
+    Stages carrying zone maps are written partition-wise."""
     root = Path(root)
     root.mkdir(parents=True, exist_ok=True)
     tmp, final = root / f"{name}.tmp", root / name
@@ -60,22 +93,34 @@ def save_store(root, store: IntermediateStore, name: str = "store") -> Path:
         "stages": {},
     }
     for nid, st in store.stages.items():
-        cols = {}
-        for i, (col, enc) in enumerate(st.enc.items()):
-            meta, arrays = enc.state()
-            files = {}
-            for aname, arr in arrays.items():
-                fname = f"s{nid}_{i}_{aname}.npy"
-                np.save(tmp / fname, arr)
-                files[aname] = {"file": fname, "sha": _hash(arr)}
-            cols[col] = {"meta": meta, "arrays": files}
-        manifest["stages"][str(nid)] = {
+        entry: Dict = {
             "name": st.name,
             "nrows": st.nrows,
             "raw_nbytes": st.raw_nbytes,
             "dicts": st.dicts,
-            "columns": cols,
         }
+        zm = st.zone_maps
+        if zm is not None and zm.n_partitions > 1:
+            zmeta, zarrays = zm.state()
+            zfile = f"s{nid}_zones.npz"
+            np.savez(tmp / zfile, **zarrays)
+            entry["zone_maps"] = {
+                "meta": zmeta, "file": zfile, "sha": _hash_file(tmp / zfile),
+            }
+            entry["format"] = "chunks"
+            chunks = []
+            for p in range(zm.n_partitions):
+                lo, hi = zm.part_bounds(p)
+                idx = np.arange(lo, hi, dtype=np.int64)
+                chunk_enc = {
+                    col: encode_column(enc.gather(idx))
+                    for col, enc in st.enc.items()
+                }
+                chunks.append(_save_payloads(tmp, f"s{nid}_p{p}", chunk_enc))
+            entry["chunks"] = chunks
+        else:
+            entry["columns"] = _save_payloads(tmp, f"s{nid}", st.enc)
+        manifest["stages"][str(nid)] = entry
     (tmp / "manifest.json").write_text(json.dumps(manifest))
     # never a window without a good spill: move the previous one aside,
     # promote the staged write, then drop the old copy
@@ -90,33 +135,154 @@ def save_store(root, store: IntermediateStore, name: str = "store") -> Path:
     return final
 
 
-def load_store(root, name: str = "store", verify: bool = True) -> IntermediateStore:
-    """Reload a spilled store; encoded columns come back byte-identical, so
-    in-situ scans and lineage answers match the pre-spill store exactly.
-    Falls back to the ``.old`` copy if a crash interrupted a re-spill between
-    demoting the previous directory and promoting the staged one."""
+def _spill_path(root, name: str) -> Path:
+    """The live spill directory, falling back to the ``.old`` copy if a
+    crash interrupted a re-spill between demote and promote."""
     path = Path(root) / name
     if not (path / "manifest.json").exists() and (
         Path(root) / f"{name}.old" / "manifest.json"
     ).exists():
         path = Path(root) / f"{name}.old"
+    return path
+
+
+def _load_payloads(path: Path, cols_manifest: Dict, verify: bool) -> Dict:
+    enc = {}
+    for col, cm in cols_manifest.items():
+        arrays = {}
+        for aname, fm in cm["arrays"].items():
+            arr = np.load(path / fm["file"])
+            if verify and _hash(arr) != fm["sha"]:
+                raise IOError(
+                    f"store spill corrupt: column {col!r} payload "
+                    f"{aname!r} hash mismatch ({fm['file']})"
+                )
+            arrays[aname] = arr
+        enc[col] = column_from_state(cm["meta"], arrays)
+    return enc
+
+
+def _load_zone_maps(path: Path, entry: Dict, verify: bool) -> Optional[ZoneMaps]:
+    zinfo = entry.get("zone_maps")
+    if zinfo is None:
+        return None
+    zpath = path / zinfo["file"]
+    if verify and _hash_file(zpath) != zinfo["sha"]:
+        raise IOError(f"store spill corrupt: zone-map sidecar {zinfo['file']}")
+    with np.load(zpath) as z:
+        return ZoneMaps.from_state(zinfo["meta"], dict(z))
+
+
+def load_store(root, name: str = "store", verify: bool = True) -> IntermediateStore:
+    """Reload a spilled store; encoded columns come back byte-identical, so
+    in-situ scans and lineage answers match the pre-spill store exactly.
+    Partition-wise stages are reassembled (chunk decode + re-encode — the
+    encoding choice is deterministic, so the result matches the pre-spill
+    encoding) with their zone maps restored."""
+    path = _spill_path(root, name)
     manifest = json.loads((path / "manifest.json").read_text())
     store = IntermediateStore(budget_bytes=manifest.get("budget_bytes"))
     for nid_s, sm in manifest["stages"].items():
-        enc = {}
-        for col, cm in sm["columns"].items():
-            arrays = {}
-            for aname, fm in cm["arrays"].items():
-                arr = np.load(path / fm["file"])
-                if verify and _hash(arr) != fm["sha"]:
-                    raise IOError(
-                        f"store spill corrupt: stage {nid_s} column {col!r} "
-                        f"payload {aname!r} hash mismatch"
-                    )
-                arrays[aname] = arr
-            enc[col] = column_from_state(cm["meta"], arrays)
+        zm = _load_zone_maps(path, sm, verify)
+        if sm.get("format") == "chunks":
+            parts = [_load_payloads(path, cm, verify) for cm in sm["chunks"]]
+            enc = {}
+            for col in parts[0]:
+                full = np.concatenate([p[col].decode() for p in parts])
+                enc[col] = encode_column(full)
+        else:
+            enc = _load_payloads(path, sm["columns"], verify)
         store.stages[int(nid_s)] = StoredTable(
             enc, {k: list(v) for k, v in sm["dicts"].items()},
-            sm["name"], sm["nrows"], sm["raw_nbytes"],
+            sm["name"], sm["nrows"], sm["raw_nbytes"], zone_maps=zm,
         )
     return store
+
+
+def load_stage_partitions(
+    root, node_id: int, alive: np.ndarray, name: str = "store",
+    verify: bool = True,
+) -> Tuple[Table, np.ndarray]:
+    """Load *only* the surviving partitions of one spilled stage.
+
+    ``alive`` is a boolean mask over the stage's partitions (e.g. from
+    ``prune_zone_maps`` against the manifest's zone maps).  Returns the
+    decoded rows of the surviving chunks as a Table plus their global row
+    indices within the stage — pruned chunks are never read from disk."""
+    path = _spill_path(root, name)
+    manifest = json.loads((path / "manifest.json").read_text())
+    sm = manifest["stages"][str(node_id)]
+    if sm.get("format") != "chunks":
+        raise ValueError(f"stage {node_id} was not spilled partition-wise")
+    zm = _load_zone_maps(path, sm, verify)
+    alive = np.asarray(alive, dtype=bool)
+    cols: Dict[str, list] = {}
+    idx_parts = []
+    for p in np.flatnonzero(alive):
+        enc = _load_payloads(path, sm["chunks"][int(p)], verify)
+        for col, e in enc.items():
+            cols.setdefault(col, []).append(e.decode())
+        lo, hi = zm.part_bounds(int(p))
+        idx_parts.append(np.arange(lo, hi, dtype=np.int64))
+    if not idx_parts:
+        # schema-correct empty result: decode chunk 0 and keep zero rows
+        # (dtypes aren't recoverable from the manifest alone)
+        cols0 = {}
+        if sm["chunks"]:
+            enc = _load_payloads(path, sm["chunks"][0], verify)
+            cols0 = {col: e.decode()[:0] for col, e in enc.items()}
+        t = Table(cols0, {k: list(v) for k, v in sm["dicts"].items()},
+                  sm["name"])
+        return t, np.empty(0, dtype=np.int64)
+    table = Table({c: np.concatenate(vs) for c, vs in cols.items()},
+                  {k: list(v) for k, v in sm["dicts"].items()}, sm["name"])
+    return table, np.concatenate(idx_parts)
+
+
+def scan_spilled_stage(
+    root, node_id: int, pred, binding, engine, name: str = "store",
+    verify: bool = True,
+) -> np.ndarray:
+    """Predicate mask over a spilled stage, touching only surviving chunks.
+
+    Zone maps are read from the manifest sidecar and pruned *before any
+    payload I/O*; only the chunks that may contain matches are loaded and
+    scanned.  The returned mask is full-length and identical to scanning the
+    fully-loaded stage."""
+    path = _spill_path(root, name)
+    manifest = json.loads((path / "manifest.json").read_text())
+    sm = manifest["stages"][str(node_id)]
+    binding = binding or {}
+    prog = engine.compile(pred)
+    if sm.get("format") == "chunks":
+        zm = _load_zone_maps(path, sm, verify)
+        if partition_safe(prog, binding):
+            alive = prune_zone_maps(prog, zm, binding)
+        else:
+            alive = np.ones(zm.n_partitions, dtype=bool)
+        ns = int(np.count_nonzero(alive))
+        engine.stats.prune_calls += 1
+        engine.record_prune(ns, len(alive) - ns)
+        mask = np.zeros(sm["nrows"], dtype=bool)
+        if ns == 0:
+            return mask
+        # manifest and zone maps were parsed once above; load surviving
+        # chunks directly (contiguous runs keep each sub-scan a single slice)
+        for p0, p1 in alive_runs(alive):
+            cols: Dict[str, list] = {}
+            for p in range(p0, p1):
+                for col, e in _load_payloads(path, sm["chunks"][p],
+                                             verify).items():
+                    cols.setdefault(col, []).append(e.decode())
+            sub = Table({c: np.concatenate(vs) for c, vs in cols.items()},
+                        {k: list(v) for k, v in sm["dicts"].items()},
+                        sm["name"])
+            lo = zm.part_bounds(p0)[0]
+            hi = zm.part_bounds(p1 - 1)[1]
+            mask[lo:hi] = engine.backend.scan(prog, sub, binding)
+        return mask
+    # unpartitioned stage: load just this stage's payloads, not the store
+    enc = _load_payloads(path, sm["columns"], verify)
+    st = StoredTable(enc, {k: list(v) for k, v in sm["dicts"].items()},
+                     sm["name"], sm["nrows"], sm["raw_nbytes"])
+    return engine.backend.scan(prog, st.to_table(), binding)

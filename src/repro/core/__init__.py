@@ -9,10 +9,14 @@ from .lineage import LineageAnswer, PredTrace
 from .plan import (
     LineageInference, LineagePlan, MaterializationPlan, plan_materialization,
 )
+from .distributed import PartitionExecutor, distributed_refine
 from .pushdown import Pushdown
-from .scan import AtomProgram, NumpyBackend, PallasBackend, ScanEngine
+from .scan import (
+    AtomProgram, LRUCache, NumpyBackend, PallasBackend, ScanEngine,
+    prune_zone_maps,
+)
 from .store import InSituBackend, IntermediateStore, StoredTable, encode_column
-from .table import Table
+from .table import PartitionedTable, Table, ZoneMaps, build_zone_maps, partition_table
 
 __all__ = [
     "ops", "Col", "Expr", "IsIn", "Lit", "Param", "ParamSet", "land", "lnot",
@@ -22,4 +26,6 @@ __all__ = [
     "refine", "ScanEngine", "AtomProgram", "NumpyBackend", "PallasBackend",
     "IntermediateStore", "StoredTable", "InSituBackend", "encode_column",
     "MaterializationPlan", "plan_materialization",
+    "PartitionedTable", "ZoneMaps", "partition_table", "build_zone_maps",
+    "prune_zone_maps", "PartitionExecutor", "distributed_refine", "LRUCache",
 ]

@@ -1,86 +1,98 @@
-"""Distributed lineage scans: Algorithm 3's fixpoint on a sharded mesh.
+"""Partition-granular lineage execution: one scan path for single-node,
+multi-core, and device-sharded queries.
 
-Source tables shard row-wise over the (``pod``, ``data``) mesh axes.  Each
-refinement iteration is:
+:class:`PartitionExecutor` is the fan-out layer above the ScanEngine.  Its
+``scan`` method is a drop-in for :meth:`ScanEngine.scan` (same signature,
+bit-identical masks) and is what ``PredTrace`` / ``refine`` plug in when
+partitioning, a worker pool, or a device mesh is configured:
 
-  1. a *local* fused predicate scan per shard (jit'd ``eval_jnp``; the Pallas
-     ``pred_filter`` / ``membership`` kernels are the TPU codegen for the
-     same predicates),
-  2. an **all-gather of V-set deltas** across shards (here: host-side unique
-     of the globally-addressable masked values; on a multi-host fleet this is
-     ``jax.lax.all_gather`` over (pod, data) of fixed-capacity V-set
-     buffers).
+* **Zone-map pruning** (``scan.prune_zone_maps``) runs first on partitioned
+  tables — partitions whose per-column min/max statistics prove no row can
+  match are never touched.
+* **Surviving partitions** are scanned as slices, either serially or fanned
+  out across a thread pool (NumPy releases the GIL in the comparison
+  kernels); per-partition masks are merged deterministically by partition
+  index, so worker scheduling never changes an answer.
+* **Device meshes** (``distrib/sharding.py``): with a mesh, tables are
+  device_put row-sharded across the (pod, data) axes and scanned by the
+  engine's structure-cached ``jit_scan`` — the Pallas ``pred_filter`` /
+  ``membership`` kernels are the TPU codegen for the same predicates.
+  Zone-map pruning still short-circuits all-pruned scans before any device
+  work.  V-sets are padded to the next power of two with a sentinel so
+  shrinking sets between refinement iterations never retrace.
 
-Iterations are bounded by the longest join chain (paper §6.2), so collective
-cost is O(iters x |V|) — independent of table size.  V-sets use fixed-capacity
-sentinel-padded buffers so the per-iteration step stays jit-compiled once.
+``distributed_refine`` — Algorithm 3 on sharded data — is now a thin wrapper:
+it routes the shared :func:`repro.core.iterative.refine` fixpoint through a
+``PartitionExecutor`` scan, replacing the former ``ShardedCatalog``'s
+duplicated refinement loop (which predated the ScanEngine) entirely.
 """
 
 from __future__ import annotations
 
+import os
+import time
+import weakref
+from concurrent.futures import ThreadPoolExecutor
 from typing import Dict, Optional, Tuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding
-from jax.sharding import PartitionSpec as P
 
-from .expr import Expr, paramsets_of
-from .iterative import IterativePlan
+from .expr import Expr
+from .iterative import IterativePlan, refine
 from .lineage import LineageAnswer
 from .scan import ScanEngine, default_engine
-from .table import Table
+from .table import PartitionedTable, Table, alive_runs, partition_table
 
 SENTINEL = np.int64(-(2**62))
+
+# don't spin up threads for scans smaller than this many surviving rows —
+# the pool dispatch overhead would dominate
+MIN_PARALLEL_ROWS = 16384
 
 
 def _pad_rows(n: int, shards: int) -> int:
     return ((n + shards - 1) // shards) * shards
 
 
-class ShardedCatalog:
-    """Device-resident, row-sharded numeric views of the catalog columns."""
+class _DeviceTable:
+    """Row-sharded device-resident numeric view of one table's columns."""
 
-    def __init__(self, catalog: Dict[str, Table], mesh: Mesh,
-                 axes: Tuple[str, ...] = ("data",),
-                 engine: Optional[ScanEngine] = None):
-        self.mesh = mesh
-        # predicate structure -> jitted scan, shared with the host engine so
-        # repeated queries of the same plan never retrace
-        self.engine = engine or default_engine()
+    def __init__(self, table: Table, mesh, axes: Tuple[str, ...],
+                 engine: ScanEngine):
+        import jax
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as P
+
+        self.engine = engine
         self.axes = tuple(a for a in axes if a in mesh.axis_names)
         shards = 1
         for a in self.axes:
             shards *= mesh.shape[a]
-        self.nrows: Dict[str, int] = {}
-        self.padded: Dict[str, int] = {}
-        self.cols: Dict[str, Dict[str, jax.Array]] = {}
-        sh = NamedSharding(mesh, P(self.axes if len(self.axes) > 1 else self.axes[0]))
-        for name, t in catalog.items():
-            n = t.nrows
-            npad = _pad_rows(max(n, shards), shards)
-            self.nrows[name] = n
-            self.padded[name] = npad
-            cols = {}
-            for c in t.columns:
-                arr = np.asarray(t.cols[c])
-                if arr.dtype.kind == "f":
-                    arr = arr.astype(np.float64)
-                    pad_val = np.nan
-                else:
-                    arr = arr.astype(np.int64)
-                    pad_val = SENTINEL
-                padded = np.full(npad, pad_val, arr.dtype)
-                padded[:n] = arr
-                cols[c] = jax.device_put(padded, sh)
-            self.cols[name] = cols
+        n = table.nrows
+        self.nrows = n
+        self.padded = _pad_rows(max(n, shards), shards)
+        sh = NamedSharding(
+            mesh, P(self.axes if len(self.axes) > 1 else self.axes[0])
+        )
+        self.cols: Dict[str, object] = {}
+        for c in table.columns:
+            arr = np.asarray(table.cols[c])
+            if arr.dtype.kind == "f":
+                arr = arr.astype(np.float64)
+                pad_val = np.nan
+            else:
+                arr = arr.astype(np.int64)
+                pad_val = SENTINEL
+            padded = np.full(self.padded, pad_val, arr.dtype)
+            padded[:n] = arr
+            self.cols[c] = jax.device_put(padded, sh)
 
-    def scan(self, table: str, pred: Expr, binding: Dict[str, object]) -> np.ndarray:
+    def scan(self, pred: Expr, binding: Dict[str, object]) -> np.ndarray:
         """Jit-compiled predicate scan over the sharded columns -> host mask.
         V-set bindings are padded to the next power of two with a sentinel so
         shrinking sets between iterations don't retrace the jit."""
-        env = self.cols[table]
+        import jax.numpy as jnp
+
         b = {}
         for k, v in binding.items():
             if isinstance(v, np.ndarray):
@@ -93,72 +105,170 @@ class ShardedCatalog:
                 b[k] = jnp.asarray(padded)
             else:
                 b[k] = v
-        mask = self.engine.jit_scan(pred)(env, b)
+        mask = self.engine.jit_scan(pred)(self.cols, b)
         m = np.asarray(mask)
         if m.ndim == 0:  # constant predicate (True/False)
-            m = np.broadcast_to(m, (self.padded[table],))
-        return m[: self.nrows[table]]
+            m = np.broadcast_to(m, (self.padded,))
+        return m[: self.nrows]
+
+
+class PartitionExecutor:
+    """Fans predicate scans out over table partitions (and devices).
+
+    One executor serves one PredTrace / refine loop; it shares the owning
+    ScanEngine, so compiled atom programs, jit scans, and partition-slice
+    views are reused across every scan it dispatches."""
+
+    def __init__(self, engine: Optional[ScanEngine] = None,
+                 max_workers: Optional[int] = None,
+                 mesh=None, mesh_axes: Tuple[str, ...] = ("pod", "data"),
+                 min_parallel_rows: int = MIN_PARALLEL_ROWS):
+        self.engine = engine or default_engine()
+        self.mesh = mesh
+        self.mesh_axes = mesh_axes
+        self.max_workers = max_workers
+        self.min_parallel_rows = min_parallel_rows
+        self._pool: Optional[ThreadPoolExecutor] = None
+        # id(table) -> (weakref, _DeviceTable); weakref eviction keeps dead
+        # tables from pinning device memory
+        self._device: Dict[int, Tuple[weakref.ref, _DeviceTable]] = {}
+
+    # ------------------------------------------------------------------ #
+    def pool(self) -> Optional[ThreadPoolExecutor]:
+        if self.max_workers == 0:
+            return None
+        if self._pool is None:
+            workers = self.max_workers or min(os.cpu_count() or 1, 16)
+            if workers <= 1:
+                return None
+            self._pool = ThreadPoolExecutor(
+                max_workers=workers, thread_name_prefix="predtrace-part"
+            )
+        return self._pool
+
+    def close(self) -> None:
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+            self._pool = None
+
+    def __del__(self):  # pragma: no cover - GC safety net
+        try:
+            if self._pool is not None:
+                self._pool.shutdown(wait=False)
+        except Exception:
+            pass
+
+    # ------------------------------------------------------------------ #
+    def scan(self, pred: Expr, table: Table,
+             binding: Optional[Dict[str, object]] = None) -> np.ndarray:
+        """Boolean mask of ``pred`` over ``table`` — drop-in for
+        ``ScanEngine.scan`` with partition pruning, worker fan-out, and the
+        device path layered on top.  Answers are identical by construction:
+        pruning only skips partitions proved empty, and per-partition masks
+        are merged by partition index."""
+        binding = binding or {}
+        self.engine.stats.scans += 1
+        if self.mesh is not None:
+            return self._device_scan(pred, table, binding)
+        plan = self.engine.partition_plan(pred, table, binding)
+        if plan is None:
+            return self.engine.backend.scan(
+                self.engine.compile(pred), table, binding
+            )
+        return self._fanout_scan(pred, table, binding, plan)
+
+    # ------------------------------------------------------------------ #
+    def _fanout_scan(self, pred: Expr, table: PartitionedTable,
+                     binding: Dict[str, object], plan) -> np.ndarray:
+        prog, alive = plan
+        n = table.nrows
+        runs = alive_runs(alive)
+        if not runs:
+            self.engine.record_prune(0, len(alive))
+            return np.zeros(n, dtype=bool)
+        pr = table.part_rows
+        bounds = [(p0 * pr, min(p1 * pr, n)) for p0, p1 in runs]
+        backend = self.engine.backend
+        pool = self.pool() if getattr(backend, "parallel_safe", False) else None
+        total = sum(hi - lo for lo, hi in bounds)
+        if pool is None or len(bounds) <= 1 or total < self.min_parallel_rows:
+            # small / contiguous work: the engine's serial pruned scan picks
+            # the cheapest shape (slice, gather, or full scan)
+            return self.engine._scan_pruned(prog, table, binding, plan)
+        ns = int(np.count_nonzero(alive))
+        self.engine.record_prune(ns, len(alive) - ns)
+        mask = np.zeros(n, dtype=bool)
+        # slices are created (and cached) serially; workers only evaluate
+        subs = [self.engine.partition_slice(table, lo, hi) for lo, hi in bounds]
+        results = pool.map(lambda sub: backend.scan(prog, sub, binding), subs)
+        for (lo, hi), m in zip(bounds, results):
+            mask[lo:hi] = m
+        return mask
+
+    # ------------------------------------------------------------------ #
+    def _device_scan(self, pred: Expr, table: Table,
+                     binding: Dict[str, object]) -> np.ndarray:
+        # zone maps still short-circuit provably-empty scans before any
+        # device work; partial pruning stays on-device (slicing per shape
+        # would retrace the jit)
+        plan = self.engine.partition_plan(pred, table, binding)
+        if plan is not None:
+            if not plan[1].any():
+                self.engine.record_prune(0, len(plan[1]))
+                return np.zeros(table.nrows, dtype=bool)
+            # partial pruning stays on-device: the full sharded scan runs
+            self.engine.record_prune(len(plan[1]), 0)
+        try:
+            dt = self._device_table(table)
+            return dt.scan(pred, binding)
+        except Exception:
+            # predicates outside the jit-able fragment (exotic residuals)
+            # fall back to the host engine — answers over speed
+            if plan is not None:
+                return self._fanout_scan(pred, table, binding, plan)
+            return self.engine.backend.scan(
+                self.engine.compile(pred), table, binding
+            )
+
+    def _device_table(self, table: Table) -> _DeviceTable:
+        tk = id(table)
+        entry = self._device.get(tk)
+        if entry is not None and entry[0]() is table:
+            return entry[1]
+        dt = _DeviceTable(table, self.mesh, self.mesh_axes, self.engine)
+        ref = weakref.ref(table, lambda _, k=tk, d=self._device: d.pop(k, None))
+        self._device[tk] = (ref, dt)
+        return dt
 
 
 def distributed_refine(
     ip: IterativePlan,
     catalog: Dict[str, Table],
     binding: Dict[str, object],
-    mesh: Mesh,
+    mesh=None,
     max_iters: int = 32,
+    engine: Optional[ScanEngine] = None,
+    num_partitions: Optional[int] = None,
+    max_workers: Optional[int] = None,
 ) -> LineageAnswer:
-    """Algorithm 3 phase 4 with device-sharded scans."""
-    import time
+    """Algorithm 3 phase 4 with partition/device-sharded scans.
 
+    The fixpoint itself is the shared :func:`repro.core.iterative.refine`
+    loop; only the scan backend differs — a :class:`PartitionExecutor` that
+    routes every predicate through the shared ScanEngine (compiled atom
+    programs on the host path, structure-cached ``jit_scan`` on the mesh
+    path)."""
     t0 = time.perf_counter()
-    shards = ShardedCatalog(catalog, mesh)
-    used = set()
-    for _, pred in ip.g3.values():
-        used |= paramsets_of(pred)
-
-    vv: Dict[str, object] = dict(binding)
-    masks: Dict[int, np.ndarray] = {}
-    for sid, (tab, pred) in ip.g1.items():
-        masks[sid] = shards.scan(tab, pred, vv)
-
-    def update_vsets():
-        for name, (sid, col) in ip.vsets.items():
-            if name not in used or sid not in ip.g1:
-                continue
-            tab = ip.g1[sid][0]
-            vals = np.asarray(catalog[tab].cols[col])[masks[sid]]
-            vv[name] = np.unique(vals)
-        for name, (sid, col, pred) in getattr(ip, "branch_vsets", {}).items():
-            if name not in used or sid not in ip.g1:
-                continue
-            tab = ip.g1[sid][0]
-            from .expr import eval_np
-
-            m = masks[sid] & np.asarray(
-                eval_np(pred, catalog[tab].cols, vv, n=catalog[tab].nrows), bool
-            )
-            vv[name] = np.unique(np.asarray(catalog[tab].cols[col])[m])
-
-    update_vsets()
-    iters = 0
-    for _ in range(max_iters):
-        iters += 1
-        changed = False
-        for sid, (tab, pred) in ip.g3.items():
-            m = shards.scan(tab, pred, vv) & masks[sid]
-            if m.sum() != masks[sid].sum():
-                changed = True
-            masks[sid] = m
-        update_vsets()
-        if not changed:
-            break
-
-    lineage: Dict[str, np.ndarray] = {}
-    for sid, (tab, _) in ip.g1.items():
-        rids = catalog[tab].rids()[masks[sid]]
-        lineage[tab] = (
-            np.union1d(lineage[tab], rids) if tab in lineage else np.unique(rids)
-        )
-    ans = LineageAnswer(lineage, time.perf_counter() - t0)
-    ans.detail["iterations"] = iters
+    cat = catalog
+    if num_partitions is not None:
+        cat = {k: partition_table(t, num_partitions=num_partitions)
+               for k, t in catalog.items()}
+    pexec = PartitionExecutor(engine or default_engine(), mesh=mesh,
+                              max_workers=max_workers)
+    try:
+        rr = refine(ip, cat, binding, max_iters, scan=pexec.scan)
+    finally:
+        pexec.close()
+    ans = LineageAnswer(dict(rr.lineage), time.perf_counter() - t0)
+    ans.detail["iterations"] = rr.iterations
     return ans

@@ -25,7 +25,7 @@ from . import ops as O
 from .expr import Expr, eval_np
 from .scan import ScanEngine
 from .store import IntermediateStore
-from .table import RID, Table, concat_tables
+from .table import RID, Table, concat_tables, partition_table
 
 
 # --------------------------------------------------------------------------- #
@@ -151,12 +151,19 @@ class Executor:
         plan: O.Node,
         materialize: Optional[Dict[int, Optional[List[str]]]] = None,
         store: Optional[IntermediateStore] = None,
+        num_partitions: Optional[int] = None,
+        partition_rows: Optional[int] = None,
     ) -> ExecResult:
         """Execute ``plan``.  ``materialize`` maps node-id -> columns to keep
         (None = all) for the intermediate results PredTrace decided to save.
         With a ``store``, each saved intermediate is column-projected and
         *encoded* into it (compressed columnar form) instead of being kept as
-        a raw Table; ``ExecResult.materialized`` then holds StoredTables."""
+        a raw Table; ``ExecResult.materialized`` then holds StoredTables.
+
+        ``num_partitions`` / ``partition_rows`` partition each raw saved
+        intermediate into fixed-size row chunks with zone maps built here,
+        during the pipeline-execution phase (store-backed runs partition at
+        encode time via the store's own config instead)."""
         materialize = materialize or {}
         cache: Dict[int, Table] = {}
         stats: Dict[int, NodeStats] = {}
@@ -173,7 +180,12 @@ class Executor:
             if n.id in materialize:
                 keep = materialize[n.id]
                 proj = out if keep is None else out.project([c for c in keep if out.has(c)])
-                saved[n.id] = proj if store is None else store.put(n.id, proj)
+                if store is not None:
+                    proj = store.put(n.id, proj)
+                else:
+                    # no-op when no partitioning was requested
+                    proj = partition_table(proj, num_partitions, partition_rows)
+                saved[n.id] = proj
             cache[n.id] = out
             return out
 

@@ -32,7 +32,7 @@ from .plan import (
 )
 from .scan import ScanEngine
 from .store import IntermediateStore, StoredTable
-from .table import Table
+from .table import Table, partition_table
 
 
 def _eq_only_params(pred: Expr) -> set:
@@ -83,6 +83,27 @@ def _binding_groups(pred: Expr, binding: Dict[str, object],
     return tuple_groups, rowwise
 
 
+def _zone_restrict(table: Table, atoms) -> np.ndarray:
+    """Candidate row indices for the tuple-membership evaluator: on a
+    partitioned table, partitions whose zone-map range cannot intersect the
+    leading atom's value set are dropped before the full-column ``isin`` —
+    the same conservative pruning the ScanEngine applies to plain scans."""
+    from .scan import _set_overlap
+    from .table import PartitionedTable, rows_of_alive
+
+    n = table.nrows
+    if isinstance(table, PartitionedTable) and table.num_partitions > 1 and atoms:
+        lhs0, sel0 = atoms[0]
+        zm = table.zone_maps
+        if isinstance(lhs0, Col) and lhs0.name in zm.lo:
+            vals = np.asarray(sel0)
+            if vals.ndim == 1 and vals.dtype.kind in "iufb":
+                alive = _set_overlap(vals, zm.lo[lhs0.name], zm.hi[lhs0.name])
+                if not alive.all():
+                    return rows_of_alive(alive, zm.part_rows, n)
+    return np.arange(n)
+
+
 def _eval_pred(pred: Expr, table: Table, binding: Dict[str, object],
                param_stage: Dict[str, int], stage_sel: Dict[int, Table],
                param_col: Dict[str, str],
@@ -122,7 +143,7 @@ def _eval_pred(pred: Expr, table: Table, binding: Dict[str, object],
                 lhs = a.left if isinstance(a.right, Param) else a.right
                 atoms.append((lhs, np.asarray(sel.cols[param_col[p]])))
                 consumed_atoms.append(a)
-        idx = np.arange(table.nrows)
+        idx = _zone_restrict(table, atoms)
         lhs_vals = []
         for lhs, sel_vals in atoms:
             env = {c: table.cols[c][idx] for c in _cols_of(lhs)}
@@ -223,7 +244,25 @@ class PredTrace:
         scan_engine: Optional[ScanEngine] = None,
         store: Union[bool, IntermediateStore, None] = None,
         budget_bytes: Optional[int] = None,
+        num_partitions: Optional[int] = None,
+        partition_rows: Optional[int] = None,
+        parallel: Union[bool, int, None] = None,
+        mesh=None,
     ):
+        # partitioned table runtime: with ``num_partitions``/``partition_rows``
+        # every source table (and every materialized stage) is split into
+        # fixed-size row chunks carrying zone maps; lineage-query scans prune
+        # whole chunks before any row-level work.  ``parallel`` fans the
+        # surviving chunks out across a worker pool; ``mesh`` runs them
+        # device-sharded via distrib/sharding meshes.  Answers are identical
+        # with partitioning on or off.
+        self.num_partitions = num_partitions
+        self.partition_rows = partition_rows
+        if num_partitions is not None or partition_rows is not None:
+            catalog = {
+                k: partition_table(t, num_partitions, partition_rows)
+                for k, t in catalog.items()
+            }
         self.catalog = catalog
         self.plan = plan
         self.optimize_placement = optimize_placement
@@ -237,16 +276,49 @@ class PredTrace:
         # budget planner then drops stages that don't fit and their dependent
         # source predicates degrade to the iterative/superset path
         if store is True or (store is None and budget_bytes is not None):
-            store = IntermediateStore(budget_bytes)
+            store = IntermediateStore(budget_bytes,
+                                      num_partitions=num_partitions,
+                                      part_rows=partition_rows)
         self.store: Optional[IntermediateStore] = (
             store if isinstance(store, IntermediateStore) else None
         )
         self.budget_bytes = budget_bytes
+        # one scan entry point for every query path: the engine directly, or
+        # a PartitionExecutor fanning surviving partitions over workers/mesh
+        self.partition_exec = None
+        if parallel or mesh is not None:
+            from .distributed import PartitionExecutor
+
+            # `parallel is True` (not ==): parallel=1 means one worker, and
+            # 1 == True would otherwise select the default-sized pool
+            workers = (None if parallel is True or parallel is None
+                       else int(parallel))
+            self.partition_exec = PartitionExecutor(
+                self.scan_engine, max_workers=workers, mesh=mesh
+            )
+            self._scan = self.partition_exec.scan
+        else:
+            self._scan = self.scan_engine.scan
         self.mat_plan: Optional[MaterializationPlan] = None
         self.lineage_plan: Optional[LineagePlan] = None
         self.iter_plan: Optional[IterativePlan] = None
         self.exec_result: Optional[ExecResult] = None
         self.infer_seconds: float = 0.0
+
+    # ------------------------------------------------------------------ #
+    def close(self) -> None:
+        """Release the parallel partition executor's worker pool (no-op when
+        ``parallel``/``mesh`` wasn't requested).  Long-lived services that
+        build many PredTraces should call this, or use the instance as a
+        context manager."""
+        if self.partition_exec is not None:
+            self.partition_exec.close()
+
+    def __enter__(self) -> "PredTrace":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     # ------------------------------------------------------------------ #
     def infer(self, stats: Optional[Dict] = None) -> LineagePlan:
@@ -279,7 +351,9 @@ class PredTrace:
         if self.lineage_plan is None:
             self.infer()
         self.exec_result = self.executor.run(
-            self.plan, materialize=self.lineage_plan.materialize, store=self.store
+            self.plan, materialize=self.lineage_plan.materialize,
+            store=self.store, num_partitions=self.num_partitions,
+            partition_rows=self.partition_rows,
         )
         if self.store is not None:
             # a user-supplied store may carry its own budget
@@ -288,7 +362,9 @@ class PredTrace:
                 else self.store.budget_bytes
             )
             self.mat_plan = plan_materialization(
-                self.lineage_plan, self.store.sizes(), budget
+                self.lineage_plan, self.store.sizes(), budget,
+                partition_sizes=self.store.partition_sizes(),
+                prune_rates=self.store.prune_estimates(),
             )
             if self.mat_plan.dropped:
                 self.store.evict(self.mat_plan.dropped)
@@ -317,7 +393,9 @@ class PredTrace:
         # them in the param-binding chain
         missing = {s.node_id for s in self.lineage_plan.stages} - set(store.stages)
         self.mat_plan = plan_materialization(
-            self.lineage_plan, store.sizes(), budget, unavailable=missing
+            self.lineage_plan, store.sizes(), budget, unavailable=missing,
+            partition_sizes=store.partition_sizes(),
+            prune_rates=store.prune_estimates(),
         )
         if self.mat_plan.dropped:
             store.evict(self.mat_plan.dropped)
@@ -353,7 +431,7 @@ class PredTrace:
             self.infer_iterative()
         binding = self._output_binding(t_o, self.iter_plan.out_params)
         return refine(self.iter_plan, self.catalog, binding,
-                      scan=lambda p, t, b: self.scan_engine.scan(p, t, b))
+                      scan=lambda p, t, b: self._scan(p, t, b))
 
     def _stage_select(self, st: Stage, stobj, binding, param_stage, stage_sel,
                       param_col) -> Table:
@@ -361,7 +439,7 @@ class PredTrace:
         in situ when the binding shape is a plain conjunction (the common
         case) and only the selected rows are decoded via gather; the
         tuple/row-wise binding shapes fall back to the decoded table."""
-        scan = self.scan_engine.scan
+        scan = self._scan
         if isinstance(stobj, StoredTable) and self.store is not None:
             tg, rw = _binding_groups(st.run_pred, binding, param_stage)
             if not tg and not rw:
@@ -385,7 +463,7 @@ class PredTrace:
         assert self.lineage_plan is not None and self.exec_result is not None
         t0 = time.perf_counter()
         binding = self._output_binding(t_o)
-        scan = self.scan_engine.scan
+        scan = self._scan
         lp = self.lineage_plan
         dropped = self.mat_plan.dropped if self.mat_plan is not None else set()
         detail: Dict[str, object] = {}
@@ -474,7 +552,7 @@ class PredTrace:
             # table; answer row-by-row (query() owns that logic)
             return [self.query(r) for r in rows]
         bindings = [self._output_binding(r) for r in rows]
-        scan = self.scan_engine.scan
+        scan = self._scan
 
         param_stage: Dict[str, int] = {}
         param_col: Dict[str, str] = {}
@@ -712,7 +790,7 @@ class PredTrace:
         # infer() has a second, differently-named out-param set
         binding = self._output_binding(t_o, self.iter_plan.out_params)
         if scan is None:
-            scan = lambda pred, t, b: self.scan_engine.scan(pred, t, b)
+            scan = lambda pred, t, b: self._scan(pred, t, b)
         rr: RefineResult = refine(self.iter_plan, self.catalog, binding, max_iters, scan=scan)
         ans = LineageAnswer(rr.lineage, time.perf_counter() - t0)
         ans.detail["iterations"] = rr.iterations
@@ -731,7 +809,7 @@ class PredTrace:
         lineage: Dict[str, np.ndarray] = {}
         for sid, (tab, pred) in self.iter_plan.g1.items():
             t = self.catalog[tab]
-            m = self.scan_engine.scan(pred, t, binding)
+            m = self._scan(pred, t, binding)
             rids = t.rids()[m]
             lineage[tab] = (
                 np.union1d(lineage[tab], rids) if tab in lineage else np.unique(rids)

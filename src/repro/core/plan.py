@@ -88,12 +88,21 @@ class MaterializationPlan:
 
     ``kept`` stages stay in the intermediate store (precise bindings);
     ``dropped`` stages degrade the source predicates that depend on their
-    params to the iterative/superset path — per stage, not all-or-nothing."""
+    params to the iterative/superset path — per stage, not all-or-nothing.
+
+    For partitioned stages the plan also records the partition layout and a
+    prune-aware *scan cost*: ``scan_cost[nid]`` estimates the bytes a
+    selective lineage query actually touches after zone-map pruning
+    (``size * (1 - prune_rate)``), which is what query latency tracks — the
+    byte budget governs what is *kept*, the scan cost what a kept stage
+    *costs to read*."""
 
     budget_bytes: Optional[int]
     kept: List[int]
     dropped: Set[int]
     sizes: Dict[int, int]
+    partitions: Dict[int, int] = field(default_factory=dict)
+    scan_cost: Dict[int, float] = field(default_factory=dict)
 
     @property
     def kept_bytes(self) -> int:
@@ -102,6 +111,12 @@ class MaterializationPlan:
     @property
     def degraded(self) -> bool:
         return bool(self.dropped)
+
+    def kept_scan_cost(self) -> float:
+        """Expected bytes touched per query across the kept stages."""
+        return float(sum(
+            self.scan_cost.get(nid, self.sizes.get(nid, 0)) for nid in self.kept
+        ))
 
 
 def stage_param_deps(lp: "LineagePlan") -> Dict[int, Set[int]]:
@@ -124,6 +139,8 @@ def plan_materialization(
     sizes: Dict[int, int],
     budget_bytes: Optional[int],
     unavailable: Optional[Set[int]] = None,
+    partition_sizes: Optional[Dict[int, List[int]]] = None,
+    prune_rates: Optional[Dict[int, float]] = None,
 ) -> MaterializationPlan:
     """Choose which stages fit a byte budget (compressed, column-projected
     sizes from the store's stats pass).
@@ -134,17 +151,39 @@ def plan_materialization(
     everything (the current precise behaviour); ``0`` drops everything (the
     pure Algorithm-3 path).  ``unavailable`` marks stages the store cannot
     serve at all (e.g. evicted before a spill) — they are dropped regardless
-    of budget, along with everything depending on them."""
+    of budget, along with everything depending on them.
+
+    ``partition_sizes`` (per-partition encoded bytes) makes the budget
+    accounting partition-granular — a stage's footprint is the sum of its
+    chunks — and ``prune_rates`` (estimated zone-map prune fraction per
+    stage) feeds the prune-aware ``scan_cost`` recorded on the plan: a
+    heavily-prunable stage is cheap to *query* even when it is large to
+    *keep*."""
     unavailable = unavailable or set()
+    partition_sizes = partition_sizes or {}
+    prune_rates = prune_rates or {}
+
+    def stage_bytes(nid: int) -> int:
+        parts = partition_sizes.get(nid)
+        if parts:
+            return int(sum(parts))
+        return int(sizes.get(nid, 0))
+
+    partitions = {nid: len(p) for nid, p in partition_sizes.items()}
+    scan_cost = {
+        nid: stage_bytes(nid) * (1.0 - float(prune_rates.get(nid, 0.0)))
+        for nid in {s.node_id for s in lp.stages} & set(sizes)
+    }
     if budget_bytes is None and not unavailable:
-        return MaterializationPlan(None, [s.node_id for s in lp.stages], set(), dict(sizes))
+        return MaterializationPlan(None, [s.node_id for s in lp.stages], set(),
+                                   dict(sizes), partitions, scan_cost)
     budget = float("inf") if budget_bytes is None else budget_bytes
     deps = stage_param_deps(lp)
     kept: List[int] = []
     dropped: Set[int] = set()
     total = 0
     for st in lp.stages:
-        sz = int(sizes.get(st.node_id, 0))
+        sz = stage_bytes(st.node_id)
         if st.node_id in unavailable or deps[st.node_id] & dropped:
             dropped.add(st.node_id)
             continue
@@ -153,7 +192,8 @@ def plan_materialization(
             total += sz
         else:
             dropped.add(st.node_id)
-    return MaterializationPlan(budget_bytes, kept, dropped, dict(sizes))
+    return MaterializationPlan(budget_bytes, kept, dropped, dict(sizes),
+                               partitions, scan_cost)
 
 
 class _FailureAt(Exception):

@@ -37,7 +37,10 @@ candidate rows per binding see the remaining atoms.
 
 from __future__ import annotations
 
+import dataclasses
+import threading
 import weakref
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -58,7 +61,7 @@ from .expr import (
     land,
     params_of,
 )
-from .table import Table
+from .table import PartitionedTable, Table, ZoneMaps, alive_runs
 
 # op codes shared with kernels/pred_filter (0:== 1:!= 2:< 3:<= 4:> 5:>=)
 OPS = {"==": 0, "!=": 1, "<": 2, "<=": 3, ">": 4, ">=": 5}
@@ -80,6 +83,107 @@ def _member(col: np.ndarray, vals) -> np.ndarray:
     if arr.size == 0:
         return np.zeros(len(col), dtype=bool)
     return np.isin(col, arr)
+
+
+class _GatherCols:
+    """Mapping view gathering rows of one column on first access, so a scan
+    over scattered surviving partitions copies only the columns the
+    predicate actually touches."""
+
+    def __init__(self, table: "Table", idx: np.ndarray):
+        self._cols = table.cols
+        self._idx = idx
+        self._cache: Dict[str, np.ndarray] = {}
+
+    def __getitem__(self, k: str) -> np.ndarray:
+        v = self._cache.get(k)
+        if v is None:
+            v = np.asarray(self._cols[k])[self._idx]
+            self._cache[k] = v
+        return v
+
+    def get(self, k, default=None):
+        return self[k] if k in self._cols else default
+
+    def __contains__(self, k) -> bool:
+        return k in self._cols
+
+    def __iter__(self):
+        return iter(self._cols)
+
+    def __len__(self) -> int:
+        return len(self._cols)
+
+
+class _GatherView:
+    """Duck-typed Table presenting the gathered rows ``idx`` of a base table
+    (lazy per-column); backends see an ordinary small table."""
+
+    def __init__(self, table: "Table", idx: np.ndarray):
+        self.cols = _GatherCols(table, idx)
+        self.nrows = len(idx)
+        self.dicts = table.dicts
+        self.name = table.name
+
+    def has(self, col: str) -> bool:
+        return col in self.cols
+
+
+class LRUCache:
+    """Bounded mapping with LRU eviction and hit/miss/evict counters.
+
+    The engine's program / jit / slab / sorted-index caches were unbounded
+    dicts; a long-lived service scanning many plans would grow them without
+    limit.  Mutations are lock-protected so the parallel partition executor
+    can share an engine across worker threads."""
+
+    def __init__(self, maxsize: int):
+        self.maxsize = max(int(maxsize), 1)
+        self._d: "OrderedDict" = OrderedDict()
+        # reentrant: weakref callbacks pop() entries and may fire from cyclic
+        # GC triggered *inside* a locked cache method on the same thread
+        self._lock = threading.RLock()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def get(self, k, default=None):
+        with self._lock:
+            try:
+                v = self._d[k]
+            except KeyError:
+                self.misses += 1
+                return default
+            self._d.move_to_end(k)
+            self.hits += 1
+            return v
+
+    def __setitem__(self, k, v):
+        with self._lock:
+            if k in self._d:
+                self._d[k] = v
+                self._d.move_to_end(k)
+                return
+            while len(self._d) >= self.maxsize:
+                self._d.popitem(last=False)
+                self.evictions += 1
+            self._d[k] = v
+
+    def pop(self, k, default=None):
+        with self._lock:
+            return self._d.pop(k, default)
+
+    def __contains__(self, k) -> bool:
+        with self._lock:
+            return k in self._d
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    def counters(self) -> Dict[str, int]:
+        return {"size": len(self._d), "maxsize": self.maxsize,
+                "hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions}
 
 
 # --------------------------------------------------------------------------- #
@@ -122,6 +226,12 @@ class AtomProgram:
     residual_static_cols: Tuple[str, ...] = ()
     residual_dynamic_cols: Tuple[str, ...] = ()
     signature: Tuple = ()
+    params: Tuple[str, ...] = ()
+    residual_dynamic_params: Tuple[str, ...] = ()
+    # False when the predicate embeds row-aligned array literals whose
+    # broadcast semantics depend on the full column length — such programs
+    # must not be evaluated on partition slices
+    slice_safe: bool = True
 
     @property
     def static_cmp(self) -> Tuple[CmpAtom, ...]:
@@ -162,7 +272,28 @@ def compile_pred(pred: Expr) -> AtomProgram:
         residual_static_cols=tuple(sorted(cols_of(rs))) if rs is not None else (),
         residual_dynamic_cols=tuple(sorted(cols_of(rd))) if rd is not None else (),
         signature=key(pred),
+        params=tuple(sorted(params_of(pred))),
+        residual_dynamic_params=(
+            tuple(sorted(params_of(rd))) if rd is not None else ()
+        ),
+        slice_safe=not _has_array_lit(pred),
     )
+
+
+def _has_array_lit(e) -> bool:
+    """Does the expression tree embed an array-valued literal?  (``IsIn``
+    value tuples are membership sets — elementwise, hence slice-safe.)"""
+    if isinstance(e, Lit):
+        return isinstance(e.value, (np.ndarray, list, tuple))
+    if isinstance(e, IsIn):
+        return _has_array_lit(e.operand)
+    if isinstance(e, Expr):
+        for f in dataclasses.fields(e):
+            v = getattr(e, f.name, None)
+            if isinstance(v, Expr) and _has_array_lit(v):
+                return True
+        return False
+    return False
 
 
 def _compile_atom(a: Expr):
@@ -194,6 +325,159 @@ def _bind(binding: Dict[str, object], name: str):
 
 
 # --------------------------------------------------------------------------- #
+# zone-map partition pruning
+# --------------------------------------------------------------------------- #
+
+_UNBOUND = object()
+
+_LT, _LE, _GT, _GE, _NE = OPS["<"], OPS["<="], OPS[">"], OPS[">="], OPS["!="]
+
+
+def _scalar_nan(v) -> bool:
+    try:
+        return bool(np.isnan(v))
+    except (TypeError, ValueError):
+        return False
+
+
+def _set_overlap(vals: np.ndarray, lo: np.ndarray, hi: np.ndarray) -> np.ndarray:
+    """Per-partition: does any member of ``vals`` fall inside ``[lo, hi]``?
+    NaN members never match (``np.isin`` semantics); NaN bounds (all-null
+    partitions) produce empty windows, i.e. no overlap."""
+    u = np.unique(vals)
+    if u.dtype.kind == "f":
+        u = u[~np.isnan(u)]
+    if u.size == 0:
+        return np.zeros(len(lo), dtype=bool)
+    with np.errstate(invalid="ignore"):
+        a = np.searchsorted(u, lo, side="left")
+        b = np.searchsorted(u, hi, side="right")
+    return b > a
+
+
+def prune_zone_maps(prog: AtomProgram, zm: ZoneMaps,
+                    binding: Dict[str, object]) -> np.ndarray:
+    """Which partitions *may* contain matching rows (conservative: a False
+    entry proves no row in that partition satisfies the conjunction).
+
+    Every comparison / membership atom whose threshold is resolvable narrows
+    the alive set using per-partition ``[lo, hi]`` bounds; residual
+    expressions, unbound parameters, and columns without zone entries never
+    prune.  NaN thresholds exploit IEEE semantics (``x <op> NaN`` is False
+    for every op but ``!=``); all-null partitions carry NaN bounds, which
+    every comparison treats as un-prunable except where NaN-ness itself
+    proves emptiness."""
+    P = zm.n_partitions
+    alive = np.ones(P, dtype=bool)
+    if P == 0:
+        return alive
+    for a in prog.cmp_atoms:
+        lo, hi = zm.lo.get(a.col), zm.hi.get(a.col)
+        if lo is None:
+            continue
+        op = a.op
+        if a.kind == "col":
+            rlo, rhi = zm.lo.get(a.rhs), zm.hi.get(a.rhs)
+            if rlo is None:
+                continue
+            with np.errstate(invalid="ignore"):
+                if op == EQ:
+                    alive &= (lo <= rhi) & (hi >= rlo)
+                elif op == _LT:
+                    alive &= lo < rhi
+                elif op == _LE:
+                    alive &= lo <= rhi
+                elif op == _GT:
+                    alive &= hi > rlo
+                elif op == _GE:
+                    alive &= hi >= rlo
+                else:  # != : prune only provably-constant-and-equal partitions
+                    alive &= ~(
+                        (zm.distinct[a.col] == 1) & (zm.distinct[a.rhs] == 1)
+                        & (lo == rlo)
+                    )
+            continue
+        v = a.rhs if a.kind == "lit" else binding.get(a.rhs, _UNBOUND)
+        if v is _UNBOUND:
+            continue
+        if _is_setlike(v):
+            # membership semantics apply to param-equality atoms only; other
+            # array shapes are handled by the evaluator, never pruned here
+            if a.kind == "param" and op == EQ:
+                arr = np.asarray(v)
+                if arr.dtype.kind not in "iufb":
+                    continue
+                alive &= _set_overlap(arr, lo, hi)
+            continue
+        if isinstance(v, np.generic):
+            v = v.item()
+        if not isinstance(v, (bool, int, float, np.bool_)):
+            continue
+        if _scalar_nan(v):
+            if op != _NE:  # x <op> NaN is False everywhere
+                alive[:] = False
+            continue
+        with np.errstate(invalid="ignore"):
+            if op == EQ:
+                alive &= (lo <= v) & (hi >= v)
+            elif op == _NE:
+                alive &= ~((zm.distinct[a.col] == 1) & (lo == v))
+            elif op == _LT:
+                alive &= lo < v
+            elif op == _LE:
+                alive &= lo <= v
+            elif op == _GT:
+                alive &= hi > v
+            else:  # _GE
+                alive &= hi >= v
+        if not alive.any():
+            return alive
+    for a in prog.isin_atoms:
+        lo, hi = zm.lo.get(a.col), zm.hi.get(a.col)
+        if lo is None:
+            continue
+        vals = a.rhs if a.kind == "lit" else binding.get(a.rhs, _UNBOUND)
+        if vals is _UNBOUND:
+            continue
+        try:
+            arr = np.asarray(vals)
+        except (TypeError, ValueError):  # pragma: no cover - exotic values
+            continue
+        if arr.ndim != 1 or arr.dtype.kind not in "iufb":
+            if arr.size == 0:
+                alive[:] = False
+            continue
+        if arr.size == 0:
+            alive[:] = False
+            return alive
+        alive &= _set_overlap(arr, lo, hi)
+    return alive
+
+
+def partition_safe(prog: AtomProgram, binding: Dict[str, object]) -> bool:
+    """Can this (program, binding) pair be evaluated per partition slice with
+    answers identical to a full-table scan?  Unsafe shapes — unbound params
+    (the full path must raise), literal arrays, array bindings on
+    non-equality atoms or in dynamic residuals (their broadcast/error
+    semantics depend on the full column length) — fall back to the
+    unsliced backend."""
+    if not prog.slice_safe:
+        return False
+    for p in prog.params:
+        if p not in binding:
+            return False
+    for a in prog.cmp_atoms:
+        if a.kind == "lit" and _is_setlike(a.rhs):
+            return False
+        if a.kind == "param" and a.op != EQ and _is_setlike(binding[a.rhs]):
+            return False
+    for p in prog.residual_dynamic_params:
+        if _is_setlike(binding.get(p)):
+            return False
+    return True
+
+
+# --------------------------------------------------------------------------- #
 # backends
 # --------------------------------------------------------------------------- #
 
@@ -202,6 +486,8 @@ class NumpyBackend:
     """Vectorized NumPy evaluation of a bound atom program (the oracle)."""
 
     name = "numpy"
+    # stateless scans: safe to run concurrently from partition workers
+    parallel_safe = True
 
     def scan(self, prog: AtomProgram, table: Table,
              binding: Dict[str, object]) -> np.ndarray:
@@ -244,14 +530,25 @@ class PallasBackend(NumpyBackend):
 
     name = "pallas"
 
+    # kernel slabs hold full-table copies — keep the cap small
+    SLAB_CACHE = 32
+    COL_OK_CACHE = 4096
+
+    # the slab caches make concurrent scans racy; the parallel partition
+    # executor falls back to serial per-partition scans on this backend
+    parallel_safe = False
+
     def __init__(self, interpret: bool = True, block_rows: int = 1024):
         self.interpret = interpret
         self.block_rows = block_rows
         # slab cache: id(table) -> (weakref, {cols tuple: [C, N] int32 slab})
-        self._slabs: Dict[int, Tuple[weakref.ref, Dict[Tuple[str, ...], np.ndarray]]] = {}
+        self._slabs: LRUCache = LRUCache(self.SLAB_CACHE)
         # per-(table, col) int32-representability verdict (columns are
         # immutable, so the O(N) range check runs once, not per scan)
-        self._col_ok: Dict[Tuple[int, str], Tuple[weakref.ref, bool]] = {}
+        self._col_ok: LRUCache = LRUCache(self.COL_OK_CACHE)
+
+    def caches(self) -> Dict[str, LRUCache]:
+        return {"slabs": self._slabs, "col_ok": self._col_ok}
 
     def scan(self, prog: AtomProgram, table: Table,
              binding: Dict[str, object]) -> np.ndarray:
@@ -372,9 +669,23 @@ class ScanStats:
     batch_rows: int = 0
     # scans answered on encoded columns without decoding (core/store.py)
     insitu_scans: int = 0
+    # zone-map partition pruning (PartitionedTable / partitioned store scans)
+    prune_calls: int = 0
+    partitions_scanned: int = 0
+    partitions_pruned: int = 0
+    # the engine's bounded caches, registered for the stats() snapshot
+    caches: Dict[str, "LRUCache"] = field(default_factory=dict, repr=False)
 
-    def snapshot(self) -> Dict[str, int]:
-        return dict(self.__dict__)
+    def snapshot(self) -> Dict[str, object]:
+        out: Dict[str, object] = {
+            k: v for k, v in self.__dict__.items() if isinstance(v, int)
+        }
+        out["caches"] = {k: c.counters() for k, c in self.caches.items()}
+        return out
+
+    # ``engine.stats()`` — counters plus per-cache hit/evict numbers — while
+    # ``engine.stats.scans`` etc. keep working as attributes
+    __call__ = snapshot
 
 
 _BACKENDS = {"numpy": NumpyBackend, "pallas": PallasBackend}
@@ -389,7 +700,19 @@ class ScanEngine:
     assert on.
     """
 
-    def __init__(self, backend: str = "numpy", **backend_opts):
+    # default cache caps: generous for any realistic plan count, bounded for
+    # a long-lived service scanning arbitrarily many plans
+    PROGRAM_CACHE = 512
+    JIT_CACHE = 128
+    SORT_CACHE = 256
+    SLICE_CACHE = 1024
+
+    def __init__(self, backend: str = "numpy",
+                 program_cache: int = PROGRAM_CACHE,
+                 jit_cache: int = JIT_CACHE,
+                 sort_cache: int = SORT_CACHE,
+                 slice_cache: int = SLICE_CACHE,
+                 **backend_opts):
         if isinstance(backend, str):
             if backend not in _BACKENDS:
                 raise ValueError(
@@ -398,12 +721,23 @@ class ScanEngine:
             self.backend = _BACKENDS[backend](**backend_opts)
         else:
             self.backend = backend
-        self._programs: Dict[Tuple, AtomProgram] = {}
-        self._jit_cache: Dict[Tuple, Callable] = {}
+        self._programs: LRUCache = LRUCache(program_cache)
+        self._jit_cache: LRUCache = LRUCache(jit_cache)
         # sorted-column index per (table, col): the batch path's scan
         # structure, built once and reused by every batched re-binding
-        self._sorts: Dict[Tuple[int, str], Tuple[weakref.ref, np.ndarray, np.ndarray]] = {}
+        self._sorts: LRUCache = LRUCache(sort_cache)
+        # partition slice views per (table, lo, hi): keeps slice identity
+        # stable across queries so identity-keyed backend caches stay warm
+        self._slices: LRUCache = LRUCache(slice_cache)
         self.stats = ScanStats()
+        self.stats.caches = {
+            "programs": self._programs,
+            "jit": self._jit_cache,
+            "sorts": self._sorts,
+            "slices": self._slices,
+        }
+        for name, cache in getattr(self.backend, "caches", lambda: {})().items():
+            self.stats.caches[name] = cache
 
     # ------------------------------------------------------------------ #
     def compile(self, pred: Expr) -> AtomProgram:
@@ -423,10 +757,94 @@ class ScanEngine:
     def scan(self, pred: Expr, table: Table,
              binding: Optional[Dict[str, object]] = None) -> np.ndarray:
         """Boolean mask of ``pred`` over ``table`` — drop-in for
-        ``eval_np(pred, table.cols, binding, n=table.nrows).astype(bool)``."""
+        ``eval_np(pred, table.cols, binding, n=table.nrows).astype(bool)``.
+
+        Partitioned tables first run the zone-map pruning pass: partitions
+        whose statistics prove no row can match are skipped entirely, and the
+        survivors are scanned as contiguous slices."""
         self.stats.scans += 1
         prog = self.compile(pred)
-        return self.backend.scan(prog, table, binding or {})
+        binding = binding or {}
+        plan = self._partition_plan(prog, table, binding)
+        if plan is not None:
+            return self._scan_pruned(prog, table, binding, plan)
+        return self.backend.scan(prog, table, binding)
+
+    # ------------------------------------------------------------------ #
+    # partition pruning
+    # ------------------------------------------------------------------ #
+    def partition_plan(self, pred: Expr, table: Table,
+                       binding: Optional[Dict[str, object]] = None):
+        """``(prog, alive)`` when the partitioned path applies to this scan
+        (``alive`` marks partitions that may hold matches), else ``None``.
+        The parallel executor (``core/distributed.py``) uses this to fan
+        surviving partitions out across workers.  Callers that act on the
+        plan report what they actually skipped via :meth:`record_prune`."""
+        return self._partition_plan(self.compile(pred), table, binding or {})
+
+    def _partition_plan(self, prog: AtomProgram, table: Table,
+                        binding: Dict[str, object]):
+        if not isinstance(table, PartitionedTable) or table.num_partitions <= 1:
+            return None
+        if not partition_safe(prog, binding):
+            return None
+        self.stats.prune_calls += 1
+        return prog, prune_zone_maps(prog, table.zone_maps, binding)
+
+    def record_prune(self, scanned: int, pruned: int) -> None:
+        """Account partitions actually scanned vs actually skipped — recorded
+        where the scan shape is decided, so a prune result that fell back to
+        a full scan never inflates the skip counters."""
+        self.stats.partitions_scanned += scanned
+        self.stats.partitions_pruned += pruned
+
+    # pruning below this fraction of skipped rows isn't worth the slicing
+    # overhead — the vectorized full scan wins
+    MIN_SKIP_FRACTION = 1 / 8
+
+    def _scan_pruned(self, prog: AtomProgram, table: "PartitionedTable",
+                     binding: Dict[str, object], plan) -> np.ndarray:
+        _, alive = plan
+        n = table.nrows
+        P = len(alive)
+        mask = np.zeros(n, dtype=bool)
+        runs = alive_runs(alive)
+        if not runs:
+            self.record_prune(0, P)
+            return mask
+        pr = table.part_rows
+        bounds = [(p0 * pr, min(p1 * pr, n)) for p0, p1 in runs]
+        scanned = sum(hi - lo for lo, hi in bounds)
+        if n - scanned < max(n * self.MIN_SKIP_FRACTION, pr):
+            # too little to skip: the vectorized full scan wins
+            self.record_prune(P, 0)
+            return self.backend.scan(prog, table, binding)
+        ns = int(np.count_nonzero(alive))
+        self.record_prune(ns, P - ns)
+        if len(bounds) == 1:
+            lo, hi = bounds[0]
+            sub = self.partition_slice(table, lo, hi)
+            mask[lo:hi] = self.backend.scan(prog, sub, binding)
+            return mask
+        # scattered survivors: one gathered scan beats per-run dispatch
+        idx = np.concatenate([np.arange(lo, hi, dtype=np.int64)
+                              for lo, hi in bounds])
+        mask[idx] = self.backend.scan(prog, _GatherView(table, idx), binding)
+        return mask
+
+    def partition_slice(self, table: Table, lo: int, hi: int) -> Table:
+        """Row-range view of ``table`` with stable identity: repeated scans of
+        the same partition run reuse one slice object, so identity-keyed
+        backend caches (slabs, sorted indexes) stay warm across queries."""
+        ck = (id(table), lo, hi)
+        entry = self._slices.get(ck)
+        if entry is not None and entry[0]() is table:
+            return entry[1]
+        sub = Table({k: v[lo:hi] for k, v in table.cols.items()},
+                    table.dicts, table.name)
+        ref = weakref.ref(table, lambda _, k=ck, d=self._slices: d.pop(k, None))
+        self._slices[ck] = (ref, sub)
+        return sub
 
     # ------------------------------------------------------------------ #
     def scan_batch(self, pred: Expr, table: Table,

@@ -56,8 +56,13 @@ from typing import Dict, Iterator, List, Mapping, Optional, Tuple
 import numpy as np
 
 from .expr import eval_np
-from .scan import EQ, OPS, _NP_CMP, AtomProgram, NumpyBackend, ScanEngine, _is_setlike
-from .table import RID, Table
+from .scan import (
+    EQ, OPS, _NP_CMP, AtomProgram, LRUCache, NumpyBackend, ScanEngine,
+    _is_setlike, partition_safe, prune_zone_maps,
+)
+from .table import (
+    RID, Table, ZoneMaps, build_zone_maps, resolve_part_rows, rows_of_alive,
+)
 
 _EQ, _NE = OPS["=="], OPS["!="]
 _LT, _LE, _GT, _GE = OPS["<"], OPS["<="], OPS[">"], OPS[">="]
@@ -702,17 +707,56 @@ class StoredTable:
     without a full decode."""
 
     def __init__(self, enc: Dict[str, EncodedColumn], dicts: Dict[str, List[str]],
-                 name: Optional[str], nrows: int, raw_nbytes: int):
+                 name: Optional[str], nrows: int, raw_nbytes: int,
+                 zone_maps: Optional[ZoneMaps] = None):
         self.enc = enc
         self.dicts = dicts
         self.name = name
         self._nrows = nrows
         self.raw_nbytes = raw_nbytes
+        # per-partition min/max/null stats built on the raw columns before
+        # encoding; in-situ scans prune whole partitions against them
+        self.zone_maps = zone_maps
         self.cols = _LazyCols(self)
         self._table: Optional[Table] = None
-        # per-program atom evaluation order (InSituBackend), keyed by program
-        # identity; each entry pins the program so its id stays valid
-        self._work_cache: Dict[int, Tuple[AtomProgram, List]] = {}
+        # per-program atom evaluation order (InSituBackend), keyed by the
+        # program's structural signature — stable across engine-cache
+        # evictions/recompiles, and LRU-bounded so a stage queried by many
+        # distinct predicates can't grow it without limit
+        self._work_cache: LRUCache = LRUCache(64)
+
+    @property
+    def part_rows(self) -> Optional[int]:
+        return self.zone_maps.part_rows if self.zone_maps is not None else None
+
+    @property
+    def num_partitions(self) -> int:
+        return self.zone_maps.n_partitions if self.zone_maps is not None else 1
+
+    def partition_nbytes(self) -> List[int]:
+        """Per-partition encoded size estimate: whole-column encodings don't
+        split exactly, so bytes are apportioned by partition row count."""
+        if self.zone_maps is None or self.num_partitions <= 1:
+            return [self.nbytes()]
+        total = self.nbytes()
+        rows = self.zone_maps.part_sizes().astype(np.float64)
+        # cumulative rounding: per-partition estimates sum exactly to total,
+        # so partition-granular budget accounting never drifts from nbytes()
+        cum = np.round(np.cumsum(rows) / max(rows.sum(), 1.0) * total)
+        return np.diff(np.concatenate([[0], cum])).astype(np.int64).tolist()
+
+    def prune_estimate(self) -> float:
+        """Estimated fraction of partitions a selective (point) predicate
+        skips — the planner's prune-aware scan-cost signal.  Uses the most
+        pruning-friendly zone-mapped column."""
+        if self.zone_maps is None or self.num_partitions <= 1:
+            return 0.0
+        best = 1.0
+        for c in self.zone_maps.lo:
+            if c == RID:
+                continue
+            best = min(best, self.zone_maps.point_hit_fraction(c))
+        return 1.0 - best
 
     @property
     def nrows(self) -> int:
@@ -755,10 +799,13 @@ class StoredTable:
         return self.enc[col].gather(idx)
 
 
-def encode_table(table: Table) -> StoredTable:
+def encode_table(table: Table, part_rows: Optional[int] = None) -> StoredTable:
     enc = {k: encode_column(np.asarray(v)) for k, v in table.cols.items()}
     dicts = {k: v for k, v in table.dicts.items() if k in table.cols}
-    return StoredTable(enc, dicts, table.name, table.nrows, table.nbytes())
+    zm = None
+    if part_rows is not None and table.nrows > part_rows:
+        zm = build_zone_maps(table.cols, part_rows, table.nrows)
+    return StoredTable(enc, dicts, table.name, table.nrows, table.nbytes(), zm)
 
 
 def estimate_table_nbytes(table: Table, keep: Optional[List[str]] = None) -> int:
@@ -805,22 +852,25 @@ class InSituBackend(NumpyBackend):
 
     name = "insitu"
 
-    def scan(self, prog: AtomProgram, st: StoredTable,
-             binding: Dict[str, object]) -> np.ndarray:
-        n = st.nrows
-        # keyed by program identity: programs are interned per engine by
-        # structure, and the entry pins the program so the id stays valid
-        entry = st._work_cache.get(id(prog))
-        if entry is None:
+    def _work(self, prog: AtomProgram, st: StoredTable) -> List:
+        """Atom evaluation order for one (program, stage) pair, cached by the
+        program's structural signature (atoms of structurally-equal programs
+        are interchangeable frozen values)."""
+        work = st._work_cache.get(prog.signature)
+        if work is None:
             work = [("cmp", a) for a in prog.cmp_atoms]
             work += [("isin", a) for a in prog.isin_atoms]
             if len(work) > 1:
                 work.sort(key=lambda w: _SCAN_COST.get(
                     st.enc[w[1].col].kind if w[1].col in st.enc else "plain", 1
                 ))
-            entry = (prog, work)
-            st._work_cache[id(prog)] = entry
-        work = entry[1]
+            st._work_cache[prog.signature] = work
+        return work
+
+    def scan(self, prog: AtomProgram, st: StoredTable,
+             binding: Dict[str, object]) -> np.ndarray:
+        n = st.nrows
+        work = self._work(prog, st)
         has_residual = (
             prog.residual_static is not None or prog.residual_dynamic is not None
         )
@@ -852,7 +902,21 @@ class InSituBackend(NumpyBackend):
                 if r is not None:
                     mask &= np.asarray(eval_np(r, st.cols, binding, n=n), bool)
             return mask
+        return self._finish_candidates(prog, st, binding, idx, rest)
 
+    def scan_ranges(self, prog: AtomProgram, st: StoredTable,
+                    binding: Dict[str, object], idx: np.ndarray) -> np.ndarray:
+        """Full-length mask with evaluation restricted to candidate rows
+        ``idx`` (the rows of zone-map-surviving partitions): every atom runs
+        in candidate mode via per-encoding ``gather``, so pruned partitions
+        never touch their encoded payloads."""
+        return self._finish_candidates(prog, st, binding, idx,
+                                       self._work(prog, st))
+
+    def _finish_candidates(self, prog: AtomProgram, st: StoredTable,
+                           binding: Dict[str, object], idx: np.ndarray,
+                           rest: List) -> np.ndarray:
+        n = st.nrows
         # candidate mode: every remaining atom sees only the survivors
         for what, a in rest:
             if not len(idx):
@@ -992,14 +1056,21 @@ class IntermediateStore:
     query phase reads through ``scan()`` (in situ) / ``table()`` (decoded,
     cached) / ``StoredTable.take`` (gather at selected rows)."""
 
-    def __init__(self, budget_bytes: Optional[int] = None):
+    def __init__(self, budget_bytes: Optional[int] = None,
+                 num_partitions: Optional[int] = None,
+                 part_rows: Optional[int] = None):
         self.budget_bytes = budget_bytes
+        # partition layout for encoded stages: fixed-size row chunks with
+        # zone maps, pruned by ``scan()`` before any row-level work
+        self.num_partitions = num_partitions
+        self.part_rows = part_rows
         self.stages: Dict[int, StoredTable] = {}
         self.backend = InSituBackend()
 
     # ------------------------------------------------------------------ #
     def put(self, node_id: int, table: Table) -> StoredTable:
-        st = encode_table(table)
+        pr = resolve_part_rows(table.nrows, self.num_partitions, self.part_rows)
+        st = encode_table(table, part_rows=pr)
         self.stages[node_id] = st
         return st
 
@@ -1021,15 +1092,47 @@ class IntermediateStore:
     def scan(self, node_id: int, pred, binding: Optional[Dict[str, object]],
              engine: ScanEngine) -> np.ndarray:
         """In-situ boolean mask of ``pred`` over a stored stage, using the
-        engine's compiled (and cached) atom program."""
+        engine's compiled (and cached) atom program.
+
+        Partitioned stages run the zone-map pruning pass first: partitions
+        proved empty are skipped, and the survivors are evaluated in
+        candidate mode (per-encoding ``gather``) without decoding."""
         prog = engine.compile(pred)
         engine.stats.scans += 1
         engine.stats.insitu_scans += 1
-        return self.backend.scan(prog, self.stages[node_id], binding or {})
+        st = self.stages[node_id]
+        binding = binding or {}
+        zm = st.zone_maps
+        if zm is not None and zm.n_partitions > 1 and partition_safe(prog, binding):
+            alive = prune_zone_maps(prog, zm, binding)
+            ns = int(np.count_nonzero(alive))
+            P = len(alive)
+            engine.stats.prune_calls += 1
+            if ns == 0:
+                engine.record_prune(0, P)
+                return np.zeros(st.nrows, dtype=bool)
+            skipped = int(zm.part_sizes()[~alive].sum())
+            # marginal pruning isn't worth candidate-mode gather: mirror
+            # ScanEngine.MIN_SKIP_FRACTION and keep the vectorized full scan
+            if skipped >= max(st.nrows * ScanEngine.MIN_SKIP_FRACTION,
+                              zm.part_rows):
+                engine.record_prune(ns, P - ns)
+                idx = rows_of_alive(alive, zm.part_rows, st.nrows)
+                return self.backend.scan_ranges(prog, st, binding, idx)
+            engine.record_prune(P, 0)
+        return self.backend.scan(prog, st, binding)
 
     # ------------------------------------------------------------------ #
     def sizes(self) -> Dict[int, int]:
         return {nid: st.nbytes() for nid, st in self.stages.items()}
+
+    def partition_sizes(self) -> Dict[int, List[int]]:
+        """Per-partition encoded byte estimates per stage (planner input)."""
+        return {nid: st.partition_nbytes() for nid, st in self.stages.items()}
+
+    def prune_estimates(self) -> Dict[int, float]:
+        """Estimated zone-map prune rate per stage (planner scan-cost input)."""
+        return {nid: st.prune_estimate() for nid, st in self.stages.items()}
 
     def nbytes(self) -> int:
         return int(sum(st.nbytes() for st in self.stages.values()))

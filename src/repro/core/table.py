@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import sys
 from dataclasses import dataclass, field
-from typing import Dict, Iterable, List, Mapping, Optional, Sequence
+from typing import Dict, Iterable, Iterator, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -166,6 +166,207 @@ class Table:
     def __repr__(self) -> str:  # pragma: no cover - debug aid
         cols = ", ".join(f"{c}:{self.cols[c].dtype}" for c in self.columns)
         return f"Table({self.name or '?'}, {self.nrows} rows, [{cols}])"
+
+
+# --------------------------------------------------------------------------- #
+# partitioned tables + zone maps
+# --------------------------------------------------------------------------- #
+
+
+@dataclass
+class ZoneMaps:
+    """Per-partition column statistics for fixed-size row chunks.
+
+    ``lo``/``hi`` are null-ignoring min/max per partition (NaN for all-null
+    float partitions), ``nulls`` counts NaNs (integer null *sentinels* count as
+    values — predicate semantics are value-level throughout the engine), and
+    ``distinct`` is a hint: ``1`` means provably constant (single value, no
+    nulls), ``2`` means "may vary".  Zone maps drive conservative partition
+    pruning (``scan.prune_zone_maps``): a partition is skipped only when its
+    statistics prove no row can satisfy an atom."""
+
+    part_rows: int
+    nrows: int
+    n_partitions: int
+    lo: Dict[str, np.ndarray] = field(default_factory=dict)
+    hi: Dict[str, np.ndarray] = field(default_factory=dict)
+    nulls: Dict[str, np.ndarray] = field(default_factory=dict)
+    distinct: Dict[str, np.ndarray] = field(default_factory=dict)
+
+    def part_bounds(self, i: int) -> Tuple[int, int]:
+        lo = i * self.part_rows
+        return lo, min(lo + self.part_rows, self.nrows)
+
+    def part_sizes(self) -> np.ndarray:
+        """Rows per partition (the last chunk may be ragged)."""
+        sizes = np.full(self.n_partitions, self.part_rows, dtype=np.int64)
+        if self.n_partitions:
+            sizes[-1] = self.nrows - (self.n_partitions - 1) * self.part_rows
+        return sizes
+
+    def point_hit_fraction(self, col: str) -> float:
+        """Expected fraction of partitions a random equality probe on ``col``
+        touches — the planner's prune-aware cost signal.  Disjoint narrow
+        per-partition ranges (sorted ids) approach ``1/P``; a column whose
+        every partition spans the full domain approaches ``1``."""
+        lo, hi = self.lo.get(col), self.hi.get(col)
+        if lo is None or not len(lo):
+            return 1.0
+        with np.errstate(invalid="ignore"):
+            glo = np.fmin.reduce(lo)
+            ghi = np.fmax.reduce(hi)
+        try:
+            span = float(ghi) - float(glo)
+        except (TypeError, ValueError):
+            return 1.0
+        if not np.isfinite(span) or span <= 0:
+            return 1.0 / max(self.n_partitions, 1)
+        frac = (hi.astype(np.float64) - lo.astype(np.float64)) / span
+        frac = np.nan_to_num(frac, nan=1.0)
+        return float(np.clip(frac, 1.0 / max(self.n_partitions, 1), 1.0).mean())
+
+    def state(self) -> Tuple[Dict, Dict[str, np.ndarray]]:
+        """(meta, arrays) for checkpoint spill (``checkpoint/store_io``)."""
+        meta = {"part_rows": self.part_rows, "nrows": self.nrows,
+                "n_partitions": self.n_partitions, "columns": sorted(self.lo)}
+        arrays: Dict[str, np.ndarray] = {}
+        for c in self.lo:
+            arrays[f"lo.{c}"] = self.lo[c]
+            arrays[f"hi.{c}"] = self.hi[c]
+            arrays[f"nulls.{c}"] = self.nulls[c]
+            arrays[f"distinct.{c}"] = self.distinct[c]
+        return meta, arrays
+
+    @staticmethod
+    def from_state(meta: Dict, arrays: Mapping[str, np.ndarray]) -> "ZoneMaps":
+        zm = ZoneMaps(meta["part_rows"], meta["nrows"], meta["n_partitions"])
+        for c in meta["columns"]:
+            zm.lo[c] = np.asarray(arrays[f"lo.{c}"])
+            zm.hi[c] = np.asarray(arrays[f"hi.{c}"])
+            zm.nulls[c] = np.asarray(arrays[f"nulls.{c}"])
+            zm.distinct[c] = np.asarray(arrays[f"distinct.{c}"])
+        return zm
+
+
+def build_zone_maps(cols: Mapping[str, np.ndarray], part_rows: int,
+                    nrows: int) -> ZoneMaps:
+    """One pass of per-partition min/max/null-count/distinct-hint stats.
+
+    ``fmin``/``fmax`` reduceat give null-ignoring bounds (all-NaN partitions
+    keep NaN bounds, which every pruning comparison treats as "cannot prove a
+    miss is impossible" except where NaN semantics *guarantee* one)."""
+    part_rows = max(int(part_rows), 1)
+    n_parts = -(-nrows // part_rows) if nrows else 0
+    zm = ZoneMaps(part_rows, nrows, n_parts)
+    if n_parts == 0:
+        return zm
+    offs = np.arange(n_parts, dtype=np.int64) * part_rows
+    for name, v in cols.items():
+        arr = np.asarray(v)
+        if arr.dtype.kind not in "iufb":
+            continue
+        with np.errstate(invalid="ignore"):
+            lo = np.fmin.reduceat(arr, offs)
+            hi = np.fmax.reduceat(arr, offs)
+        if arr.dtype.kind == "f":
+            nulls = np.add.reduceat(np.isnan(arr).astype(np.int64), offs)
+        else:
+            nulls = np.zeros(n_parts, dtype=np.int64)
+        with np.errstate(invalid="ignore"):
+            const = (lo == hi) & (nulls == 0)
+        zm.lo[name] = lo
+        zm.hi[name] = hi
+        zm.nulls[name] = nulls
+        zm.distinct[name] = np.where(const, 1, 2).astype(np.int8)
+    return zm
+
+
+def resolve_part_rows(nrows: int, num_partitions: Optional[int] = None,
+                      part_rows: Optional[int] = None) -> Optional[int]:
+    """Rows per partition from either a chunk-count or a chunk-size request."""
+    if part_rows is not None:
+        return max(int(part_rows), 1)
+    if num_partitions is not None and num_partitions > 0:
+        return max(-(-nrows // int(num_partitions)), 1)
+    return None
+
+
+class PartitionedTable(Table):
+    """A :class:`Table` split into fixed-size row chunks, each carrying a zone
+    map.  Column arrays are shared with the base table (zero copy); derived
+    tables (``mask``/``take``/...) drop back to plain Tables — partitioning is
+    a property of the *stored* layout, not of query-time selections."""
+
+    def __init__(self, cols: Dict[str, np.ndarray],
+                 dicts: Optional[Dict[str, List[str]]] = None,
+                 name: Optional[str] = None,
+                 part_rows: int = 1,
+                 zone_maps: Optional[ZoneMaps] = None):
+        super().__init__(cols, dicts or {}, name)
+        n = self.nrows
+        self.part_rows = max(int(part_rows), 1)
+        self.zone_maps = (
+            zone_maps if zone_maps is not None
+            else build_zone_maps(self.cols, self.part_rows, n)
+        )
+
+    @property
+    def num_partitions(self) -> int:
+        return self.zone_maps.n_partitions
+
+    def partition_bounds(self, i: int) -> Tuple[int, int]:
+        return self.zone_maps.part_bounds(i)
+
+    def partition(self, i: int) -> Table:
+        """Partition ``i`` as a zero-copy Table view (numpy slices)."""
+        lo, hi = self.partition_bounds(i)
+        return Table({k: v[lo:hi] for k, v in self.cols.items()},
+                     self.dicts, self.name)
+
+    def partitions(self) -> Iterator[Table]:
+        for i in range(self.num_partitions):
+            yield self.partition(i)
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return (f"PartitionedTable({self.name or '?'}, {self.nrows} rows, "
+                f"{self.num_partitions} x {self.part_rows}-row partitions)")
+
+
+def partition_table(table: Table, num_partitions: Optional[int] = None,
+                    part_rows: Optional[int] = None) -> Table:
+    """Partitioned zero-copy view of ``table``; returns ``table`` unchanged
+    when no partitioning is requested."""
+    pr = resolve_part_rows(table.nrows, num_partitions, part_rows)
+    if pr is None:
+        return table
+    return PartitionedTable(dict(table.cols), dict(table.dicts), table.name,
+                            part_rows=pr)
+
+
+def alive_runs(alive: np.ndarray) -> List[Tuple[int, int]]:
+    """Contiguous ``[start, stop)`` partition-index runs of surviving (True)
+    partitions — scans stitch per-run masks back deterministically."""
+    if not len(alive):
+        return []
+    a = np.asarray(alive, dtype=bool)
+    edges = np.flatnonzero(np.diff(a.astype(np.int8)))
+    starts = [0] if a[0] else []
+    starts += [int(e) + 1 for e in edges if not a[e]]
+    stops = [int(e) + 1 for e in edges if a[e]]
+    if a[-1]:
+        stops.append(len(a))
+    return list(zip(starts, stops))
+
+
+def rows_of_alive(alive: np.ndarray, part_rows: int, nrows: int) -> np.ndarray:
+    """Global row indices of the surviving partitions (last chunk clamped)."""
+    runs = alive_runs(alive)
+    if not runs:
+        return np.empty(0, dtype=np.int64)
+    return np.concatenate([
+        np.arange(p0 * part_rows, min(p1 * part_rows, nrows), dtype=np.int64)
+        for p0, p1 in runs
+    ])
 
 
 def concat_tables(tables: Sequence[Table]) -> Table:

@@ -1,0 +1,389 @@
+"""Partitioned table runtime: zone-map pruning, parallel partition scans,
+partitioned stores, and partition-wise spill.
+
+The contract under test everywhere: answers with partitioning on (any
+partition count, any worker count, any budget) are bit-identical to the
+unpartitioned full scan — pruning may only skip partitions *proved* empty.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import Executor, PredTrace, ScanEngine
+from repro.core.distributed import PartitionExecutor, distributed_refine
+from repro.core.expr import Col, Param, land, lor, params_of
+from repro.core.scan import partition_safe, prune_zone_maps
+from repro.core.store import IntermediateStore
+from repro.core.table import (
+    PartitionedTable, Table, alive_runs, build_zone_maps, partition_table,
+)
+from repro.tpch import ALL_QUERIES
+
+from conftest import lineage_sets
+
+RNG = np.random.default_rng(7)
+
+
+def _table(n=4000):
+    return Table.from_dict({
+        "k": np.sort(RNG.integers(0, 10 * n, n)),          # sorted ids
+        "g": RNG.integers(0, 40, n),                       # low cardinality
+        "f": np.where(RNG.random(n) < 0.1, np.nan,
+                      RNG.normal(100.0, 20.0, n)),         # floats with NaN
+        "b": RNG.random(n) < 0.5,                          # booleans
+        "s": RNG.choice(["aa", "bb", "cc", "dd"], n),      # dict-encoded
+        "neg": RNG.integers(-5, 5, n),                     # -1 sentinel range
+    })
+
+
+PREDICATES = [
+    (Col("k").eq(Param("v")), lambda t: {"v": int(t["k"][123])}),
+    (Col("k").eq(Param("v")), lambda t: {"v": -99}),                # all-pruned
+    (Col("g") < Param("v"), lambda t: {"v": 100}),                  # none-pruned
+    (land(Col("k") >= Param("a"), Col("k") <= Param("b")),
+     lambda t: {"a": int(t["k"][50]), "b": int(t["k"][90])}),
+    (land(Col("g").eq(Param("v")), Col("f") > Param("w")),
+     lambda t: {"v": 3, "w": 110.0}),
+    (Col("f").eq(Param("v")), lambda t: {"v": float("nan")}),       # NaN probe
+    (Col("neg").ne(Param("v")), lambda t: {"v": -1}),               # != sentinel
+    (Col("s").eq(Param("v")), lambda t: {"v": 2}),                  # dict codes
+    (Col("k").isin(Param("vs")), lambda t: {"vs": np.unique(t["k"][:7])}),
+    (Col("k").eq(Param("vs")), lambda t: {"vs": t["k"][200:204]}),  # membership
+    (land(Col("b").eq(Param("v")), Col("g") >= 20), lambda t: {"v": True}),
+    (lor(Col("g") < 2, Col("g") > 37), lambda t: {}),               # residual OR
+]
+
+
+@pytest.mark.parametrize("parts", [3, 16, 64, 1000])
+def test_partitioned_scan_matches_full_scan(parts):
+    t = _table()
+    pt = partition_table(t, num_partitions=parts)
+    eng = ScanEngine()
+    for pred, mk in PREDICATES:
+        binding = mk(t)
+        want = eng.scan(pred, t, binding)
+        got = eng.scan(pred, pt, binding)
+        assert np.array_equal(want, got), (pred, parts)
+
+
+def test_partition_boundary_targets():
+    """Rows sitting exactly on partition boundaries are never lost."""
+    t = _table(1024)
+    pt = partition_table(t, part_rows=128)
+    eng = ScanEngine()
+    for i in (0, 127, 128, 129, 255, 256, 1023):
+        pred = Col("k").eq(Param("v"))
+        binding = {"v": int(t["k"][i])}
+        got = eng.scan(pred, pt, binding)
+        want = eng.scan(pred, t, binding)
+        assert np.array_equal(got, want), i
+        assert got[i]
+
+
+def test_all_pruned_and_nothing_pruned_counters():
+    t = _table(2048)
+    pt = partition_table(t, num_partitions=16)
+    eng = ScanEngine()
+    # k is sorted: a value below the global min prunes every partition
+    m = eng.scan(Col("k").eq(Param("v")), pt, {"v": -1})
+    assert not m.any()
+    assert eng.stats.partitions_pruned == 16 and eng.stats.partitions_scanned == 0
+    # a tautological range prunes nothing
+    eng2 = ScanEngine()
+    m = eng2.scan(Col("k") >= Param("v"), pt, {"v": int(t["k"].min())})
+    assert m.all()
+    assert eng2.stats.partitions_pruned == 0
+    assert eng2.stats.partitions_scanned == 16
+
+
+def test_prune_zone_maps_is_conservative_random():
+    """Property-style sweep: pruning never removes a matching row."""
+    eng = ScanEngine()
+    for trial in range(20):
+        n = int(RNG.integers(10, 3000))
+        t = _table(n)
+        pr = int(RNG.integers(1, n + 1))
+        pt = partition_table(t, part_rows=pr)
+        pred, mk = PREDICATES[trial % len(PREDICATES)]
+        binding = mk(t)
+        prog = eng.compile(pred)
+        want = eng.backend.scan(prog, t, binding)
+        if partition_safe(prog, binding):
+            alive = prune_zone_maps(prog, pt.zone_maps, binding)
+            hit = np.flatnonzero(want)
+            if len(hit):
+                assert alive[hit // pr].all(), (trial, pred)
+        assert np.array_equal(eng.scan(pred, pt, binding), want)
+
+
+def test_zone_maps_shapes_and_nulls():
+    t = _table(1000)
+    zm = build_zone_maps(t.cols, 100, t.nrows)
+    assert zm.n_partitions == 10
+    assert zm.part_sizes().sum() == 1000
+    assert (zm.nulls["f"] >= 0).all() and zm.nulls["f"].sum() > 0
+    assert zm.nulls["k"].sum() == 0
+    # sorted column: per-partition ranges are disjoint => low hit fraction
+    assert zm.point_hit_fraction("k") < 0.3
+    lo, hi = zm.part_bounds(9)
+    assert (lo, hi) == (900, 1000)
+
+
+def test_alive_runs():
+    assert alive_runs(np.array([], dtype=bool)) == []
+    assert alive_runs(np.array([True])) == [(0, 1)]
+    assert alive_runs(np.array([False, True, True, False, True])) == [(1, 3), (4, 5)]
+    assert alive_runs(np.zeros(4, dtype=bool)) == []
+
+
+def test_partitioned_table_is_a_table():
+    t = _table(500)
+    pt = partition_table(t, num_partitions=7)
+    assert isinstance(pt, Table) and isinstance(pt, PartitionedTable)
+    assert pt.nrows == t.nrows and pt.columns == t.columns
+    assert sum(p.nrows for p in pt.partitions()) == t.nrows
+    # derived selections drop back to plain Tables
+    assert type(pt.mask(np.ones(500, dtype=bool))) is Table
+    # zero-copy: column arrays are shared
+    assert pt.cols["k"] is t.cols["k"]
+
+
+# --------------------------------------------------------------------------- #
+# PredTrace end-to-end: partitioned on == partitioned off
+# --------------------------------------------------------------------------- #
+
+
+def _prepared(db, plan, **kw):
+    res = Executor(db).run(plan)
+    pt = PredTrace(db, plan, **kw)
+    pt.infer(stats=res.stats)
+    pt.run()
+    return pt
+
+
+TPCH_QUERIES = ["q3", "q5", "q10"]
+
+
+@pytest.mark.parametrize("qname", TPCH_QUERIES)
+def test_tpch_partitioned_matches_plain(tpch_db, qname):
+    plan = ALL_QUERIES[qname](tpch_db)
+    if Executor(tpch_db).run(plan).output.nrows == 0:
+        pytest.skip(f"{qname} empty at this scale factor")
+    pt = _prepared(tpch_db, plan)
+    pt_p = _prepared(tpch_db, plan, num_partitions=16)
+    n = min(6, pt.exec_result.output.nrows)
+    for r in range(n):
+        assert (lineage_sets(pt.query(r).lineage)
+                == lineage_sets(pt_p.query(r).lineage)), (qname, r)
+    batch = pt_p.query_batch(list(range(n)))
+    for r, ans in enumerate(batch):
+        assert (lineage_sets(ans.lineage)
+                == lineage_sets(pt.query(r).lineage)), (qname, r)
+    # iterative path routes through the same partitioned scans
+    pt_p.infer_iterative()
+    for r in range(min(2, n)):
+        assert (lineage_sets(pt_p.query_iterative(r).lineage)
+                == lineage_sets(pt.query_iterative(r).lineage))
+    st = pt_p.scan_engine.stats
+    assert st.prune_calls > 0
+    assert st.partitions_pruned > 0
+
+
+@pytest.mark.parametrize("qname", ["q3", "q10"])
+def test_tpch_partitioned_store_matches(tpch_db, qname):
+    """Partitioned *encoded* stages: in-situ pruned scans stay bit-identical."""
+    plan = ALL_QUERIES[qname](tpch_db)
+    if Executor(tpch_db).run(plan).output.nrows == 0:
+        pytest.skip(f"{qname} empty at this scale factor")
+    pt = _prepared(tpch_db, plan)
+    pt_s = _prepared(tpch_db, plan, store=True, num_partitions=8)
+    assert any(st.zone_maps is not None for st in pt_s.store.stages.values())
+    n = min(6, pt.exec_result.output.nrows)
+    for r in range(n):
+        assert (lineage_sets(pt.query(r).lineage)
+                == lineage_sets(pt_s.query(r).lineage)), (qname, r)
+    binding = pt_s._output_binding(0)
+    for st in pt_s.lineage_plan.stages:
+        if params_of(st.run_pred) - set(binding):
+            continue
+        got = pt_s.store.scan(st.node_id, st.run_pred, binding, pt_s.scan_engine)
+        want = pt_s.scan_engine.backend.scan(
+            pt_s.scan_engine.compile(st.run_pred),
+            pt_s.store.table(st.node_id), binding,
+        )
+        assert np.array_equal(got, want), (qname, st.node_id)
+
+
+@pytest.mark.parametrize("budget_frac", [None, 0.5, 0.0])
+def test_partitioned_budgets_match_plain(tpch_db, budget_frac):
+    """Budget 0 / partial / None: partitioning never changes an answer."""
+    plan = ALL_QUERIES["q3"](tpch_db)
+    if Executor(tpch_db).run(plan).output.nrows == 0:
+        pytest.skip("q3 empty at this scale factor")
+    if budget_frac is None:
+        kw = {}
+    else:
+        full = _prepared(tpch_db, plan, store=True)
+        kw = {"budget_bytes": int(full.store.nbytes() * budget_frac)}
+    pt = _prepared(tpch_db, plan, **kw)
+    pt_p = _prepared(tpch_db, plan, num_partitions=16, **kw)
+    n = min(4, pt.exec_result.output.nrows)
+    for r in range(n):
+        assert (lineage_sets(pt.query(r).lineage)
+                == lineage_sets(pt_p.query(r).lineage)), (budget_frac, r)
+    for r, ans in enumerate(pt_p.query_batch(list(range(n)))):
+        assert (lineage_sets(ans.lineage)
+                == lineage_sets(pt.query(r).lineage)), (budget_frac, r)
+
+
+def test_parallel_partition_scans_deterministic(tpch_db):
+    plan = ALL_QUERIES["q3"](tpch_db)
+    if Executor(tpch_db).run(plan).output.nrows == 0:
+        pytest.skip("q3 empty at this scale factor")
+    pt = _prepared(tpch_db, plan)
+    pt_par = _prepared(tpch_db, plan, num_partitions=16, parallel=4)
+    assert pt_par.partition_exec is not None
+    # force fan-out even at test scale
+    pt_par.partition_exec.min_parallel_rows = 0
+    n = min(4, pt.exec_result.output.nrows)
+    try:
+        for _ in range(3):  # repeated runs: merge order is deterministic
+            for r in range(n):
+                assert (lineage_sets(pt.query(r).lineage)
+                        == lineage_sets(pt_par.query(r).lineage)), r
+    finally:
+        pt_par.partition_exec.close()
+
+
+def test_partition_executor_plain_table_passthrough():
+    t = _table(1000)
+    eng = ScanEngine()
+    pexec = PartitionExecutor(eng, max_workers=2)
+    pred = Col("g") < Param("v")
+    try:
+        got = pexec.scan(pred, t, {"v": 20})
+    finally:
+        pexec.close()
+    assert np.array_equal(got, eng.scan(pred, t, {"v": 20}))
+
+
+def test_distributed_refine_routes_through_engine(tpch_db):
+    """No mesh: distributed_refine is the shared refine loop over the shared
+    ScanEngine, with optional partitioning — answers match query_iterative."""
+    plan = ALL_QUERIES["q3"](tpch_db)
+    if Executor(tpch_db).run(plan).output.nrows == 0:
+        pytest.skip("q3 empty at this scale factor")
+    pt = PredTrace(tpch_db, plan)
+    pt.infer_iterative()
+    pt.run_unmodified()
+    want = lineage_sets(pt.query_iterative(0).lineage)
+    binding = pt._output_binding(0)
+    eng = ScanEngine()
+    ans = distributed_refine(pt.iter_plan, tpch_db, binding, engine=eng,
+                             num_partitions=8)
+    assert lineage_sets(ans.lineage) == want
+    assert eng.stats.scans > 0  # routed through the shared engine
+
+
+# --------------------------------------------------------------------------- #
+# partition-wise spill
+# --------------------------------------------------------------------------- #
+
+
+def test_partitioned_spill_roundtrip(tmp_path, tpch_db):
+    from repro.checkpoint.store_io import load_store, save_store
+
+    plan = ALL_QUERIES["q3"](tpch_db)
+    if Executor(tpch_db).run(plan).output.nrows == 0:
+        pytest.skip("q3 empty at this scale factor")
+    pt = _prepared(tpch_db, plan, store=True, num_partitions=8)
+    want = lineage_sets(pt.query(0).lineage)
+    save_store(tmp_path, pt.store)
+    reloaded = load_store(tmp_path)
+    assert set(reloaded.stages) == set(pt.store.stages)
+    assert reloaded.nbytes() == pt.store.nbytes()  # deterministic re-encode
+    for nid in pt.store.stages:
+        zm = reloaded.stages[nid].zone_maps
+        if pt.store.stages[nid].zone_maps is not None:
+            assert zm is not None
+            assert zm.n_partitions == pt.store.stages[nid].zone_maps.n_partitions
+    pt.attach_store(reloaded)
+    assert lineage_sets(pt.query(0).lineage) == want
+
+
+def test_scan_spilled_stage_loads_only_survivors(tmp_path, tpch_db):
+    from repro.checkpoint.store_io import (
+        load_stage_partitions, save_store, scan_spilled_stage,
+    )
+
+    plan = ALL_QUERIES["q3"](tpch_db)
+    if Executor(tpch_db).run(plan).output.nrows == 0:
+        pytest.skip("q3 empty at this scale factor")
+    pt = _prepared(tpch_db, plan, store=True, num_partitions=8)
+    save_store(tmp_path, pt.store)
+    binding = pt._output_binding(0)
+    eng = ScanEngine()
+    checked = 0
+    for st in pt.lineage_plan.stages:
+        if params_of(st.run_pred) - set(binding):
+            continue
+        if pt.store.stages[st.node_id].zone_maps is None:
+            continue
+        want = pt.store.scan(st.node_id, st.run_pred, binding, pt.scan_engine)
+        got = scan_spilled_stage(tmp_path, st.node_id, st.run_pred, binding, eng)
+        assert np.array_equal(got, want), st.node_id
+        checked += 1
+        # partial load returns exactly the surviving rows
+        zmaps = pt.store.stages[st.node_id].zone_maps
+        alive = np.zeros(zmaps.n_partitions, dtype=bool)
+        alive[0] = True
+        sub, idx = load_stage_partitions(tmp_path, st.node_id, alive)
+        assert sub.nrows == len(idx) == zmaps.part_bounds(0)[1]
+    assert checked > 0
+
+
+# --------------------------------------------------------------------------- #
+# LRU-bounded engine caches
+# --------------------------------------------------------------------------- #
+
+
+def test_lru_cache_caps_and_counters():
+    t = _table(100)
+    eng = ScanEngine(program_cache=4)
+    for i in range(10):
+        eng.scan(Col("g") < i, t)  # 10 distinct structures
+    snap = eng.stats()
+    progs = snap["caches"]["programs"]
+    assert progs["size"] <= 4
+    assert progs["evictions"] >= 6
+    assert {"programs", "jit", "sorts", "slices"} <= set(snap["caches"])
+    assert snap["scans"] == 10
+    # attribute access still works alongside the callable snapshot
+    assert eng.stats.scans == 10
+
+
+def test_program_cache_hit_after_eviction_recompiles():
+    t = _table(50)
+    eng = ScanEngine(program_cache=2)
+    p1 = Col("g") < Param("v")
+    eng.scan(p1, t, {"v": 1})
+    eng.scan(Col("g") < 1, t)
+    eng.scan(Col("g") < 2, t)  # evicts p1
+    compiles = eng.stats.compiles
+    eng.scan(p1, t, {"v": 2})
+    assert eng.stats.compiles == compiles + 1  # recompiled after eviction
+
+
+def test_planner_partition_fields(tpch_db):
+    plan = ALL_QUERIES["q3"](tpch_db)
+    if Executor(tpch_db).run(plan).output.nrows == 0:
+        pytest.skip("q3 empty at this scale factor")
+    pt = _prepared(tpch_db, plan, store=True, num_partitions=8)
+    mp = pt.mat_plan
+    assert mp is not None
+    for nid in mp.kept:
+        assert mp.scan_cost.get(nid, 0) <= mp.sizes[nid]
+    assert mp.kept_scan_cost() <= sum(mp.sizes[n] for n in mp.kept)
+    ps = pt.store.partition_sizes()
+    for nid, parts in ps.items():
+        assert sum(parts) == pt.store.stages[nid].nbytes()

@@ -34,6 +34,7 @@ def main() -> None:
     from .pipelines import bench_pipelines
     from .roofline_bench import bench_roofline
     from .scan_bench import bench_scan_engine
+    from .serve_bench import bench_serve
     from .store_bench import bench_store
 
     benches = {
@@ -49,6 +50,7 @@ def main() -> None:
         "scan_engine": bench_scan_engine, # batched vs single-row query latency
         "store": bench_store,             # compressed store + budget planner
         "partition": bench_partition,     # zone-map pruning + parallel scans
+        "serve": bench_serve,             # concurrent service vs serial query()
         "roofline": bench_roofline,       # §Roofline (reads dry-run artifacts)
     }
     selected = args.only.split(",") if args.only else list(benches)

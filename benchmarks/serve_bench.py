@@ -1,0 +1,206 @@
+"""LineageService benchmarks: concurrent serving vs serial query().
+
+Emits CSV rows like every other suite and writes ``BENCH_serve.json`` with
+the serving-layer acceptance metrics:
+
+* ``throughput_x``       — closed-loop N-client wall-clock speedup of the
+                           coalescing service over answering the identical
+                           64-request mixed Q3/Q10 workload with serial
+                           ``query()`` calls (target: >= 3x).  Clients issue
+                           their requests in dashboard-style bursts (submit a
+                           page of lineage questions, await the page) over a
+                           seeded Zipf row distribution — the standard
+                           hot-row serving shape.
+* ``identical_answers``  — every service answer bit-identical to its serial
+                           ``query()`` counterpart, on every repetition.
+* ``invalidation_ok``    — after a store re-run (generation bump), the
+                           cached answer is detected stale (counted), never
+                           served, and the recomputed answer matches.
+* coalesce width / cache hit rate / p50-p99 latency from service stats().
+"""
+
+from __future__ import annotations
+
+import json
+import threading
+import time
+from pathlib import Path
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.core import Executor, LineageService, PredTrace
+
+from . import common
+from .common import db, lineage_sets
+
+QUERIES = ("q3", "q10")
+N_REQUESTS = 64
+N_CLIENTS = 4
+BURST = 16          # requests each client submits before awaiting the page
+ZIPF_A = 1.5        # hot-row skew of the request distribution
+REPEAT = 3          # min-of-3, fresh (cold-cache) service per repetition
+OUT_JSON = Path("BENCH_serve.json")
+
+
+def _prepared(d, qname: str, **kw) -> PredTrace:
+    from repro.tpch import ALL_QUERIES
+
+    plan = ALL_QUERIES[qname](d)
+    res = Executor(d).run(plan)
+    pt = PredTrace(d, plan, **kw)
+    pt.infer(stats=res.stats)
+    pt.run()
+    return pt
+
+
+def _workload(pts: Dict[str, PredTrace]) -> List[Tuple[str, int]]:
+    """64 (pipeline, row) requests: queries interleaved, rows Zipf-skewed."""
+    rng = np.random.default_rng(common.SEED)
+    names = [q for q in QUERIES if q in pts]
+    reqs = []
+    for i in range(N_REQUESTS):
+        q = names[i % len(names)]
+        n = pts[q].exec_result.output.nrows
+        ranks = np.arange(1, n + 1, dtype=np.float64) ** -ZIPF_A
+        reqs.append((q, int(rng.choice(n, p=ranks / ranks.sum()))))
+    return reqs
+
+
+def _closed_loop(svc: LineageService, reqs: List[Tuple[str, int]]):
+    """N closed-loop clients; each submits its share in pages of BURST and
+    awaits the page before issuing the next (dashboard pattern)."""
+    results: Dict[int, object] = {}
+    errors: List[BaseException] = []
+
+    def client(cid: int):
+        try:
+            mine = list(range(cid, len(reqs), N_CLIENTS))
+            for j in range(0, len(mine), BURST):
+                page = mine[j:j + BURST]
+                # a page mixes pipelines: submit per pipeline via the page API
+                by_pipe: Dict[str, List[int]] = {}
+                for i in page:
+                    by_pipe.setdefault(reqs[i][0], []).append(i)
+                handles = []
+                for q, idxs in by_pipe.items():
+                    hs = svc.submit_many([reqs[i][1] for i in idxs], q,
+                                         timeout=120)
+                    handles.extend(zip(idxs, hs))
+                for i, h in handles:
+                    results[i] = h.result()
+        except BaseException as e:  # noqa: BLE001 - reported below
+            errors.append(e)
+
+    threads = [threading.Thread(target=client, args=(c,), daemon=True)
+               for c in range(N_CLIENTS)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(300)
+    dt = time.perf_counter() - t0
+    if errors:
+        raise errors[0]
+    assert len(results) == len(reqs), "client threads hung"
+    return results, dt
+
+
+def bench_serve() -> List[tuple]:
+    rows: List[tuple] = []
+    results: Dict[str, object] = {}
+    sf = common.SF_MAIN
+    d = db(sf)
+    results["config"] = {
+        "sf": sf, "seed": common.SEED, "requests": N_REQUESTS,
+        "clients": N_CLIENTS, "burst": BURST, "zipf_a": ZIPF_A,
+        "queries": list(QUERIES),
+    }
+
+    pts = {}
+    for q in QUERIES:
+        pt = _prepared(d, q)
+        if pt.exec_result.output.nrows > 0:
+            pts[q] = pt
+        else:
+            pt.close()
+    reqs = _workload(pts)
+    results["config"]["distinct_questions"] = len(set(reqs))
+
+    # serial baseline: the identical workload through query(), one at a time
+    # (warm one call per pipeline first so compile caches don't skew it)
+    for q in pts:
+        pts[q].query(0)
+    serial = [pts[q].query(row) for q, row in reqs]
+    serial_s = float("inf")
+    for _ in range(REPEAT):
+        t0 = time.perf_counter()
+        for q, row in reqs:
+            pts[q].query(row)
+        serial_s = min(serial_s, time.perf_counter() - t0)
+
+    service_s, st, identical = float("inf"), None, True
+    for _ in range(REPEAT):
+        with LineageService(pts, max_batch=32, window_s=0.003,
+                            idle_quantum_s=0.0002) as svc:
+            answers, dt = _closed_loop(svc, reqs)
+            identical &= all(
+                lineage_sets(answers[i].lineage) == lineage_sets(serial[i].lineage)
+                for i in range(len(reqs))
+            )
+            if dt < service_s:
+                service_s, st = dt, svc.stats()
+    throughput_x = serial_s / max(service_s, 1e-9)
+
+    # cache invalidation after a store re-run: cached -> stale -> recomputed
+    pt_s = _prepared(d, "q10", store=True)
+    with LineageService(pt_s, window_s=0.001) as svc2:
+        before = lineage_sets(svc2.query(0, timeout=60).lineage)
+        hit = svc2.query(0, timeout=60).detail.get("cache") == "hit"
+        pt_s.run()  # bumps Executor.run + store generations
+        after = svc2.query(0, timeout=60)
+        st2 = svc2.stats()
+    invalidation_ok = bool(
+        hit and st2["cache_stale"] >= 1
+        and after.detail.get("cache") != "hit"
+        and lineage_sets(after.lineage) == before
+    )
+    pt_s.close()
+
+    results["serve.mixed"] = {
+        "serial_s": serial_s,
+        "service_s": service_s,
+        "throughput_x": throughput_x,
+        "identical_answers": bool(identical),
+        "coalesce_width_avg": st["coalesce_width_avg"],
+        "coalesce_width_max": st["coalesce_width_max"],
+        "batches": st["batches"],
+        "cache_hit_rate": st["cache_hit_rate"],
+        "latency_ms_p50": st["latency_ms_p50"],
+        "latency_ms_p99": st["latency_ms_p99"],
+    }
+    results["serve.invalidation"] = {
+        "invalidation_ok": invalidation_ok,
+        "cache_stale": int(st2["cache_stale"]),
+    }
+    results["summary"] = {
+        "identical_answers": bool(identical and invalidation_ok),
+        "throughput_x": throughput_x,
+        "throughput_target_met": bool(throughput_x >= 3.0),
+        "invalidation_ok": invalidation_ok,
+    }
+    OUT_JSON.write_text(json.dumps(results, indent=2, sort_keys=True))
+
+    rows.append((
+        f"serve.mixed.sf{sf}", service_s / N_REQUESTS * 1e6,
+        f"throughput={throughput_x:.1f}x serial={serial_s*1e3:.0f}ms "
+        f"service={service_s*1e3:.0f}ms "
+        f"coalesce_avg={st['coalesce_width_avg']:.1f} "
+        f"hit_rate={st['cache_hit_rate']:.2f} identical={identical}",
+    ))
+    rows.append(("serve.json", 0.0,
+                 f"wrote {OUT_JSON}: throughput={throughput_x:.1f}x "
+                 f"invalidation_ok={invalidation_ok}"))
+    for pt in pts.values():
+        pt.close()
+    return rows

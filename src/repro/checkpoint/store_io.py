@@ -261,7 +261,7 @@ def scan_spilled_stage(
         else:
             alive = np.ones(zm.n_partitions, dtype=bool)
         ns = int(np.count_nonzero(alive))
-        engine.stats.prune_calls += 1
+        engine.stats.bump(prune_calls=1)
         engine.record_prune(ns, len(alive) - ns)
         mask = np.zeros(sm["nrows"], dtype=bool)
         if ns == 0:

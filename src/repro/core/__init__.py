@@ -15,6 +15,9 @@ from .scan import (
     AtomProgram, LRUCache, NumpyBackend, PallasBackend, ScanEngine,
     prune_zone_maps,
 )
+from .service import (
+    DeadlineExceeded, LineageRequest, LineageService, RequestCancelled,
+)
 from .store import InSituBackend, IntermediateStore, StoredTable, encode_column
 from .table import PartitionedTable, Table, ZoneMaps, build_zone_maps, partition_table
 
@@ -28,4 +31,5 @@ __all__ = [
     "MaterializationPlan", "plan_materialization",
     "PartitionedTable", "ZoneMaps", "partition_table", "build_zone_maps",
     "prune_zone_maps", "PartitionExecutor", "distributed_refine", "LRUCache",
+    "LineageService", "LineageRequest", "DeadlineExceeded", "RequestCancelled",
 ]

@@ -30,6 +30,7 @@ duplicated refinement loop (which predated the ScanEngine) entirely.
 from __future__ import annotations
 
 import os
+import threading
 import time
 import weakref
 from concurrent.futures import ThreadPoolExecutor
@@ -132,6 +133,11 @@ class PartitionExecutor:
         # id(table) -> (weakref, _DeviceTable); weakref eviction keeps dead
         # tables from pinning device memory
         self._device: Dict[int, Tuple[weakref.ref, _DeviceTable]] = {}
+        # reentrancy: scan() may be called from many service/request threads
+        # at once; the lock guards lazy pool creation and the device-table
+        # install so racing callers never leak a second pool or overwrite
+        # each other's device uploads
+        self._lock = threading.Lock()
 
     # ------------------------------------------------------------------ #
     def pool(self) -> Optional[ThreadPoolExecutor]:
@@ -141,15 +147,19 @@ class PartitionExecutor:
             workers = self.max_workers or min(os.cpu_count() or 1, 16)
             if workers <= 1:
                 return None
-            self._pool = ThreadPoolExecutor(
-                max_workers=workers, thread_name_prefix="predtrace-part"
-            )
+            with self._lock:
+                if self._pool is None:
+                    self._pool = ThreadPoolExecutor(
+                        max_workers=workers,
+                        thread_name_prefix="predtrace-part",
+                    )
         return self._pool
 
     def close(self) -> None:
-        if self._pool is not None:
-            self._pool.shutdown(wait=True)
-            self._pool = None
+        with self._lock:
+            pool, self._pool = self._pool, None
+        if pool is not None:
+            pool.shutdown(wait=True)
 
     def __del__(self):  # pragma: no cover - GC safety net
         try:
@@ -167,7 +177,7 @@ class PartitionExecutor:
         pruning only skips partitions proved empty, and per-partition masks
         are merged by partition index."""
         binding = binding or {}
-        self.engine.stats.scans += 1
+        self.engine.stats.bump(scans=1)
         if self.mesh is not None:
             return self._device_scan(pred, table, binding)
         plan = self.engine.partition_plan(pred, table, binding)
@@ -235,9 +245,14 @@ class PartitionExecutor:
         entry = self._device.get(tk)
         if entry is not None and entry[0]() is table:
             return entry[1]
-        dt = _DeviceTable(table, self.mesh, self.mesh_axes, self.engine)
-        ref = weakref.ref(table, lambda _, k=tk, d=self._device: d.pop(k, None))
-        self._device[tk] = (ref, dt)
+        with self._lock:
+            entry = self._device.get(tk)
+            if entry is not None and entry[0]() is table:
+                return entry[1]
+            dt = _DeviceTable(table, self.mesh, self.mesh_axes, self.engine)
+            ref = weakref.ref(table,
+                              lambda _, k=tk, d=self._device: d.pop(k, None))
+            self._device[tk] = (ref, dt)
         return dt
 
 

@@ -15,6 +15,7 @@ The executor also
 
 from __future__ import annotations
 
+import itertools
 import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
@@ -132,6 +133,12 @@ class ExecResult:
     store: Optional[IntermediateStore] = None
 
 
+# process-wide monotone run ids: every Executor.run() gets a fresh one, so a
+# (run_generation, store.generation) pair uniquely versions the data any
+# lineage answer was computed from (LineageService cache invalidation)
+_RUN_GENERATIONS = itertools.count(1)
+
+
 class Executor:
     """Evaluates plans over a catalog of named source tables."""
 
@@ -142,6 +149,10 @@ class Executor:
         # re-execution hits the same compiled atom programs the lineage-query
         # phase uses
         self.scan_engine = scan_engine or ScanEngine()
+        # generation of the most recent run() through this executor (0 =
+        # never ran); bumped at run entry so answers derived from a
+        # superseded execution are detectably stale
+        self.run_generation: int = 0
 
     def schemas(self) -> Dict[str, List[str]]:
         return {k: t.columns for k, t in self.catalog.items()}
@@ -165,6 +176,7 @@ class Executor:
         during the pipeline-execution phase (store-backed runs partition at
         encode time via the store's own config instead)."""
         materialize = materialize or {}
+        self.run_generation = next(_RUN_GENERATIONS)
         cache: Dict[int, Table] = {}
         stats: Dict[int, NodeStats] = {}
         saved: Dict[int, object] = {}

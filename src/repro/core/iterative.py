@@ -76,8 +76,14 @@ class IterativeInference:
 
         def down1(node: O.Node, F: Expr):
             if isinstance(node, O.Source):
+                # a source reached via several paths (shared-subtree DAGs:
+                # Union parts, Intersect sides, self-joins) contributes rows
+                # through ANY of them, so per-path predicates OR-combine.
+                # AND-combining was unsound: a Union part's rows need not
+                # satisfy the sibling part's predicate (fuzzer-found,
+                # tests/corpus/union_intersect_count.json).
                 prev = g1.get(node.id)
-                g1[node.id] = (node.table, F if prev is None else land(prev[1], F))
+                g1[node.id] = (node.table, F if prev is None else lor(prev[1], F))
                 return
             push = self.pd.push_node(node, F, relaxed=True)
             for c in node.children:
@@ -176,8 +182,9 @@ class IterativeInference:
                     )
                 ]
                 combined = land(*atoms)
+                # OR across arrival paths, matching down1 (superset contract)
                 prev = g3.get(node.id)
-                g3[node.id] = (node.table, combined if prev is None else land(prev[1], combined))
+                g3[node.id] = (node.table, combined if prev is None else lor(prev[1], combined))
                 return
             D = land(F, up_cache.get(node.id, TRUE))
             push = self.pd.push_node(node, D, relaxed=True)

@@ -13,6 +13,7 @@
 
 from __future__ import annotations
 
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple, Union
@@ -304,6 +305,9 @@ class PredTrace:
         self.iter_plan: Optional[IterativePlan] = None
         self.exec_result: Optional[ExecResult] = None
         self.infer_seconds: float = 0.0
+        # guards lazy iterative-plan inference: concurrent query() calls that
+        # hit the superset fallback would otherwise race infer_iterative()
+        self._lazy_lock = threading.RLock()
 
     # ------------------------------------------------------------------ #
     def close(self) -> None:
@@ -319,6 +323,19 @@ class PredTrace:
 
     def __exit__(self, *exc) -> None:
         self.close()
+
+    # ------------------------------------------------------------------ #
+    def answer_generation(self) -> Tuple[int, int]:
+        """Version token of the data any lineage answer derives from: the
+        executor's run generation (bumped by every ``run()`` /
+        ``run_unmodified()``) and the intermediate store's generation
+        (bumped by every ``put``/``evict``; ``attach_store`` swaps in a
+        store with a distinct generation).  Both counters come from
+        process-wide monotone sequences, so a (run, store) pair never
+        repeats — the LineageService stamps cached answers with this token
+        and treats any mismatch as stale."""
+        store_gen = self.store.generation if self.store is not None else 0
+        return (self.executor.run_generation, store_gen)
 
     # ------------------------------------------------------------------ #
     def infer(self, stats: Optional[Dict] = None) -> LineagePlan:
@@ -424,11 +441,19 @@ class PredTrace:
                 binding[p] = v.item() if hasattr(v, "item") else v
         return binding
 
+    def _ensure_iter_plan(self) -> IterativePlan:
+        """Lazily infer the iterative plan exactly once, even when concurrent
+        query threads reach the superset fallback together."""
+        if self.iter_plan is None:
+            with self._lazy_lock:
+                if self.iter_plan is None:
+                    self.infer_iterative()
+        return self.iter_plan
+
     def _superset_refine(self, t_o: Union[int, Dict[str, object]]) -> RefineResult:
         """Iterative refinement (Algorithm 3) used as the per-table fallback
         when budget-dropped stages leave source-predicate params unbound."""
-        if self.iter_plan is None:
-            self.infer_iterative()
+        self._ensure_iter_plan()
         binding = self._output_binding(t_o, self.iter_plan.out_params)
         return refine(self.iter_plan, self.catalog, binding,
                       scan=lambda p, t, b: self._scan(p, t, b))
@@ -781,8 +806,7 @@ class PredTrace:
         self, t_o: Union[int, Dict[str, object]], max_iters: int = 32, scan=None
     ) -> LineageAnswer:
         """Algorithm 3: no intermediate results; may return a superset."""
-        if self.iter_plan is None:
-            self.infer_iterative()
+        self._ensure_iter_plan()
         if self.exec_result is None:
             self.run_unmodified()
         t0 = time.perf_counter()
@@ -800,8 +824,7 @@ class PredTrace:
 
     def query_naive(self, t_o: Union[int, Dict[str, object]]) -> LineageAnswer:
         """Naive pushdown baseline for Table 6: phase-1 predicates only."""
-        if self.iter_plan is None:
-            self.infer_iterative()
+        self._ensure_iter_plan()
         if self.exec_result is None:
             self.run_unmodified()
         t0 = time.perf_counter()

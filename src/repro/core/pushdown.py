@@ -186,7 +186,19 @@ class Pushdown:
             return Push({p.id: F for p in n.parts}, True)
 
         if isinstance(n, O.Intersect):
-            return Push({n.left.id: F, n.right.id: F}, True)
+            # the right-side contribution to an output row's lineage is the
+            # VALUE-MATCHING right rows; F captures them exactly only when it
+            # pins every output column (full row equality).  A partial pin
+            # over-selects (fuzzer-found, corpus intersect_partial_pins) —
+            # imprecise, so Algorithm 1 materializes this node and re-pins.
+            pins = pins_of(F)
+            out_cols = set(self.schema_of(n))
+            precise = out_cols <= set(pins)
+            req: Set[str] = set()
+            if precise:
+                for c in out_cols:
+                    req |= _pin_param(pins[c])
+            return Push({n.left.id: F, n.right.id: F}, precise, required=req)
 
         if isinstance(n, (O.InnerJoin, O.LeftOuterJoin)):
             return self._push_join(n, F, relaxed)
@@ -401,9 +413,12 @@ class Pushdown:
         idx = n.order_by[0] if n.order_by else None
         pins = pins_of(F)
         if idx is None or idx not in pins or isinstance(pins[idx], IsIn):
-            kept = [a for a in conjuncts(F) if cols_of(a) <= set(self.schema_of(n.child))]
-            return Push({n.child.id: land(*kept)}, False,
-                        dropped=[a for a in conjuncts(F) if a not in kept])
+            # no usable order pin: an output row's lineage includes its
+            # trailing-window *contributor* rows, which satisfy none of F's
+            # atoms in general — keeping pass-through atoms here produced
+            # lineage undersets (fuzzer-found, corpus window_groupby).  The
+            # sound relaxation drops everything.
+            return Push({n.child.id: TRUE}, False, dropped=list(conjuncts(F)))
         v = pins[idx]
         # trailing `size` rows by the order column (dense integer index
         # contract — documented for pipeline builders)

@@ -181,9 +181,10 @@ class LRUCache:
         return len(self._d)
 
     def counters(self) -> Dict[str, int]:
-        return {"size": len(self._d), "maxsize": self.maxsize,
-                "hits": self.hits, "misses": self.misses,
-                "evictions": self.evictions}
+        with self._lock:
+            return {"size": len(self._d), "maxsize": self.maxsize,
+                    "hits": self.hits, "misses": self.misses,
+                    "evictions": self.evictions}
 
 
 # --------------------------------------------------------------------------- #
@@ -546,6 +547,10 @@ class PallasBackend(NumpyBackend):
         # per-(table, col) int32-representability verdict (columns are
         # immutable, so the O(N) range check runs once, not per scan)
         self._col_ok: LRUCache = LRUCache(self.COL_OK_CACHE)
+        # guards the check-then-install on both caches: a slab entry's inner
+        # {cols: slab} dict is shared state, and two unsynchronized builders
+        # for one table would overwrite (lose) each other's entries
+        self._lock = threading.Lock()
 
     def caches(self) -> Dict[str, LRUCache]:
         return {"slabs": self._slabs, "col_ok": self._col_ok}
@@ -579,10 +584,12 @@ class PallasBackend(NumpyBackend):
             and arr.dtype.kind in "iu"
             and np.abs(arr).max(initial=0) < 2**31
         )
-        self._col_ok[ck] = (
-            weakref.ref(table, lambda _, k=ck, d=self._col_ok: d.pop(k, None)),
-            ok,
-        )
+        with self._lock:
+            self._col_ok[ck] = (
+                weakref.ref(table,
+                            lambda _, k=ck, d=self._col_ok: d.pop(k, None)),
+                ok,
+            )
         return ok
 
     def _split_cmp(self, prog, table, binding):
@@ -611,13 +618,16 @@ class PallasBackend(NumpyBackend):
         if entry is not None and entry[0]() is table and cols in entry[1]:
             return entry[1][cols]
         slab = np.stack([table.cols[c].astype(np.int32) for c in cols])
-        if entry is None or entry[0]() is not table:
-            # the weakref callback evicts the entry when the table dies, so
-            # dead tables don't pin their slabs for the engine's lifetime
-            ref = weakref.ref(table, lambda _, k=tk, d=self._slabs: d.pop(k, None))
-            self._slabs[tk] = (ref, {cols: slab})
-        else:
-            entry[1][cols] = slab
+        with self._lock:
+            entry = self._slabs.get(tk)
+            if entry is None or entry[0]() is not table:
+                # the weakref callback evicts the entry when the table dies, so
+                # dead tables don't pin their slabs for the engine's lifetime
+                ref = weakref.ref(table,
+                                  lambda _, k=tk, d=self._slabs: d.pop(k, None))
+                self._slabs[tk] = (ref, {cols: slab})
+            else:
+                entry[1].setdefault(cols, slab)
         return slab
 
     def _kernel_scan(self, atoms: List[CmpAtom], table: Table, binding):
@@ -675,11 +685,24 @@ class ScanStats:
     partitions_pruned: int = 0
     # the engine's bounded caches, registered for the stats() snapshot
     caches: Dict[str, "LRUCache"] = field(default_factory=dict, repr=False)
+    # counter increments are read-modify-write; concurrent scans (the
+    # LineageService / PartitionExecutor paths) go through bump() so no
+    # update is lost.  Plain attribute reads/resets stay available for
+    # single-threaded callers (tests, benchmarks).
+    _lock: threading.Lock = field(default_factory=threading.Lock,
+                                  repr=False, compare=False)
+
+    def bump(self, **deltas: int) -> None:
+        """Atomically add ``deltas`` to the named counters."""
+        with self._lock:
+            for k, v in deltas.items():
+                setattr(self, k, getattr(self, k) + v)
 
     def snapshot(self) -> Dict[str, object]:
-        out: Dict[str, object] = {
-            k: v for k, v in self.__dict__.items() if isinstance(v, int)
-        }
+        with self._lock:
+            out: Dict[str, object] = {
+                k: v for k, v in self.__dict__.items() if isinstance(v, int)
+            }
         out["caches"] = {k: c.counters() for k, c in self.caches.items()}
         return out
 
@@ -729,6 +752,12 @@ class ScanEngine:
         # partition slice views per (table, lo, hi): keeps slice identity
         # stable across queries so identity-keyed backend caches stay warm
         self._slices: LRUCache = LRUCache(slice_cache)
+        # serializes cache *installs* (compile, jit trace, sort build, slice
+        # build): concurrent scans of one predicate/table then agree on a
+        # single cached object instead of racing duplicate builds, and
+        # stats.compiles stays exact (one per distinct structure).  Reads
+        # stay lock-free through the LRUCache's own lock.
+        self._build_lock = threading.RLock()
         self.stats = ScanStats()
         self.stats.caches = {
             "programs": self._programs,
@@ -746,11 +775,14 @@ class ScanEngine:
         sig = key(pred)
         prog = self._programs.get(sig)
         if prog is None:
-            prog = compile_pred(pred)
-            self._programs[sig] = prog
-            self.stats.compiles += 1
-        else:
-            self.stats.hits += 1
+            with self._build_lock:
+                prog = self._programs.get(sig)
+                if prog is None:
+                    prog = compile_pred(pred)
+                    self._programs[sig] = prog
+                    self.stats.bump(compiles=1)
+                    return prog
+        self.stats.bump(hits=1)
         return prog
 
     # ------------------------------------------------------------------ #
@@ -762,7 +794,7 @@ class ScanEngine:
         Partitioned tables first run the zone-map pruning pass: partitions
         whose statistics prove no row can match are skipped entirely, and the
         survivors are scanned as contiguous slices."""
-        self.stats.scans += 1
+        self.stats.bump(scans=1)
         prog = self.compile(pred)
         binding = binding or {}
         plan = self._partition_plan(prog, table, binding)
@@ -788,15 +820,14 @@ class ScanEngine:
             return None
         if not partition_safe(prog, binding):
             return None
-        self.stats.prune_calls += 1
+        self.stats.bump(prune_calls=1)
         return prog, prune_zone_maps(prog, table.zone_maps, binding)
 
     def record_prune(self, scanned: int, pruned: int) -> None:
         """Account partitions actually scanned vs actually skipped — recorded
         where the scan shape is decided, so a prune result that fell back to
         a full scan never inflates the skip counters."""
-        self.stats.partitions_scanned += scanned
-        self.stats.partitions_pruned += pruned
+        self.stats.bump(partitions_scanned=scanned, partitions_pruned=pruned)
 
     # pruning below this fraction of skipped rows isn't worth the slicing
     # overhead — the vectorized full scan wins
@@ -840,10 +871,15 @@ class ScanEngine:
         entry = self._slices.get(ck)
         if entry is not None and entry[0]() is table:
             return entry[1]
-        sub = Table({k: v[lo:hi] for k, v in table.cols.items()},
-                    table.dicts, table.name)
-        ref = weakref.ref(table, lambda _, k=ck, d=self._slices: d.pop(k, None))
-        self._slices[ck] = (ref, sub)
+        with self._build_lock:
+            entry = self._slices.get(ck)
+            if entry is not None and entry[0]() is table:
+                return entry[1]
+            sub = Table({k: v[lo:hi] for k, v in table.cols.items()},
+                        table.dicts, table.name)
+            ref = weakref.ref(table,
+                              lambda _, k=ck, d=self._slices: d.pop(k, None))
+            self._slices[ck] = (ref, sub)
         return sub
 
     # ------------------------------------------------------------------ #
@@ -877,8 +913,7 @@ class ScanEngine:
         B = len(bindings)
         if B == 0:
             return []
-        self.stats.batch_scans += 1
-        self.stats.batch_rows += B
+        self.stats.bump(batch_scans=1, batch_rows=B)
         prog = self.compile(pred)
         n = table.nrows
         cols = table.cols
@@ -1039,13 +1074,18 @@ class ScanEngine:
         entry = self._sorts.get(ck)
         if entry is not None and entry[0]() is table:
             return entry[1], entry[2]
-        arr = np.asarray(table.cols[col])
-        order = np.argsort(arr, kind="stable")
-        sorted_vals = arr[order]
-        # weakref callback evicts on table death (dict would otherwise pin
-        # two full-length arrays per dead table for the engine's lifetime)
-        ref = weakref.ref(table, lambda _, k=ck, d=self._sorts: d.pop(k, None))
-        self._sorts[ck] = (ref, order, sorted_vals)
+        with self._build_lock:
+            entry = self._sorts.get(ck)
+            if entry is not None and entry[0]() is table:
+                return entry[1], entry[2]
+            arr = np.asarray(table.cols[col])
+            order = np.argsort(arr, kind="stable")
+            sorted_vals = arr[order]
+            # weakref callback evicts on table death (dict would otherwise pin
+            # two full-length arrays per dead table for the engine's lifetime)
+            ref = weakref.ref(table,
+                              lambda _, k=ck, d=self._sorts: d.pop(k, None))
+            self._sorts[ck] = (ref, order, sorted_vals)
         return order, sorted_vals
 
     # ------------------------------------------------------------------ #
@@ -1057,18 +1097,21 @@ class ScanEngine:
         sig = ("jit", key(pred))
         fn = self._jit_cache.get(sig)
         if fn is None:
-            import jax
+            with self._build_lock:
+                fn = self._jit_cache.get(sig)
+                if fn is None:
+                    import jax
 
-            from .expr import eval_jnp
+                    from .expr import eval_jnp
 
-            def run(env, binding):
-                return eval_jnp(pred, env, binding)
+                    def run(env, binding):
+                        return eval_jnp(pred, env, binding)
 
-            fn = jax.jit(run)
-            self._jit_cache[sig] = fn
-            self.stats.compiles += 1
-        else:
-            self.stats.hits += 1
+                    fn = jax.jit(run)
+                    self._jit_cache[sig] = fn
+                    self.stats.bump(compiles=1)
+                    return fn
+        self.stats.bump(hits=1)
         return fn
 
 

@@ -50,6 +50,8 @@ decoded table.
 
 from __future__ import annotations
 
+import itertools
+import threading
 from dataclasses import dataclass
 from typing import Dict, Iterator, List, Mapping, Optional, Tuple
 
@@ -683,8 +685,14 @@ class _LazyCols(Mapping):
     def __getitem__(self, k: str) -> np.ndarray:
         v = self._cache.get(k)
         if v is None:
-            v = self._st.enc[k].decode()
-            self._cache[k] = v
+            # decode under the table lock: concurrent readers then share one
+            # decoded array, keeping identity-keyed engine caches (sorted
+            # indexes, slabs) warm instead of churning per racing decode
+            with self._st._lock:
+                v = self._cache.get(k)
+                if v is None:
+                    v = self._st.enc[k].decode()
+                    self._cache[k] = v
         return v
 
     def __contains__(self, k) -> bool:
@@ -717,6 +725,8 @@ class StoredTable:
         # per-partition min/max/null stats built on the raw columns before
         # encoding; in-situ scans prune whole partitions against them
         self.zone_maps = zone_maps
+        # reentrant: to_table() reads self.cols[k], which re-takes the lock
+        self._lock = threading.RLock()
         self.cols = _LazyCols(self)
         self._table: Optional[Table] = None
         # per-program atom evaluation order (InSituBackend), keyed by the
@@ -785,10 +795,11 @@ class StoredTable:
         if not cache:
             return Table({k: e.decode() for k, e in self.enc.items()},
                          dict(self.dicts), self.name)
-        if self._table is None:
-            self._table = Table({k: self.cols[k] for k in self.enc},
-                                dict(self.dicts), self.name)
-        return self._table
+        with self._lock:
+            if self._table is None:
+                self._table = Table({k: self.cols[k] for k in self.enc},
+                                    dict(self.dicts), self.name)
+            return self._table
 
     def take(self, idx: np.ndarray) -> Table:
         """Rows at ``idx`` as a (small) decoded Table via per-encoding gather."""
@@ -1047,6 +1058,13 @@ class InSituBackend(NumpyBackend):
 # --------------------------------------------------------------------------- #
 
 
+# store generations come from one process-wide monotone counter, so two
+# distinct store objects (e.g. a spill/reload swap via attach_store) can
+# never present the same (generation) token.  itertools.count is C-level
+# atomic under the GIL.
+_STORE_GENERATIONS = itertools.count(1)
+
+
 class IntermediateStore:
     """Encoded materialized stages, keyed by plan-node id.
 
@@ -1054,7 +1072,12 @@ class IntermediateStore:
     produces it; the budget planner (``plan.plan_materialization``) then
     ``evict()``s stages that don't fit ``budget_bytes``, and the lineage
     query phase reads through ``scan()`` (in situ) / ``table()`` (decoded,
-    cached) / ``StoredTable.take`` (gather at selected rows)."""
+    cached) / ``StoredTable.take`` (gather at selected rows).
+
+    ``generation`` is a monotone token that changes whenever the stored
+    stages change (``put``/``evict`` — i.e. any re-run or budget pass); the
+    LineageService's answer cache stamps entries with it so answers computed
+    against an older store version are never served again."""
 
     def __init__(self, budget_bytes: Optional[int] = None,
                  num_partitions: Optional[int] = None,
@@ -1066,12 +1089,14 @@ class IntermediateStore:
         self.part_rows = part_rows
         self.stages: Dict[int, StoredTable] = {}
         self.backend = InSituBackend()
+        self.generation: int = next(_STORE_GENERATIONS)
 
     # ------------------------------------------------------------------ #
     def put(self, node_id: int, table: Table) -> StoredTable:
         pr = resolve_part_rows(table.nrows, self.num_partitions, self.part_rows)
         st = encode_table(table, part_rows=pr)
         self.stages[node_id] = st
+        self.generation = next(_STORE_GENERATIONS)
         return st
 
     def __contains__(self, node_id: int) -> bool:
@@ -1085,8 +1110,11 @@ class IntermediateStore:
         return self.stages[node_id].to_table()
 
     def evict(self, node_ids) -> None:
+        evicted = False
         for nid in list(node_ids):
-            self.stages.pop(nid, None)
+            evicted = self.stages.pop(nid, None) is not None or evicted
+        if evicted:
+            self.generation = next(_STORE_GENERATIONS)
 
     # ------------------------------------------------------------------ #
     def scan(self, node_id: int, pred, binding: Optional[Dict[str, object]],
@@ -1098,8 +1126,7 @@ class IntermediateStore:
         proved empty are skipped, and the survivors are evaluated in
         candidate mode (per-encoding ``gather``) without decoding."""
         prog = engine.compile(pred)
-        engine.stats.scans += 1
-        engine.stats.insitu_scans += 1
+        engine.stats.bump(scans=1, insitu_scans=1)
         st = self.stages[node_id]
         binding = binding or {}
         zm = st.zone_maps
@@ -1107,7 +1134,7 @@ class IntermediateStore:
             alive = prune_zone_maps(prog, zm, binding)
             ns = int(np.count_nonzero(alive))
             P = len(alive)
-            engine.stats.prune_calls += 1
+            engine.stats.bump(prune_calls=1)
             if ns == 0:
                 engine.record_prune(0, P)
                 return np.zeros(st.nrows, dtype=bool)

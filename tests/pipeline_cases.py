@@ -1,0 +1,159 @@
+"""Descriptor-driven pipeline cases over the FULL operator algebra.
+
+One descriptor = a JSON-serializable dict:
+
+    {"catalog": {"r": {"a": [...], "b": [...], "v": [...]},
+                 "s": {"c": [...], "w": [...]}},
+     "ops": [["filter", ">", 10], ["join", "inner"], ["window", 2], ...],
+     "row": 0}
+
+``build_plan`` turns the op list into an operator tree; ``check_differential``
+runs the three-way differential the property suite asserts everywhere:
+
+  1. precise ``PredTrace.query()`` == eager-oracle lineage (Lemma 3.1);
+  2. ``query_naive()`` (phase-1 predicates only) covers the oracle per table
+     (it is the paper's superset baseline);
+  3. ``query_iterative()`` (Algorithm 3) covers the oracle per table.
+
+The same builder feeds the hypothesis fuzzer (``test_property.py``) and the
+committed regression corpus (``tests/corpus/*.json``, replayed by
+``test_corpus.py`` without hypothesis installed) — a shrunk fuzzer failure is
+committed by dumping its descriptor to JSON.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import Executor, PredTrace
+from repro.core import ops as O
+from repro.core.eager import oracle_lineage_for_values
+from repro.core.expr import Col
+from repro.core.table import Table
+
+
+def lineage_sets(ans) -> Dict[str, set]:
+    return {k: set(np.asarray(v).tolist()) for k, v in ans.items() if len(v)}
+
+
+def build_catalog(desc: Dict[str, Dict[str, List[int]]]) -> Dict[str, Table]:
+    return {name: Table.from_dict(cols, name=name)
+            for name, cols in desc.items()}
+
+
+# --------------------------------------------------------------------------- #
+# op descriptors -> operator tree
+# --------------------------------------------------------------------------- #
+# Body ops keep the working columns (a, b, v) available so any prefix is
+# composable; Pivot/Unpivot reshape the schema and therefore terminate the
+# body (optionally followed by a group-by over their output shape).
+
+
+def _apply(node: O.Node, op: List) -> O.Node:
+    kind, args = op[0], op[1:]
+    if kind == "filter":
+        cmp, thr = args
+        pred = (Col("v") > thr) if cmp == ">" else (Col("v") <= thr)
+        return O.Filter(node, pred)
+    if kind == "rowtransform":
+        (k,) = args
+        return O.RowTransform(node, {"v2": Col("v") * 2 + k})
+    if kind == "join":
+        (jk,) = args
+        s = O.Source("s")
+        if jk == "inner":
+            return O.InnerJoin(node, s, [("a", "c")])
+        if jk == "semi":
+            return O.SemiJoin(node, s, [("a", "c")])
+        return O.AntiJoin(node, s, [("a", "c")])
+    if kind == "window":
+        # the precise Window pushdown's trailing-range rewrite contracts on a
+        # DENSE integer order column, so the fuzzer only emits "window" as
+        # the first op, ordered by the source's dense "idx" column
+        (size,) = args
+        return O.Window(node, ["idx"], size, {"rsum": O.Agg("sum", Col("v"))})
+    if kind == "rowexpand":
+        return O.RowExpand(node, [{"e": Col("v")}, {"e": Col("v") * -1}])
+    if kind == "groupedmap":
+        return O.GroupedMap(node, ["b"], {"gsum": O.Agg("sum", Col("v"))},
+                            {"vn": Col("v") - Col("gsum")})
+    if kind == "union":
+        t1, t2 = args
+        return O.Union([O.Filter(node, Col("v") > t1),
+                        O.Filter(node, Col("v") <= t2)])
+    if kind == "intersect":
+        (t1,) = args
+        return O.Intersect(O.Filter(node, Col("v") > t1), node)
+    if kind == "pivot":
+        return O.Pivot(node, index="b", column="a", value="v", agg="sum",
+                       values=list(range(6)))
+    if kind == "unpivot":
+        return O.Unpivot(node, ["b"], ["a", "v"], "var", "val")
+    if kind == "groupby":
+        (agg,) = args
+        e = None if agg == "count" else Col("v")
+        return O.GroupBy(node, ["b"], {"out": O.Agg(agg, e)})
+    if kind == "groupby_val":
+        # group-by over Unpivot's reshaped schema
+        (agg,) = args
+        e = None if agg == "count" else Col("val")
+        return O.GroupBy(node, ["b"], {"out": O.Agg(agg, e)})
+    if kind == "sort":
+        by = [(c, False) for c in args] or [("out", False)]
+        return O.Sort(node, by)
+    raise ValueError(f"unknown op descriptor {op!r}")
+
+
+def build_plan(ops: List[List]) -> O.Node:
+    node: O.Node = O.Source("r")
+    for op in ops:
+        node = _apply(node, op)
+    return node
+
+
+# --------------------------------------------------------------------------- #
+# the differential check
+# --------------------------------------------------------------------------- #
+
+
+def check_differential(cat: Dict[str, Table], plan: O.Node, row_seed: int,
+                       out_nonempty_only: bool = True) -> bool:
+    """Run the precise/naive/iterative vs oracle differential for one output
+    row (``row_seed`` modulo the output size).  Returns False when the plan
+    has no output rows (nothing to check)."""
+    res = Executor(cat).run(plan)
+    if res.output.nrows == 0:
+        assert not out_nonempty_only, "corpus case produced no output rows"
+        return False
+    row = row_seed % res.output.nrows
+    values = {c: res.output.cols[c][row] for c in res.output.columns}
+    oracle = oracle_lineage_for_values(cat, plan, values)
+    want = lineage_sets(oracle)
+
+    # 1. precise (Algorithm 1, materialized intermediates) == oracle
+    pt = PredTrace(cat, plan)
+    pt.infer(stats=res.stats)
+    pt.run()
+    got = lineage_sets(pt.query(row).lineage)
+    assert got == want, f"precise != oracle: {got} vs {want}"
+
+    # batched must agree with single-row (the PR-1 contract, on this algebra)
+    (batched,) = pt.query_batch([row])
+    assert lineage_sets(batched.lineage) == want, "query_batch != query"
+
+    # 2. naive pushdown baseline covers the oracle per table
+    naive = lineage_sets(pt.query_naive(row).lineage)
+    for tab in want:
+        assert want[tab] <= naive.get(tab, set()), (
+            f"naive baseline missed oracle rows for {tab}"
+        )
+
+    # 3. iterative (Algorithm 3) covers the oracle per table
+    it = lineage_sets(pt.query_iterative(row).lineage)
+    for tab in want:
+        assert want[tab] <= it.get(tab, set()), (
+            f"iterative superset missed oracle rows for {tab}"
+        )
+    return True

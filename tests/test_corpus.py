@@ -1,0 +1,29 @@
+"""Regression corpus replay: shrunk full-algebra fuzzer cases as plain JSON.
+
+Each file under ``tests/corpus/`` is one descriptor produced by the
+hypothesis fuzzer in ``test_property.py`` (or handwritten to pin an operator
+family).  Replaying needs only the shared builder in ``pipeline_cases.py`` —
+no hypothesis — so the corpus guards the full operator algebra on every
+tier-1 run.
+"""
+
+import json
+from pathlib import Path
+
+import pytest
+
+from pipeline_cases import build_catalog, build_plan, check_differential
+
+CORPUS = sorted((Path(__file__).parent / "corpus").glob("*.json"))
+
+
+def test_corpus_exists():
+    assert CORPUS, "tests/corpus/ must hold at least one regression case"
+
+
+@pytest.mark.parametrize("path", CORPUS, ids=lambda p: p.stem)
+def test_corpus_case(path):
+    case = json.loads(path.read_text())
+    cat = build_catalog(case["catalog"])
+    plan = build_plan(case["ops"])
+    assert check_differential(cat, plan, case["row"], out_nonempty_only=True)

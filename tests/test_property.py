@@ -4,13 +4,16 @@ Invariants (paper Lemmas 3.1 / 3.2):
   1. Algorithm-1 lineage (with materialization) == eager-oracle lineage.
   2. Algorithm-3 lineage is a superset of the oracle.
   3. Re-executing the pipeline on the Algorithm-3 subset still produces t_o.
+
+The full-algebra fuzzer (``test_full_algebra_differential``) extends this to
+the whole operator set — Window, Pivot, Unpivot, RowExpand, GroupedMap,
+Union, Intersect — via a descriptor-driven pipeline builder shared with the
+committed regression corpus under ``tests/corpus/`` (shrunk hypothesis
+failures land there as plain JSON, replayable without hypothesis installed).
 """
 
 import numpy as np
 import pytest
-
-pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
 
 from repro.core import Executor, PredTrace
 from repro.core import ops as O
@@ -19,6 +22,10 @@ from repro.core.expr import Col, IsIn, Lit, land
 from repro.core.table import Table
 
 from conftest import lineage_sets
+from pipeline_cases import build_catalog, build_plan, check_differential
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 
 @st.composite
@@ -85,6 +92,85 @@ def test_precise_matches_oracle_random(cat, plan, row_seed):
     values = {c: res.output.cols[c][row] for c in res.output.columns}
     oracle = oracle_lineage_for_values(cat, plan, values)
     assert lineage_sets(ans.lineage) == lineage_sets(oracle)
+
+
+# --------------------------------------------------------------------------- #
+# full-algebra fuzzer: Window / Pivot / Unpivot / RowExpand / GroupedMap /
+# Union / Intersect via the descriptor builder shared with tests/corpus/
+# --------------------------------------------------------------------------- #
+
+
+@st.composite
+def full_catalog_desc(draw):
+    n_r = draw(st.integers(4, 12))
+    n_s = draw(st.integers(3, 10))
+    ints = st.integers(0, 5)
+    vals = st.integers(0, 50)
+    return {
+        "r": {
+            # dense integer index: the Window pushdown's order-column contract
+            "idx": list(range(n_r)),
+            "a": draw(st.lists(ints, min_size=n_r, max_size=n_r)),
+            "b": draw(st.lists(ints, min_size=n_r, max_size=n_r)),
+            "v": draw(st.lists(vals, min_size=n_r, max_size=n_r)),
+        },
+        "s": {
+            "c": draw(st.lists(ints, min_size=n_s, max_size=n_s)),
+            "w": draw(st.lists(vals, min_size=n_s, max_size=n_s)),
+        },
+    }
+
+
+@st.composite
+def full_ops_strategy(draw):
+    """Random op descriptor list: optional leading window (dense-index
+    contract), 0-3 body ops, then a reshaping/aggregating terminal."""
+    ops = []
+    if draw(st.booleans()):
+        ops.append(["window", draw(st.integers(2, 4))])
+    body = st.sampled_from(["filter", "rowtransform", "join", "rowexpand",
+                            "groupedmap", "union", "intersect"])
+    for _ in range(draw(st.integers(0, 3))):
+        kind = draw(body)
+        if kind == "filter":
+            ops.append(["filter", draw(st.sampled_from([">", "<="])),
+                        draw(st.integers(0, 45))])
+        elif kind == "rowtransform":
+            ops.append(["rowtransform", draw(st.integers(0, 3))])
+        elif kind == "join":
+            ops.append(["join", draw(st.sampled_from(["inner", "semi", "anti"]))])
+        elif kind == "union":
+            ops.append(["union", draw(st.integers(5, 40)),
+                        draw(st.integers(5, 40))])
+        elif kind == "intersect":
+            ops.append(["intersect", draw(st.integers(0, 40))])
+        else:
+            ops.append([kind])
+    terminal = draw(st.sampled_from(["groupby", "pivot", "unpivot", "none"]))
+    if terminal == "groupby":
+        ops.append(["groupby", draw(st.sampled_from(["sum", "count", "min", "max"]))])
+        if draw(st.booleans()):
+            ops.append(["sort", "out"])
+    elif terminal == "pivot":
+        ops.append(["pivot"])
+    elif terminal == "unpivot":
+        ops.append(["unpivot"])
+        if draw(st.booleans()):
+            ops.append(["groupby_val", draw(st.sampled_from(["sum", "count"]))])
+    return ops
+
+
+@settings(max_examples=60, deadline=None)
+@given(cat_desc=full_catalog_desc(), ops=full_ops_strategy(),
+       row_seed=st.integers(0, 10**6))
+def test_full_algebra_differential(cat_desc, ops, row_seed):
+    """precise == oracle, naive/iterative cover the oracle, batch == single,
+    over the full operator algebra.  Shrunk failures: dump
+    ``{"catalog": cat_desc, "ops": ops, "row": row_seed}`` to a JSON file
+    under tests/corpus/ and commit it (replayed by test_corpus.py)."""
+    cat = build_catalog(cat_desc)
+    plan = build_plan(ops)
+    check_differential(cat, plan, row_seed, out_nonempty_only=False)
 
 
 @settings(max_examples=60, deadline=None)

@@ -36,6 +36,7 @@ def main() -> None:
     from .scan_bench import bench_scan_engine
     from .serve_bench import bench_serve
     from .store_bench import bench_store
+    from .udf_bench import bench_udf
 
     benches = {
         "coverage": bench_coverage,       # paper Table 4
@@ -51,6 +52,7 @@ def main() -> None:
         "store": bench_store,             # compressed store + budget planner
         "partition": bench_partition,     # zone-map pruning + parallel scans
         "serve": bench_serve,             # concurrent service vs serial query()
+        "udf": bench_udf,                 # annotation-driven UDF pushdown
         "roofline": bench_roofline,       # §Roofline (reads dry-run artifacts)
     }
     selected = args.only.split(",") if args.only else list(benches)

@@ -1,0 +1,189 @@
+"""UDF pipeline benchmarks: annotation-driven pushdown at scale.
+
+Exercises the UDF operator family (MapUDF / FilterUDF / ExpandUDF /
+OpaqueUDF) on synthetic real-world-shaped pipelines scaled by ``--sf``, and
+writes ``BENCH_udf.json`` with the acceptance metrics the CI bench-smoke job
+gates on:
+
+* ``superset_rate_budget_none`` — fraction of served answers flagged
+  superset with everything materialized.  MUST be 0: a fully-budgeted run is
+  the paper's precise mode.
+* ``superset_rate_budget0``     — the same workload with nothing
+  materialized; expected > 0 (every UDF pipeline degrades to the
+  well-defined superset path).
+* ``identical_answers``         — service answers bit-identical to serial
+  ``PredTrace.query()`` in both modes.
+* per-pipeline precise/superset query latencies (CSV rows like every suite).
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.core import Executor, LineageService, PredTrace
+from repro.core import ops as O
+from repro.core.expr import Col
+
+from . import common
+from .common import time_ms
+
+OUT_JSON = Path("BENCH_udf.json")
+N_QUERY_ROWS = 12
+
+
+def _rows() -> int:
+    # row scale tracks --sf like the TPC-H suites (sf 0.02 -> ~4k rows)
+    return max(int(common.SF_MAIN * 200_000), 500)
+
+
+def _sessionize_pipeline() -> Tuple[Dict, O.Node]:
+    r = np.random.default_rng(common.SEED)
+    n = _rows()
+    from repro.core.table import Table
+
+    cat = {"events": Table.from_dict({
+        "user": r.integers(0, n // 20 + 2, n).tolist(),
+        "ts": np.sort(r.integers(0, n * 4, n)).tolist(),
+        "dur": r.integers(1, 60, n).tolist(),
+    }, name="events")}
+    plan = O.GroupBy(
+        O.MapUDF(O.Source("events"), cols=["user", "ts"], out_cols=["session"],
+                 fn=lambda user, ts: user * 100_000 + ts // 120,
+                 name="sessionize"),
+        ["session"], {"total": O.Agg("sum", Col("dur"))},
+    )
+    return cat, plan
+
+
+def _expand_pipeline() -> Tuple[Dict, O.Node]:
+    r = np.random.default_rng(common.SEED + 1)
+    n = _rows()
+    from repro.core.table import Table
+
+    cat = {"orders": Table.from_dict({
+        "oid": list(range(n)),
+        "n_items": r.integers(0, 4, n).tolist(),
+        "base": r.integers(10, 50, n).tolist(),
+    }, name="orders")}
+
+    def parse_items(oid, n_items, base):
+        counts = n_items.astype(np.int64)
+        parent = np.repeat(np.arange(len(oid)), counts)
+        offs = np.concatenate([[0], np.cumsum(counts)])[:-1]
+        within = np.arange(counts.sum()) - np.repeat(offs, counts)
+        return parent, {"price": base[parent] + within * 3}
+
+    plan = O.GroupBy(
+        O.ExpandUDF(O.Source("orders"), cols=["oid", "n_items", "base"],
+                    out_cols=["price"], fn=parse_items, name="parse_items"),
+        ["oid"], {"revenue": O.Agg("sum", Col("price"))},
+    )
+    return cat, plan
+
+
+def _opaque_pipeline() -> Tuple[Dict, O.Node]:
+    r = np.random.default_rng(common.SEED + 2)
+    n = _rows()
+    from repro.core.table import Table
+
+    cat = {"txns": Table.from_dict({
+        "user": r.integers(0, n // 10 + 2, n).tolist(),
+        "day": r.integers(0, 30, n).tolist(),
+        "amount": r.integers(1, 90, n).tolist(),
+    }, name="txns")}
+
+    def dedup(t):
+        user = np.asarray(t.cols["user"])
+        day = np.asarray(t.cols["day"])
+        key = user * 64 + day
+        _, first = np.unique(key, return_index=True)
+        first.sort()
+        return {"user": user[first], "day": day[first],
+                "amount": np.asarray(t.cols["amount"])[first]}
+
+    plan = O.GroupBy(
+        O.OpaqueUDF(O.Filter(O.Source("txns"), Col("amount") > 5), dedup,
+                    out_schema=["user", "day", "amount"], name="daily_dedup"),
+        ["day"], {"vol": O.Agg("sum", Col("amount"))},
+    )
+    return cat, plan
+
+
+PIPELINES = {
+    "sessionize": _sessionize_pipeline,
+    "json_expand": _expand_pipeline,
+    "opaque_dedup": _opaque_pipeline,
+}
+
+
+def _prepare(cat, plan, budget) -> PredTrace:
+    res = Executor(cat).run(plan)
+    kw = {} if budget is None else {"budget_bytes": budget}
+    pt = PredTrace(cat, plan, **kw)
+    pt.infer(stats=res.stats)
+    pt.run()
+    return pt
+
+
+def _identical(a: Dict, b: Dict) -> bool:
+    if set(a) != set(b):
+        return False
+    return all(np.array_equal(np.sort(a[t]), np.sort(b[t])) for t in a)
+
+
+def bench_udf() -> List[tuple]:
+    rows_out: List[tuple] = []
+    summary: Dict[str, object] = {"pipelines": {}}
+    identical = True
+    rates = {None: [], 0: []}
+
+    for name, build in PIPELINES.items():
+        pipe_stats: Dict[str, object] = {}
+        for budget in (None, 0):
+            cat, plan = build()
+            pt = _prepare(cat, plan, budget)
+            n_out = pt.exec_result.output.nrows
+            q_rows = list(range(min(n_out, N_QUERY_ROWS)))
+            serial = [pt.query(r) for r in q_rows]
+
+            svc = LineageService(pt, window_s=0.002)
+            reqs = svc.submit_many(q_rows)
+            answers = [r.result(120.0) for r in reqs]
+            for s, a in zip(serial, answers):
+                if not _identical(s.lineage, a.lineage):
+                    identical = False
+                if s.precise != a.precise:
+                    identical = False
+            st = svc.stats()
+            svc.close()
+            rates[budget].append(st["superset_rate"])
+
+            label = "precise" if budget is None else "budget0"
+            lat = time_ms(lambda: pt.query(q_rows[0])) if q_rows else 0.0
+            rows_out.append((f"udf.{name}.{label}.query_ms", lat * 1e3,
+                             f"rows={_rows()}"))
+            pipe_stats[label] = {
+                "query_ms": lat,
+                "superset_rate": st["superset_rate"],
+                "answered": st["answered"],
+            }
+            pt.close()
+        summary["pipelines"][name] = pipe_stats
+
+    summary["superset_rate_budget_none"] = float(np.mean(rates[None]))
+    summary["superset_rate_budget0"] = float(np.mean(rates[0]))
+    summary["identical_answers"] = identical
+    # the acceptance gate: fully-budgeted answers are NEVER flagged superset,
+    # and the zero-budget workload actually exercises the superset path
+    summary["precise_mode_clean"] = summary["superset_rate_budget_none"] == 0.0
+    summary["superset_mode_exercised"] = summary["superset_rate_budget0"] > 0.0
+    OUT_JSON.write_text(json.dumps({"summary": summary}, indent=1))
+    rows_out.append(("udf.superset_rate_budget_none",
+                     summary["superset_rate_budget_none"] * 1e6, "gate==0"))
+    rows_out.append(("udf.superset_rate_budget0",
+                     summary["superset_rate_budget0"] * 1e6, "expected>0"))
+    return rows_out

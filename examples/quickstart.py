@@ -146,6 +146,68 @@ def main():
           f"batches; cache hit rate {st_svc['cache_hit_rate']:.0%}; "
           f"p50={st_svc['latency_ms_p50']:.2f} ms")
 
+    print("\n== annotated UDFs + the pushdown-rule registry ==")
+    # UDF operators carry a LineageAnnotation naming their pushdown-rule
+    # class (row_preserving / filter_like / one_to_one / one_to_many /
+    # opaque); the PushdownRuleRegistry dispatches on (operator type,
+    # annotation), so a custom operator plugs in a *tighter* rule without
+    # editing core.  Here: Bucketize knows its own inverse (a bucket pin
+    # rewrites to the exact value range), so lineage stays precise even with
+    # NOTHING materialized, where the generic row_preserving rule must fall
+    # back to a flagged superset.
+    from dataclasses import dataclass
+
+    from repro.core import DEFAULT_REGISTRY, Col, Push
+    from repro.core import ops as O
+    from repro.core.expr import BinOp, Lit, cols_of, conjuncts, land, pinned_cols
+    from repro.core.table import Table
+
+    BUCKET = 50
+
+    @dataclass(eq=False)
+    class Bucketize(O.MapUDF):
+        """Third-party operator: bucket = amount // BUCKET.  Inherits
+        MapUDF's executor + annotation; only the pushdown rule is new."""
+
+    def bucketize_rule(pd, n, F, relaxed):
+        (bucket_col,), (val_col,) = n.out_cols, n.cols
+        atoms, ok = [], True
+        for a in conjuncts(F):
+            if bucket_col not in cols_of(a):
+                atoms.append(a)
+                continue
+            pin = pinned_cols(a).get(bucket_col)
+            if pin is None:
+                ok = False  # not an equality pin: fall back to superset
+                continue
+            lo = BinOp("*", pin, Lit(BUCKET))
+            atoms.append(land(Col(val_col) >= lo,
+                              Col(val_col) < BinOp("+", lo, Lit(BUCKET))))
+        return Push({n.child.id: land(*atoms)}, ok)
+
+    DEFAULT_REGISTRY.register(Bucketize, bucketize_rule)
+
+    events = {"spend": Table.from_dict(
+        {"user": list(range(40)), "amount": [(i * 37) % 200 for i in range(40)]},
+        name="spend")}
+
+    for label, udf_cls in (("generic MapUDF(row_preserving)", O.MapUDF),
+                           ("registered Bucketize rule   ", Bucketize)):
+        plan_b = O.GroupBy(
+            udf_cls(O.Source("spend"), cols=["amount"], out_cols=["bucket"],
+                    fn=lambda amount: amount // BUCKET, name="bucket"),
+            ["bucket"], {"n": O.Agg("count", None)})
+        # budget 0: nothing materialized — precision now depends entirely on
+        # how far the operator's pushdown rule can carry the bucket pin
+        ptb = PredTrace(events, plan_b, budget_bytes=0)
+        ptb.infer()
+        ptb.run()
+        a_u = ptb.query(0)
+        kinds = {t: ("precise" if a_u.precise.get(t, True) else "superset")
+                 for t in a_u.lineage}
+        sizes = {t: len(v) for t, v in a_u.lineage.items()}
+        print(f"{label}: budget=0 lineage sizes {sizes} -> {kinds}")
+
     print("\n== without intermediate results (Algorithm 3) ==")
     pt2 = PredTrace(db, plan)
     pt2.infer_iterative()

@@ -3,14 +3,17 @@
 from . import ops
 from .eager import EagerExecutor, oracle_lineage_for_values
 from .executor import ExecResult, Executor
-from .expr import Col, Expr, IsIn, Lit, Param, ParamSet, land, lnot, lor
+from .expr import (
+    Col, Expr, IsIn, LineageAnnotation, Lit, Param, ParamSet, UDFExpr, land,
+    lnot, lor,
+)
 from .iterative import IterativeInference, refine
 from .lineage import LineageAnswer, PredTrace
 from .plan import (
     LineageInference, LineagePlan, MaterializationPlan, plan_materialization,
 )
 from .distributed import PartitionExecutor, distributed_refine
-from .pushdown import Pushdown
+from .pushdown import DEFAULT_REGISTRY, Push, Pushdown, PushdownRuleRegistry
 from .scan import (
     AtomProgram, LRUCache, NumpyBackend, PallasBackend, ScanEngine,
     prune_zone_maps,
@@ -23,9 +26,11 @@ from .table import PartitionedTable, Table, ZoneMaps, build_zone_maps, partition
 
 __all__ = [
     "ops", "Col", "Expr", "IsIn", "Lit", "Param", "ParamSet", "land", "lnot",
-    "lor", "Table", "Executor", "ExecResult", "EagerExecutor",
+    "lor", "LineageAnnotation", "UDFExpr", "Table", "Executor", "ExecResult",
+    "EagerExecutor",
     "oracle_lineage_for_values", "PredTrace", "LineageAnswer",
-    "LineageInference", "LineagePlan", "Pushdown", "IterativeInference",
+    "LineageInference", "LineagePlan", "Pushdown", "Push",
+    "PushdownRuleRegistry", "DEFAULT_REGISTRY", "IterativeInference",
     "refine", "ScanEngine", "AtomProgram", "NumpyBackend", "PallasBackend",
     "IntermediateStore", "StoredTable", "InSituBackend", "encode_column",
     "MaterializationPlan", "plan_materialization",

@@ -194,6 +194,37 @@ class EagerExecutor:
         if isinstance(n, O.FilterScalarSub):
             return self._scalar_sub(n)
 
+        if isinstance(n, O.MapUDF):
+            # row-preserving: lineage passes through unchanged
+            t, lin = self._exec(n.child)
+            from .executor import map_udf_cols
+
+            return t.with_cols(map_udf_cols(n, t)), lin
+
+        if isinstance(n, O.FilterUDF):
+            t, lin = self._exec(n.child)
+            m = np.asarray(eval_np(n.pred_expr(), t.cols, n=t.nrows), bool)
+            idx = np.nonzero(m)[0]
+            return t.mask(m), [lin[i] for i in idx]
+
+        if isinstance(n, O.ExpandUDF):
+            t, lin = self._exec(n.child)
+            from .executor import expand_udf_rows
+
+            parent_idx, outs = expand_udf_rows(n, t)
+            tmp = t.take(parent_idx).with_cols(outs)
+            return tmp, [lin[i] for i in parent_idx]
+
+        if isinstance(n, O.OpaqueUDF):
+            # no row correspondence: every output row depends on the whole
+            # input (the paper's well-defined lineage for opaque operators)
+            t, lin = self._exec(n.child)
+            from .executor import opaque_udf_table
+
+            tmp = opaque_udf_table(n, t)
+            all_in = _union_all(lin)
+            return tmp, [dict(all_in) for _ in range(tmp.nrows)]
+
         raise TypeError(f"eager: unknown node {type(n)}")
 
     # ------------------------------------------------------------------ #

@@ -111,6 +111,107 @@ def _rank(values: np.ndarray) -> np.ndarray:
 
 
 # --------------------------------------------------------------------------- #
+# UDF node execution (shared with the eager oracle in core/eager.py)
+# --------------------------------------------------------------------------- #
+
+
+def _norm_outputs(result, out_cols: Sequence[str]) -> Dict[str, np.ndarray]:
+    """Normalize a vectorized UDF body's return value — a dict, a tuple of
+    arrays aligned with ``out_cols``, or a single array — into columns."""
+    if isinstance(result, dict):
+        missing = set(out_cols) - set(result)
+        if missing:
+            raise ValueError(f"UDF result missing columns {missing}")
+        return {c: np.asarray(result[c]) for c in out_cols}
+    if isinstance(result, (tuple, list)):
+        if len(result) != len(out_cols):
+            raise ValueError(
+                f"UDF returned {len(result)} columns, expected {len(out_cols)}"
+            )
+        return {c: np.asarray(v) for c, v in zip(out_cols, result)}
+    if len(out_cols) != 1:
+        raise ValueError(f"UDF returned one column, expected {out_cols}")
+    return {out_cols[0]: np.asarray(result)}
+
+
+def map_udf_cols(n, t: Table) -> Dict[str, np.ndarray]:
+    """Output columns of a MapUDF over ``t``: the vectorized body, or the
+    per-row fallback stacked into columns."""
+    arrays = [np.asarray(t.cols[c]) for c in n.cols]
+    if n.fn is not None:
+        out = _norm_outputs(n.fn(*arrays), n.out_cols)
+    else:
+        rows = [n.row_fn(*(a[i] for a in arrays)) for i in range(t.nrows)]
+        out = _rows_to_cols(rows, n.out_cols)
+    for c, v in out.items():
+        if len(v) != t.nrows:
+            raise ValueError(
+                f"MapUDF {n.name} is annotated row-preserving but column "
+                f"{c} has {len(v)} rows for {t.nrows} input rows"
+            )
+    return out
+
+
+def expand_udf_rows(n, t: Table) -> Tuple[np.ndarray, Dict[str, np.ndarray]]:
+    """(parent_idx, out columns) of an ExpandUDF over ``t``: output row ``i``
+    repeats input row ``parent_idx[i]``'s pass-through columns."""
+    arrays = [np.asarray(t.cols[c]) for c in n.cols]
+    if n.fn is not None:
+        parent_idx, outs = n.fn(*arrays)
+        parent_idx = np.asarray(parent_idx, dtype=np.int64)
+        out = _norm_outputs(outs, n.out_cols)
+    else:
+        parent, flat = [], []
+        for i in range(t.nrows):
+            produced = n.row_fn(*(a[i] for a in arrays))
+            for item in produced:
+                parent.append(i)
+                flat.append(item)
+        parent_idx = np.asarray(parent, dtype=np.int64)
+        out = _rows_to_cols(flat, n.out_cols)
+    for c, v in out.items():
+        if len(v) != len(parent_idx):
+            raise ValueError(
+                f"ExpandUDF {n.name}: column {c} has {len(v)} rows but "
+                f"parent_idx has {len(parent_idx)}"
+            )
+    return parent_idx, out
+
+
+def _rows_to_cols(rows: Sequence, out_cols: Sequence[str]) -> Dict[str, np.ndarray]:
+    """Stack per-row UDF results (scalar / tuple / dict per row) into columns."""
+    cols: Dict[str, List] = {c: [] for c in out_cols}
+    for r in rows:
+        if isinstance(r, dict):
+            for c in out_cols:
+                cols[c].append(r[c])
+        elif isinstance(r, (tuple, list)):
+            for c, v in zip(out_cols, r):
+                cols[c].append(v)
+        else:
+            cols[out_cols[0]].append(r)
+    return {c: np.asarray(v) for c, v in cols.items()}
+
+
+def opaque_udf_table(n, t: Table) -> Table:
+    """Run an OpaqueUDF body over ``t`` and normalize to a Table with fresh
+    row ids (no input/output row correspondence is assumed)."""
+    out = n.fn(t)
+    if isinstance(out, Table):
+        cols = {c: np.asarray(out.cols[c]) for c in n.out_schema}
+        dicts = out.dicts
+    else:
+        cols = {c: np.asarray(out[c]) for c in n.out_schema}
+        # dict-returning bodies must pass dictionary CODES through for any
+        # input column they re-emit; vocab survives only for declared output
+        # columns (a stale vocab on a recomputed column would mis-decode)
+        dicts = {c: t.dicts[c] for c in n.out_schema if c in t.dicts}
+    nrows = len(next(iter(cols.values()))) if cols else 0
+    cols[RID] = np.arange(nrows, dtype=np.int64)
+    return Table(cols, dicts, None)
+
+
+# --------------------------------------------------------------------------- #
 # executor
 # --------------------------------------------------------------------------- #
 
@@ -283,6 +384,25 @@ class Executor:
 
         if isinstance(n, O.FilterScalarSub):
             return self._scalar_sub(n, rec)
+
+        if isinstance(n, O.MapUDF):
+            t = rec(n.child)
+            return t.with_cols(map_udf_cols(n, t))
+
+        if isinstance(n, O.FilterUDF):
+            # the keep-decision travels as a UDFExpr predicate, so plan
+            # execution shares the lineage-query scan path (engine caches,
+            # partition pruning on pass-through atoms)
+            t = rec(n.child)
+            return t.mask(self.scan_engine.scan(n.pred_expr(), t))
+
+        if isinstance(n, O.ExpandUDF):
+            t = rec(n.child)
+            parent_idx, outs = expand_udf_rows(n, t)
+            return t.take(parent_idx).with_cols(outs)
+
+        if isinstance(n, O.OpaqueUDF):
+            return opaque_udf_table(n, rec(n.child))
 
         raise TypeError(f"exec: unknown node {type(n)}")
 

@@ -190,8 +190,118 @@ class IfThenElse(Expr):
         return f"if({self.cond}, {self.then}, {self.other})"
 
 
+@dataclass(frozen=True, eq=False)
+class UDFExpr(Expr):
+    """A black-box but *executable* UDF call over column expressions.
+
+    The body is an opaque callable (``fn(*arrays) -> array``) rather than a
+    closed-form ``Expr`` tree, so nothing can be proven about it symbolically
+    — but because the paper's UDFs are deterministic and re-executable, the
+    call itself can travel inside a pushed-down predicate and be evaluated
+    during a lineage-query scan (the ScanEngine routes it through the
+    residual path).  This is what makes ``filter-like`` UDF pushdowns precise
+    (paper's annotation-driven rules): the pushed predicate literally carries
+    the UDF.
+
+    Structural identity (hashing / program caching) is ``(name, args)`` —
+    ``name`` must therefore be unique per distinct function body; the UDF
+    operator nodes derive it from their node id."""
+
+    name: str
+    fn: object  # Callable[*np.ndarray] -> np.ndarray (vectorized, pure)
+    args: Tuple[Expr, ...] = ()
+
+    def __post_init__(self):
+        if not isinstance(self.args, tuple):
+            object.__setattr__(self, "args", tuple(self.args))
+
+    def __repr__(self):
+        return f"{self.name}({', '.join(repr(a) for a in self.args)})"
+
+
 TRUE = Lit(True)
 FALSE = Lit(False)
+
+
+# --------------------------------------------------------------------------- #
+# UDF lineage annotations (paper's pushdown-rule classes for opaque operators)
+# --------------------------------------------------------------------------- #
+
+ROW_PRESERVING = "row_preserving"
+FILTER_LIKE = "filter_like"
+ONE_TO_ONE = "one_to_one"
+ONE_TO_MANY = "one_to_many"
+OPAQUE = "opaque"
+
+ANNOTATION_KINDS = (
+    ROW_PRESERVING, FILTER_LIKE, ONE_TO_ONE, ONE_TO_MANY, OPAQUE,
+)
+
+
+@dataclass(frozen=True)
+class LineageAnnotation:
+    """What a UDF operator promises about its input-row -> output-row map.
+
+    The annotation is the *only* information the pushdown engine has about a
+    UDF body, so it fully determines the pushdown rule (paper's
+    annotation-driven architecture):
+
+    * ``row_preserving`` — emits exactly the input rows, in order, adding or
+      replacing columns computed from the declared input columns (a
+      vectorized ``withColumn``).
+    * ``filter_like``    — output rows are a subset of input rows, schema
+      unchanged, and the keep-decision is re-executable per row.
+    * ``one_to_one``     — row-preserving, and the outputs are a function of
+      ``key_cols`` only (e.g. a keyed feature lookup); pinning just the keys
+      then determines every UDF output.
+    * ``one_to_many``    — each input row yields k >= 0 output rows whose
+      new columns are a function of the declared inputs (explode/parse).
+    * ``opaque``         — no row correspondence at all; lineage through the
+      operator is the *whole input* (the paper's well-defined superset) and
+      the operator is a mandatory materialization boundary.
+    """
+
+    kind: str
+    key_cols: Tuple[str, ...] = ()
+
+    def __post_init__(self):
+        if self.kind not in ANNOTATION_KINDS:
+            raise ValueError(
+                f"unknown annotation kind {self.kind!r}; "
+                f"have {ANNOTATION_KINDS}"
+            )
+        if not isinstance(self.key_cols, tuple):
+            object.__setattr__(self, "key_cols", tuple(self.key_cols))
+        if self.kind == ONE_TO_ONE and not self.key_cols:
+            raise ValueError("one_to_one annotation requires key_cols")
+
+    # -- constructors --------------------------------------------------- #
+    @classmethod
+    def row_preserving(cls) -> "LineageAnnotation":
+        return cls(ROW_PRESERVING)
+
+    @classmethod
+    def filter_like(cls) -> "LineageAnnotation":
+        return cls(FILTER_LIKE)
+
+    @classmethod
+    def one_to_one(cls, *key_cols: str) -> "LineageAnnotation":
+        return cls(ONE_TO_ONE, tuple(key_cols))
+
+    @classmethod
+    def one_to_many(cls) -> "LineageAnnotation":
+        return cls(ONE_TO_MANY)
+
+    @classmethod
+    def opaque(cls) -> "LineageAnnotation":
+        return cls(OPAQUE)
+
+    def determines(self, declared_cols: Sequence[str]) -> Tuple[str, ...]:
+        """Input columns that functionally determine the UDF's outputs:
+        ``key_cols`` for one_to_one, else every declared input column."""
+        if self.kind == ONE_TO_ONE:
+            return self.key_cols
+        return tuple(declared_cols)
 
 
 # --------------------------------------------------------------------------- #
@@ -218,6 +328,8 @@ def key(e: Expr):
         return ("isin", key(e.operand), vk)
     if isinstance(e, IfThenElse):
         return ("ite", key(e.cond), key(e.then), key(e.other))
+    if isinstance(e, UDFExpr):
+        return ("udf", e.name, tuple(key(a) for a in e.args))
     raise TypeError(f"unknown expr {type(e)}")
 
 
@@ -309,6 +421,9 @@ def cols_of(e: Expr) -> Set[str]:
                 walk(x.values)
         elif isinstance(x, IfThenElse):
             walk(x.cond), walk(x.then), walk(x.other)
+        elif isinstance(x, UDFExpr):
+            for a in x.args:
+                walk(a)
 
     walk(e)
     return out
@@ -332,6 +447,9 @@ def params_of(e: Expr) -> Set[str]:
                 walk(x.values)
         elif isinstance(x, IfThenElse):
             walk(x.cond), walk(x.then), walk(x.other)
+        elif isinstance(x, UDFExpr):
+            for a in x.args:
+                walk(a)
 
     walk(e)
     return out
@@ -353,6 +471,9 @@ def paramsets_of(e: Expr) -> Set[str]:
                 walk(x.values)
         elif isinstance(x, IfThenElse):
             walk(x.cond), walk(x.then), walk(x.other)
+        elif isinstance(x, UDFExpr):
+            for a in x.args:
+                walk(a)
 
     walk(e)
     return out
@@ -374,6 +495,8 @@ def substitute_cols(e: Expr, mapping: Mapping[str, Expr]) -> Expr:
             return IsIn(walk(x.operand), vals)
         if isinstance(x, IfThenElse):
             return IfThenElse(walk(x.cond), walk(x.then), walk(x.other))
+        if isinstance(x, UDFExpr):
+            return UDFExpr(x.name, x.fn, tuple(walk(a) for a in x.args))
         return x
 
     return walk(e)
@@ -417,6 +540,8 @@ def substitute_params(e: Expr, binding: Mapping[str, object]) -> Expr:
             return IsIn(walk(x.operand), vals)
         if isinstance(x, IfThenElse):
             return IfThenElse(walk(x.cond), walk(x.then), walk(x.other))
+        if isinstance(x, UDFExpr):
+            return UDFExpr(x.name, x.fn, tuple(walk(a) for a in x.args))
         return x
 
     return walk(e)
@@ -507,6 +632,14 @@ def eval_np(
             return _member_np(ev(x.operand), vals, n)
         if isinstance(x, IfThenElse):
             return np.where(ev(x.cond), ev(x.then), ev(x.other))
+        if isinstance(x, UDFExpr):
+            vals = []
+            for a in x.args:
+                v = np.asarray(ev(a))
+                if v.ndim == 0:
+                    v = np.broadcast_to(v, (n,))
+                vals.append(v)
+            return np.asarray(x.fn(*vals))
         if isinstance(x, _ValueSet):
             return np.asarray(x.values)
         raise TypeError(f"cannot eval {type(x)}")
@@ -581,6 +714,10 @@ def eval_jnp(e: Expr, env, binding=None):
             return jnp.isin(op, vals)
         if isinstance(x, IfThenElse):
             return jnp.where(ev(x.cond), ev(x.then), ev(x.other))
+        if isinstance(x, UDFExpr):
+            # opaque python bodies cannot be traced; the device scan path
+            # catches this and falls back to the host engine
+            raise TypeError(f"UDF expression {x.name} is host-only")
         raise TypeError(f"cannot eval {type(x)}")
 
     return ev(e)

@@ -103,7 +103,10 @@ class IterativeInference:
         def up(node: O.Node) -> Expr:
             if node.id in up_cache:
                 return up_cache[node.id]
-            r = self._pushup(node, up, vset)
+            # §6.1 transformations come from the pushdown-rule registry, so
+            # third-party operators supply pushup behaviour the same way
+            # they supply pushdown rules
+            r = self.pd.push_up(node, up, vset)
             up_cache[node.id] = r
             return r
 
@@ -198,113 +201,6 @@ class IterativeInference:
         down3(self.plan, Frow)
 
         return IterativePlan(self.plan, out_params, g1, g3, vsets, branch_vsets)
-
-    # ------------------------------------------------------------------ #
-    def _pushup(self, node: O.Node, up: Callable, vset: Callable) -> Expr:
-        """F↑ satisfying Op(G↑(T)) = F↑(Op(G↑(T))) — §6.1 transformations."""
-        if isinstance(node, O.Source):
-            return land(*[IsIn(Col(c), vset(node, c)) for c in self.pd.schema_of(node)])
-
-        if isinstance(node, (O.Filter, O.Sort)):
-            return up(node.child)
-
-        if isinstance(node, O.Project):
-            keep = set(node.keep)
-            return land(*[a for a in conjuncts(up(node.child)) if cols_of(a) <= keep])
-
-        if isinstance(node, O.RowTransform):
-            shadowed = set(node.assigns)
-            return land(*[a for a in conjuncts(up(node.child)) if not (cols_of(a) & shadowed)])
-
-        if isinstance(node, O.Alias):
-            from .expr import substitute_cols
-
-            mapping = {c: Col(node.prefix + c) for c in self.pd.schema_of(node.child)}
-            return substitute_cols(up(node.child), mapping)
-
-        if isinstance(node, O.InnerJoin):
-            atoms = conjuncts(up(node.left)) + [
-                a
-                for a in conjuncts(up(node.right))
-                if cols_of(a) <= set(self.pd.schema_of(node))
-            ]
-            # joined rows carry both keys' V-sets (lk == rk on every row)
-            l_mem = _memberships(up(node.left))
-            r_mem = _memberships(up(node.right))
-            for lk, rk in node.on:
-                if rk in r_mem:
-                    atoms.append(IsIn(Col(lk), r_mem[rk]))
-                if lk in l_mem and rk in set(self.pd.schema_of(node)):
-                    atoms.append(IsIn(Col(rk), l_mem[lk]))
-            return land(*atoms)
-
-        if isinstance(node, O.LeftOuterJoin):
-            # unmatched left rows break right-side guarantees: left only
-            return up(node.left)
-
-        if isinstance(node, O.SemiJoin):
-            atoms = conjuncts(up(node.outer))
-            i_mem = _memberships(up(node.inner))
-            for ok_, ik in node.on:
-                if ik in i_mem:
-                    atoms.append(IsIn(Col(ok_), i_mem[ik]))
-            return land(*atoms)
-
-        if isinstance(node, O.AntiJoin):
-            # inner lineage information cannot be pushed up (paper §6.4) but
-            # the inner subtree must still be traversed so phase 3 can refine
-            # *within* it
-            up(node.inner)
-            return up(node.outer)
-
-        if isinstance(node, O.FilterScalarSub):
-            atoms = conjuncts(up(node.child))
-            i_mem = _memberships(up(node.inner))  # always traverse the inner
-            if node.correlate:
-                for oc, ic in node.correlate:
-                    if ic in i_mem:
-                        atoms.append(IsIn(Col(oc), i_mem[ic]))
-            return land(*atoms)
-
-        if isinstance(node, O.GroupBy):
-            keys = set(node.keys)
-            return land(*[a for a in conjuncts(up(node.child)) if cols_of(a) <= keys])
-
-        if isinstance(node, O.Pivot):
-            idx = {node.index}
-            return land(*[a for a in conjuncts(up(node.child)) if cols_of(a) <= idx])
-
-        if isinstance(node, O.Unpivot):
-            keep = set(node.index_cols)
-            return land(*[a for a in conjuncts(up(node.child)) if cols_of(a) <= keep])
-
-        if isinstance(node, O.RowExpand):
-            assigned = {c for v in node.variants for c in v}
-            return land(*[a for a in conjuncts(up(node.child)) if not (cols_of(a) & assigned)])
-
-        if isinstance(node, O.Window):
-            return up(node.child)
-
-        if isinstance(node, O.GroupedMap):
-            shadowed = set(node.assigns)
-            return land(*[a for a in conjuncts(up(node.child)) if not (cols_of(a) & shadowed)])
-
-        if isinstance(node, O.Union):
-            return lor(*[up(p) for p in node.parts])
-
-        if isinstance(node, O.Intersect):
-            return land(up(node.left), up(node.right))
-
-        raise TypeError(f"pushup: unknown node {type(node)}")
-
-
-def _memberships(pred: Expr) -> Dict[str, ParamSet]:
-    out: Dict[str, ParamSet] = {}
-    for a in conjuncts(pred):
-        if isinstance(a, IsIn) and isinstance(a.operand, Col) and isinstance(a.values, ParamSet):
-            out.setdefault(a.operand.name, a.values)
-    return out
-
 
 # --------------------------------------------------------------------------- #
 # phase 4: concretization + fixpoint refinement

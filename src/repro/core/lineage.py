@@ -198,9 +198,18 @@ class LineageAnswer:
     lineage: Dict[str, np.ndarray]  # table -> source row ids
     seconds: float = 0.0
     detail: Dict[str, object] = field(default_factory=dict)
+    # per-table precision flag: True = certified exact lineage (Lemma 3.1
+    # with every needed intermediate materialized), False = sound superset
+    # (iterative fallback, or an unmaterialized opaque-UDF boundary above
+    # the table).  Tables absent from the dict default to precise.
+    precise: Dict[str, bool] = field(default_factory=dict)
 
     def total_rows(self) -> int:
         return int(sum(len(v) for v in self.lineage.values()))
+
+    def all_precise(self) -> bool:
+        """Is every table's lineage certified exact (no superset fallback)?"""
+        return all(self.precise.get(t, True) for t in self.lineage)
 
 
 def _is_null(v) -> bool:
@@ -336,6 +345,19 @@ class PredTrace:
         and treats any mismatch as stale."""
         store_gen = self.store.generation if self.store is not None else 0
         return (self.executor.run_generation, store_gen)
+
+    def precision_token(self) -> Tuple:
+        """The effective budget/precision mode answers are produced under:
+        the active byte budget plus the set of budget-dropped stages.  Two
+        answers computed under different tokens are different *kinds* of
+        answer (precise vs per-table superset) even when the underlying data
+        generations coincide — the LineageService keys its answer cache on
+        this so a superset answer cached under a tight budget is never served
+        to a caller who restored precision (or vice versa)."""
+        if self.mat_plan is not None:
+            return (self.mat_plan.budget_bytes,
+                    tuple(sorted(self.mat_plan.dropped)))
+        return (self.budget_bytes, ())
 
     # ------------------------------------------------------------------ #
     def infer(self, stats: Optional[Dict] = None) -> LineagePlan:
@@ -499,13 +521,16 @@ class PredTrace:
             rr = self._superset_refine(t_o)
             detail["superset_tables"] = sorted({sp.table for sp in lp.source_preds})
             detail["iterations"] = rr.iterations
-            return LineageAnswer(dict(rr.lineage), time.perf_counter() - t0, detail)
+            lin = dict(rr.lineage)
+            return LineageAnswer(lin, time.perf_counter() - t0, detail,
+                                 precise={t: False for t in lin})
 
         # walk the stage chain, binding parameters from selected rows
         available = set(binding)
         param_stage: Dict[str, int] = {}
         param_col: Dict[str, str] = {}
         stage_sel: Dict[int, Table] = {}
+        used_stage_nodes: set = set()
         for si, st in enumerate(lp.stages):
             if st.node_id in dropped:
                 continue
@@ -513,6 +538,12 @@ class PredTrace:
                 continue  # depends on a dropped stage: unusable
             stobj = self.exec_result.materialized.get(st.node_id)
             if stobj is None:
+                continue
+            if not st.params_out:
+                # certification-only stage (opaque boundary): it binds no
+                # params, so its selection is never consumed — availability
+                # alone certifies the tables below it
+                used_stage_nodes.add(st.node_id)
                 continue
             if any(_guard_dead(binding.get(g)) for g in st.guards):
                 if isinstance(stobj, StoredTable):
@@ -523,6 +554,7 @@ class PredTrace:
                 sel = self._stage_select(st, stobj, binding, param_stage,
                                          stage_sel, param_col)
             stage_sel[si] = sel
+            used_stage_nodes.add(st.node_id)
             for p, colname in st.params_out.items():
                 if colname in sel.cols:
                     binding[p] = _clean_binding_value(_uniq(sel.cols[colname]))
@@ -553,9 +585,19 @@ class PredTrace:
                 lineage[tab] = (
                     np.union1d(lineage[tab], rids) if tab in lineage else rids
                 )
-            detail["superset_tables"] = sorted(fallback)
             detail["iterations"] = rr.iterations
-        return LineageAnswer(lineage, time.perf_counter() - t0, detail)
+        # a mandatory (opaque-UDF) stage that could not run — budget-dropped
+        # or missing from a reloaded store — leaves every table below it
+        # uncertified: the answer there is the well-defined whole-input
+        # superset, never an under-approximation
+        superset_set = set(fallback)
+        for nid, tabs in lp.superset_scope.items():
+            if nid not in used_stage_nodes:
+                superset_set.update(tabs)
+        if superset_set:
+            detail["superset_tables"] = sorted(superset_set)
+        return LineageAnswer(lineage, time.perf_counter() - t0, detail,
+                             precise={t: t not in superset_set for t in lineage})
 
     # ------------------------------------------------------------------ #
     def query_batch(
@@ -720,6 +762,8 @@ class PredTrace:
             return idxs
 
         for si, st in enumerate(self.lineage_plan.stages):
+            if not st.params_out:
+                continue  # certification-only stage: binds nothing
             table = self.exec_result.materialized[st.node_id]
             if isinstance(table, StoredTable):
                 # the batch path leans on the engine's identity-keyed sorted
@@ -796,7 +840,11 @@ class PredTrace:
         dt = time.perf_counter() - t0
         out = []
         for b in range(B):
-            ans = LineageAnswer(lineages[b], dt / B)
+            # the batch path only runs with every stage materialized
+            # (degraded plans fall back to per-row query() above), so every
+            # answer is certified precise
+            ans = LineageAnswer(lineages[b], dt / B,
+                                precise={t: True for t in lineages[b]})
             ans.detail["batch"] = B
             out.append(ans)
         return out
@@ -816,7 +864,10 @@ class PredTrace:
         if scan is None:
             scan = lambda pred, t, b: self._scan(pred, t, b)
         rr: RefineResult = refine(self.iter_plan, self.catalog, binding, max_iters, scan=scan)
-        ans = LineageAnswer(rr.lineage, time.perf_counter() - t0)
+        # Algorithm 3's contract is a sound superset; the refinement does not
+        # certify exactness, so every table is flagged imprecise
+        ans = LineageAnswer(rr.lineage, time.perf_counter() - t0,
+                            precise={t: False for t in rr.lineage})
         ans.detail["iterations"] = rr.iterations
         ans.detail["masks"] = rr.masks
         ans.detail["naive_masks"] = rr.naive_masks
@@ -837,7 +888,8 @@ class PredTrace:
             lineage[tab] = (
                 np.union1d(lineage[tab], rids) if tab in lineage else np.unique(rids)
             )
-        return LineageAnswer(lineage, time.perf_counter() - t0)
+        return LineageAnswer(lineage, time.perf_counter() - t0,
+                             precise={t: False for t in lineage})
 
 
 def _guard_dead(v) -> bool:

@@ -12,9 +12,11 @@ from __future__ import annotations
 
 import itertools
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
-from .expr import Col, Expr, Lit, cols_of
+import numpy as np
+
+from .expr import Col, Expr, LineageAnnotation, Lit, UDFExpr, cols_of
 
 _node_ids = itertools.count()
 
@@ -307,6 +309,166 @@ class GroupedMap(Node):
         Node.__post_init__(self)
 
 
+# --------------------------------------------------------------------------- #
+# UDF operator family (annotation-driven pushdown, paper's UDF coverage)
+# --------------------------------------------------------------------------- #
+#
+# Each node carries a :class:`~repro.core.expr.LineageAnnotation` naming the
+# pushdown-rule class its body belongs to; the PushdownRuleRegistry
+# (``core/pushdown.py``) dispatches on (operator type, annotation kind), so
+# third-party operators plug in without editing core.  Bodies come in two
+# shapes — ``fn`` (vectorized over numpy columns) and ``row_fn`` (per-row
+# fallback) — and must be deterministic and pure: lineage-query scans may
+# re-execute them.
+
+
+class UDFNode(Node):
+    """Shared machinery for the UDF operator family."""
+
+    def _check_annotation(self, allowed: Tuple[str, ...]) -> None:
+        if self.annotation.kind not in allowed:
+            raise ValueError(
+                f"{type(self).__name__} supports annotations {allowed}, "
+                f"got {self.annotation.kind!r}"
+            )
+        if self.fn is None and self.row_fn is None:
+            raise ValueError(f"{type(self).__name__} needs fn or row_fn")
+        unknown = set(self.annotation.key_cols) - set(self.cols)
+        if unknown:
+            raise ValueError(f"annotation key_cols {unknown} not in declared "
+                             f"input columns {self.cols}")
+
+
+@dataclass(eq=False)
+class MapUDF(UDFNode):
+    """Row-preserving UDF: adds/replaces ``out_cols`` computed from the
+    declared input columns ``cols``; emits exactly the input rows, in order.
+
+    ``fn(*arrays) -> array | tuple(arrays) | {out_col: array}`` (vectorized)
+    or ``row_fn(*scalars) -> scalar | tuple | dict`` (per-row fallback).
+    Annotations: ``row_preserving`` (default; outputs depend on every
+    declared input column) or ``one_to_one`` (outputs depend only on the
+    annotation's ``key_cols``)."""
+
+    child: Node
+    cols: List[str]
+    out_cols: List[str]
+    fn: Optional[Callable] = None
+    row_fn: Optional[Callable] = None
+    annotation: LineageAnnotation = field(
+        default_factory=LineageAnnotation.row_preserving
+    )
+    name: str = "map_udf"
+
+    def __post_init__(self):
+        Node.__post_init__(self)
+        self._check_annotation(("row_preserving", "one_to_one"))
+
+    def __repr_args__(self):
+        return f"{self.name}:{','.join(self.out_cols)}"
+
+
+@dataclass(eq=False)
+class FilterUDF(UDFNode):
+    """Filter-like UDF: keeps the input rows where the boolean body holds;
+    schema unchanged.  ``fn(*arrays) -> bool mask`` / ``row_fn(*scalars) ->
+    bool``.  Because the body is deterministic and re-executable, the
+    pushdown rule conjoins it into the pushed predicate (as a
+    :class:`~repro.core.expr.UDFExpr`) — the paper's filter-like rule, which
+    keeps the pushdown *precise*."""
+
+    child: Node
+    cols: List[str]
+    fn: Optional[Callable] = None
+    row_fn: Optional[Callable] = None
+    annotation: LineageAnnotation = field(
+        default_factory=LineageAnnotation.filter_like
+    )
+    name: str = "filter_udf"
+
+    def __post_init__(self):
+        Node.__post_init__(self)
+        self._check_annotation(("filter_like",))
+
+    def __repr_args__(self):
+        return f"{self.name}({','.join(self.cols)})"
+
+    def pred_expr(self) -> UDFExpr:
+        """The keep-decision as a pushable predicate atom.  The name embeds
+        the node id so structural caches never conflate two bodies."""
+        vec = self.fn
+        row = self.row_fn
+
+        def mask_fn(*arrays):
+            if vec is not None:
+                return np.asarray(vec(*arrays), dtype=bool)
+            n = len(arrays[0]) if arrays else 0
+            return np.fromiter(
+                (bool(row(*(a[i] for a in arrays))) for i in range(n)),
+                dtype=bool, count=n,
+            )
+
+        return UDFExpr(f"{self.name}#{self.id}", mask_fn,
+                       tuple(Col(c) for c in self.cols))
+
+
+@dataclass(eq=False)
+class ExpandUDF(UDFNode):
+    """One-to-many UDF: each input row yields k >= 0 output rows; the new
+    ``out_cols`` are a function of the declared input columns, pass-through
+    columns repeat the parent row's values.
+
+    ``fn(*arrays) -> (parent_idx, {out_col: array} | tuple(arrays))``
+    (vectorized: ``parent_idx[i]`` is the input row of output row ``i``) or
+    ``row_fn(*scalars) -> list[dict | tuple]`` (per-row fallback, one entry
+    per produced row)."""
+
+    child: Node
+    cols: List[str]
+    out_cols: List[str]
+    fn: Optional[Callable] = None
+    row_fn: Optional[Callable] = None
+    annotation: LineageAnnotation = field(
+        default_factory=LineageAnnotation.one_to_many
+    )
+    name: str = "expand_udf"
+
+    def __post_init__(self):
+        Node.__post_init__(self)
+        self._check_annotation(("one_to_many", "one_to_one"))
+
+    def __repr_args__(self):
+        return f"{self.name}:{','.join(self.out_cols)}"
+
+
+@dataclass(eq=False)
+class OpaqueUDF(Node):
+    """Opaque table -> table UDF: no input/output row correspondence is
+    assumed.  Lineage through it is the *whole input* — the paper's
+    well-defined superset — and Algorithm 1 treats the node as a mandatory
+    materialization boundary: with its output saved, everything above it
+    stays precise; unmaterialized, answers degrade to flagged supersets.
+
+    ``fn(table) -> Table | {col: array}``; ``out_schema`` must be declared
+    statically so pushdown can reason without executing."""
+
+    child: Node
+    fn: Callable
+    out_schema: List[str]
+    annotation: LineageAnnotation = field(
+        default_factory=LineageAnnotation.opaque
+    )
+    name: str = "opaque_udf"
+
+    def __post_init__(self):
+        Node.__post_init__(self)
+        if self.annotation.kind != "opaque":
+            raise ValueError("OpaqueUDF requires the opaque annotation")
+
+    def __repr_args__(self):
+        return f"{self.name}->{','.join(self.out_schema)}"
+
+
 @dataclass(eq=False)
 class FilterScalarSub(Node):
     """Correlated / uncorrelated scalar sub-query filter:
@@ -407,6 +569,13 @@ def schema(node: Node, catalog: Dict[str, List[str]]) -> List[str]:
         return base + [c for c in node.assigns if c not in base]
     if isinstance(node, FilterScalarSub):
         return schema(node.child, catalog)
+    if isinstance(node, (MapUDF, ExpandUDF)):
+        base = schema(node.child, catalog)
+        return base + [c for c in node.out_cols if c not in base]
+    if isinstance(node, FilterUDF):
+        return schema(node.child, catalog)
+    if isinstance(node, OpaqueUDF):
+        return list(node.out_schema)
     raise TypeError(f"schema: unknown node {type(node)}")
 
 
@@ -428,3 +597,7 @@ def validate(node: Node, catalog: Dict[str, List[str]]) -> None:
             for l, r in n.on:
                 if l not in ls or r not in rs:
                     raise ValueError(f"{n}: semi/anti key {l}={r} missing")
+        if isinstance(n, (MapUDF, FilterUDF, ExpandUDF)):
+            missing = set(n.cols) - set(schema(n.child, catalog))
+            if missing:
+                raise ValueError(f"{n}: UDF reads missing columns {missing}")

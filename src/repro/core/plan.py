@@ -63,10 +63,19 @@ class LineagePlan:
     out_params: Dict[str, str]  # param -> output column (F_n^row)
     stages: List[Stage]  # binding order: output-first
     source_preds: List[SourcePred]
+    # mandatory materialization boundaries (SUPERSET-marker pushes, i.e.
+    # opaque UDFs): stage node id -> source tables in its subtree.  With the
+    # stage saved, answers stay precise; with it dropped/unavailable, every
+    # listed table degrades to a flagged (well-defined) superset.
+    superset_scope: Dict[int, List[str]] = field(default_factory=dict)
 
     @property
     def materialize(self) -> Dict[int, Optional[List[str]]]:
         return {s.node_id: s.keep_cols for s in self.stages}
+
+    @property
+    def opaque_stages(self) -> List[int]:
+        return sorted(self.superset_scope)
 
     def describe(self) -> str:  # pragma: no cover - debug aid
         lines = [f"output params: {self.out_params}"]
@@ -235,7 +244,8 @@ class LineageInference:
                         f"materializing — operator rule bug"
                     )
                 forced.add(j)
-        lp = LineagePlan(self.plan, out_params, stages, source_preds)
+        lp = LineagePlan(self.plan, out_params, stages, source_preds,
+                         superset_scope=self._superset_scope)
         self._project_columns(lp)
         return lp
 
@@ -245,11 +255,14 @@ class LineageInference:
         out_params = {p: c for p, c in pmap.items()}
         stages: List[Stage] = []
         source_preds: List[SourcePred] = []
+        self._superset_scope = {}
 
         def rec(node: O.Node, F: Expr, guards: List[str], path: List[O.Node]):
             if isinstance(node, O.Source):
                 source_preds.append(SourcePred(node.id, node.table, F, list(guards)))
                 return
+            staged_here = False
+            F_in, guards_in = F, list(guards)
             if node.id in forced:
                 Frow_i, pmap_i = row_selection_for(self.pd.schema_of(node), stage=str(node.id))
                 # §5 pruning: push the FULL row-selection once to learn which
@@ -283,7 +296,27 @@ class LineageInference:
                 )
                 F = Frow_p
                 guards = []
+                staged_here = True
             push = self.pd.push_node(node, F)
+            if push.superset:
+                # SUPERSET marker (opaque UDF): mandatory materialization
+                # boundary.  The saved output certifies the answer — above it
+                # everything stays precise; below it the rule's whole-input
+                # push (TRUE) is the paper's well-defined lineage.  The stage
+                # binds no params (nothing crosses an opaque boundary); it
+                # exists so the query phase can verify the intermediate is
+                # available, and its absence (budget drop / missing spill)
+                # flags every table below as a superset.  A forced node
+                # already staged itself above with the same run predicate.
+                if not staged_here:
+                    stages.append(Stage(node.id, run_pred=F_in, params_out={},
+                                        guards=guards_in))
+                self._superset_scope[node.id] = sorted(
+                    {s.table for s in O.sources(node)}
+                )
+                for child in node.children:
+                    rec(child, push.gs.get(child.id, TRUE), [], path + [node])
+                return
             if not push.precise:
                 raise _FailureAt(node, path + [node])
             for child in node.children:

@@ -293,6 +293,10 @@ def _has_array_lit(e) -> bool:
             v = getattr(e, f.name, None)
             if isinstance(v, Expr) and _has_array_lit(v):
                 return True
+            if isinstance(v, tuple) and any(
+                isinstance(x, Expr) and _has_array_lit(x) for x in v
+            ):
+                return True
         return False
     return False
 

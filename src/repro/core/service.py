@@ -194,6 +194,10 @@ class ServiceStats:
         self.cache_hits = 0
         self.cache_misses = 0
         self.cache_stale = 0          # generation-mismatch invalidations
+        # answers whose per-table precise flags were not all True: budget
+        # degradation or an unmaterialized opaque-UDF stage produced a
+        # (well-defined) superset instead of exact lineage
+        self.superset_answers = 0
         self._latencies = deque(maxlen=self.RESERVOIR)
 
     def bump(self, **deltas: int) -> None:
@@ -224,6 +228,9 @@ class ServiceStats:
         out["coalesce_width_max"] = out.pop("max_coalesce")
         looked = out["cache_hits"] + out["cache_misses"]
         out["cache_hit_rate"] = out["cache_hits"] / looked if looked else 0.0
+        out["superset_rate"] = (
+            out["superset_answers"] / out["answered"] if out["answered"] else 0.0
+        )
         if len(lat):
             out["latency_ms_p50"] = float(np.percentile(lat, 50) * 1e3)
             out["latency_ms_p99"] = float(np.percentile(lat, 99) * 1e3)
@@ -247,6 +254,16 @@ def _binding_cache_key(pt: PredTrace, row: RowSpec) -> Tuple:
         else:
             parts.append((p, type(v).__name__, v))
     return tuple(parts)
+
+
+def _cache_key(pipeline: str, pt: PredTrace, row: RowSpec) -> Tuple:
+    """Full answer-cache key: pipeline name, the pipeline's *precision mode*
+    (budget + dropped stages), and the normalized binding.  The precision
+    token keeps a superset answer produced under a tight budget from ever
+    being served after the caller restored precision (e.g. by attaching a
+    fully-populated store) — generation stamps alone cannot distinguish the
+    two when the data they derive from coincides."""
+    return (pipeline, pt.precision_token(), _binding_cache_key(pt, row))
 
 
 class LineageService:
@@ -325,7 +342,7 @@ class LineageService:
         # dispatcher owns stale accounting and recompute).
         pt = self._pipelines[pipeline]
         try:
-            req.cache_key = (pipeline, _binding_cache_key(pt, row))
+            req.cache_key = _cache_key(pipeline, pt, row)
             entry = self._cache.get(req.cache_key)
             if entry is not None and entry[0] == pt.answer_generation():
                 self.stats.bump(cache_hits=1)
@@ -357,7 +374,7 @@ class LineageService:
             req = LineageRequest(pipeline, row, deadline)
             out.append(req)
             try:
-                req.cache_key = (pipeline, _binding_cache_key(pt, row))
+                req.cache_key = _cache_key(pipeline, pt, row)
                 entry = self._cache.get(req.cache_key)
                 if entry is not None and entry[0] == gen:
                     self.stats.bump(cache_hits=1)
@@ -476,7 +493,7 @@ class LineageService:
             ck = r.cache_key  # computed once at submit time
             if ck is None:
                 try:
-                    ck = (key, _binding_cache_key(pt, r.row))
+                    ck = _cache_key(key, pt, r.row)
                 except Exception as e:
                     if r._fail(e):
                         self.stats.bump(failed=1)
@@ -515,11 +532,13 @@ class LineageService:
                 cached: bool = False) -> None:
         # per-request copy: answers are shared via the cache, so detail
         # must not be mutated on a shared object
-        out = LineageAnswer(ans.lineage, ans.seconds, dict(ans.detail))
+        out = LineageAnswer(ans.lineage, ans.seconds, dict(ans.detail),
+                            dict(ans.precise))
         if cached:
             out.detail["cache"] = "hit"
         if r._fulfill(out):
-            self.stats.bump(answered=1)
+            self.stats.bump(answered=1,
+                            superset_answers=0 if out.all_precise() else 1)
             self.stats.record_latency(time.monotonic() - r.submitted_at)
         else:
             # lost to a concurrent cancel()/expiry between dequeue and now

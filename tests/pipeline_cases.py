@@ -30,7 +30,7 @@ import numpy as np
 from repro.core import Executor, PredTrace
 from repro.core import ops as O
 from repro.core.eager import oracle_lineage_for_values
-from repro.core.expr import Col
+from repro.core.expr import Col, LineageAnnotation
 from repro.core.table import Table
 
 
@@ -103,6 +103,66 @@ def _apply(node: O.Node, op: List) -> O.Node:
     if kind == "sort":
         by = [(c, False) for c in args] or [("out", False)]
         return O.Sort(node, by)
+    # -- annotated UDF nodes (JSON-serializable descriptors build the
+    #    deterministic bodies here, so corpus replay needs no pickling) ----- #
+    if kind == "map_udf":
+        # row-preserving sessionizer-ish hash: m = (a*7 + v) % k
+        (k,) = args
+        return O.MapUDF(node, cols=["a", "v"], out_cols=["m"],
+                        fn=lambda a, v: (a * 7 + v) % k, name=f"sess{k}")
+    if kind == "map_udf_1to1":
+        # one_to_one on 'a': output depends on the key column only
+        (k,) = args
+        return O.MapUDF(node, cols=["a"], out_cols=["m"],
+                        fn=lambda a: (a * 13 + k) % 7,
+                        annotation=LineageAnnotation.one_to_one("a"),
+                        name=f"keyed{k}")
+    if kind == "filter_udf":
+        # filter-like keep-decision outside the closed expression language
+        (m,) = args
+        return O.FilterUDF(node, cols=["a", "v"],
+                           fn=lambda a, v: (a * 3 + v) % m != 0,
+                           name=f"fu{m}")
+    if kind == "filter_udf_rowfn":
+        # per-row fallback body (no vectorized fn)
+        (m,) = args
+        return O.FilterUDF(node, cols=["v"],
+                           row_fn=lambda v: int(v) % m != 0,
+                           name=f"fur{m}")
+    if kind == "expand_udf":
+        # one-to-many: row i yields (v_i % k) rows — k=0 rows happen, which
+        # is exactly what makes unpinned pushes supersets
+        (k,) = args
+
+        def _expand(a, v):
+            counts = (v % k).astype(np.int64)
+            parent = np.repeat(np.arange(len(v)), counts)
+            offs = np.concatenate([[0], np.cumsum(counts)])[:-1]
+            within = np.arange(counts.sum()) - np.repeat(offs, counts)
+            return parent, {"e": a[parent] + within}
+
+        return O.ExpandUDF(node, cols=["a", "v"], out_cols=["e"], fn=_expand,
+                           name=f"ex{k}")
+    if kind == "opaque_udf":
+        # opaque dedup (keep first row per b): no row correspondence exposed
+
+        def _dedup(t):
+            b = np.asarray(t.cols["b"])
+            _, first = np.unique(b, return_index=True)
+            first.sort()
+            return {"b": b[first], "v": np.asarray(t.cols["v"])[first]}
+
+        return O.OpaqueUDF(node, _dedup, out_schema=["b", "v"], name="dedup_b")
+    if kind == "groupby_m":
+        # group by the MapUDF output column (forces a stage at the UDF)
+        (agg,) = args
+        e = None if agg == "count" else Col("v")
+        return O.GroupBy(node, ["m"], {"out": O.Agg(agg, e)})
+    if kind == "groupby_e":
+        # group by the ExpandUDF output column
+        (agg,) = args
+        e = None if agg == "count" else Col("e")
+        return O.GroupBy(node, ["e"], {"out": O.Agg(agg, e)})
     raise ValueError(f"unknown op descriptor {op!r}")
 
 
@@ -136,8 +196,11 @@ def check_differential(cat: Dict[str, Table], plan: O.Node, row_seed: int,
     pt = PredTrace(cat, plan)
     pt.infer(stats=res.stats)
     pt.run()
-    got = lineage_sets(pt.query(row).lineage)
+    ans = pt.query(row)
+    got = lineage_sets(ans.lineage)
     assert got == want, f"precise != oracle: {got} vs {want}"
+    # with every stage materialized the answer must be flagged precise
+    assert ans.all_precise(), f"materialized answer flagged superset: {ans.precise}"
 
     # batched must agree with single-row (the PR-1 contract, on this algebra)
     (batched,) = pt.query_batch([row])
@@ -155,5 +218,16 @@ def check_differential(cat: Dict[str, Table], plan: O.Node, row_seed: int,
     for tab in want:
         assert want[tab] <= it.get(tab, set()), (
             f"iterative superset missed oracle rows for {tab}"
+        )
+
+    # 4. superset-soundness chain: precise ⊆ iterative ⊆ naive per table —
+    #    refinement may only shrink the phase-1 masks, never under-approximate
+    for tab in got:
+        assert got[tab] <= it.get(tab, set()), (
+            f"iterative under-approximates the precise answer for {tab}"
+        )
+    for tab in it:
+        assert it[tab] <= naive.get(tab, set()), (
+            f"iterative exceeds the naive superset for {tab}"
         )
     return True

@@ -129,3 +129,69 @@ def test_scalar_subquery(db):
 def test_alias(db):
     a = run(db, O.Alias(O.Source("t"), "x_"))
     assert set(a.columns) == {"x_k", "x_v", "x_g"}
+
+
+# --------------------------------------------------------------------------- #
+# UDF node execution: vectorized body vs per-row fallback
+# --------------------------------------------------------------------------- #
+
+
+def test_map_udf_row_fn_matches_vectorized(db):
+    vec = O.MapUDF(O.Source("t"), cols=["k", "v"], out_cols=["s"],
+                   fn=lambda k, v: k * 2 + v, name="mv")
+    row = O.MapUDF(O.Source("t"), cols=["k", "v"], out_cols=["s"],
+                   row_fn=lambda k, v: k * 2 + v, name="mr")
+    assert run(db, vec)["s"].tolist() == run(db, row)["s"].tolist()
+
+
+def test_map_udf_dict_and_tuple_returns(db):
+    as_dict = O.MapUDF(O.Source("t"), cols=["k"], out_cols=["a", "b"],
+                       fn=lambda k: {"a": k + 1, "b": k - 1}, name="d")
+    as_tuple = O.MapUDF(O.Source("t"), cols=["k"], out_cols=["a", "b"],
+                        fn=lambda k: (k + 1, k - 1), name="tu")
+    o1, o2 = run(db, as_dict), run(db, as_tuple)
+    assert o1["a"].tolist() == o2["a"].tolist()
+    assert o1["b"].tolist() == o2["b"].tolist()
+
+
+def test_map_udf_row_count_mismatch_raises(db):
+    bad = O.MapUDF(O.Source("t"), cols=["k"], out_cols=["s"],
+                   fn=lambda k: k[:2], name="bad")
+    with pytest.raises(ValueError, match="row-preserving"):
+        run(db, bad)
+
+
+def test_filter_udf_row_fn_matches_vectorized(db):
+    vec = O.FilterUDF(O.Source("t"), cols=["v"],
+                      fn=lambda v: v > 15, name="fv")
+    row = O.FilterUDF(O.Source("t"), cols=["v"],
+                      row_fn=lambda v: v > 15, name="fr")
+    assert run(db, vec)["k"].tolist() == run(db, row)["k"].tolist() == [2, 2, 3]
+
+
+def test_expand_udf_row_fn_matches_vectorized(db):
+    def vec_body(k):
+        counts = (k % 3).astype(np.int64)
+        parent = np.repeat(np.arange(len(k)), counts)
+        offs = np.concatenate([[0], np.cumsum(counts)])[:-1]
+        within = np.arange(counts.sum()) - np.repeat(offs, counts)
+        return parent, {"e": k[parent] * 10 + within}
+
+    vec = O.ExpandUDF(O.Source("t"), cols=["k"], out_cols=["e"],
+                      fn=vec_body, name="ev")
+    row = O.ExpandUDF(O.Source("t"), cols=["k"], out_cols=["e"],
+                      row_fn=lambda k: [{"e": k * 10 + j} for j in range(k % 3)],
+                      name="er")
+    o1, o2 = run(db, vec), run(db, row)
+    assert o1["e"].tolist() == o2["e"].tolist()
+    # parent pass-through columns repeat correctly (k=2 expands twice)
+    assert o1["k"].tolist() == o2["k"].tolist()
+
+
+def test_opaque_udf_fresh_rids(db):
+    node = O.OpaqueUDF(
+        O.Source("t"), lambda t: {"k": np.unique(t.cols["k"])},
+        out_schema=["k"], name="uniq")
+    out = run(db, node)
+    assert out["k"].tolist() == [1, 2, 3]
+    assert out.rids().tolist() == [0, 1, 2]

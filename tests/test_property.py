@@ -122,14 +122,22 @@ def full_catalog_desc(draw):
 
 
 @st.composite
-def full_ops_strategy(draw):
+def full_ops_strategy(draw, with_udfs: bool = False):
     """Random op descriptor list: optional leading window (dense-index
-    contract), 0-3 body ops, then a reshaping/aggregating terminal."""
+    contract), 0-3 body ops, then a reshaping/aggregating terminal.  With
+    ``with_udfs`` the body also draws annotated UDF nodes (MapUDF /
+    FilterUDF / ExpandUDF) and the terminal may be an OpaqueUDF or a
+    group-by over a UDF output column."""
     ops = []
     if draw(st.booleans()):
         ops.append(["window", draw(st.integers(2, 4))])
-    body = st.sampled_from(["filter", "rowtransform", "join", "rowexpand",
-                            "groupedmap", "union", "intersect"])
+    kinds = ["filter", "rowtransform", "join", "rowexpand",
+             "groupedmap", "union", "intersect"]
+    if with_udfs:
+        kinds += ["map_udf", "map_udf_1to1", "filter_udf", "filter_udf_rowfn",
+                  "expand_udf"]
+    body = st.sampled_from(kinds)
+    have_m = have_e = False
     for _ in range(draw(st.integers(0, 3))):
         kind = draw(body)
         if kind == "filter":
@@ -144,9 +152,24 @@ def full_ops_strategy(draw):
                         draw(st.integers(5, 40))])
         elif kind == "intersect":
             ops.append(["intersect", draw(st.integers(0, 40))])
+        elif kind in ("map_udf", "map_udf_1to1"):
+            ops.append([kind, draw(st.integers(2, 5))])
+            have_m = True
+        elif kind in ("filter_udf", "filter_udf_rowfn"):
+            ops.append([kind, draw(st.integers(2, 4))])
+        elif kind == "expand_udf":
+            ops.append(["expand_udf", draw(st.integers(2, 4))])
+            have_e = True
         else:
             ops.append([kind])
-    terminal = draw(st.sampled_from(["groupby", "pivot", "unpivot", "none"]))
+    terminals = ["groupby", "pivot", "unpivot", "none"]
+    if with_udfs:
+        terminals.append("opaque_udf")
+        if have_m:
+            terminals.append("groupby_m")
+        if have_e:
+            terminals.append("groupby_e")
+    terminal = draw(st.sampled_from(terminals))
     if terminal == "groupby":
         ops.append(["groupby", draw(st.sampled_from(["sum", "count", "min", "max"]))])
         if draw(st.booleans()):
@@ -157,6 +180,12 @@ def full_ops_strategy(draw):
         ops.append(["unpivot"])
         if draw(st.booleans()):
             ops.append(["groupby_val", draw(st.sampled_from(["sum", "count"]))])
+    elif terminal == "opaque_udf":
+        ops.append(["opaque_udf"])
+        if draw(st.booleans()):
+            ops.append(["groupby", draw(st.sampled_from(["sum", "count"]))])
+    elif terminal in ("groupby_m", "groupby_e"):
+        ops.append([terminal, draw(st.sampled_from(["sum", "count"]))])
     return ops
 
 
@@ -168,6 +197,22 @@ def test_full_algebra_differential(cat_desc, ops, row_seed):
     over the full operator algebra.  Shrunk failures: dump
     ``{"catalog": cat_desc, "ops": ops, "row": row_seed}`` to a JSON file
     under tests/corpus/ and commit it (replayed by test_corpus.py)."""
+    cat = build_catalog(cat_desc)
+    plan = build_plan(ops)
+    check_differential(cat, plan, row_seed, out_nonempty_only=False)
+
+
+@settings(max_examples=60, deadline=None)
+@given(cat_desc=full_catalog_desc(), ops=full_ops_strategy(with_udfs=True),
+       row_seed=st.integers(0, 10**6))
+def test_udf_algebra_differential(cat_desc, ops, row_seed):
+    """The full-algebra differential extended with annotated UDF nodes
+    (MapUDF row-preserving/one-to-one, FilterUDF vectorized + per-row,
+    ExpandUDF with k=0 rows, OpaqueUDF terminals).  Asserts the
+    superset-soundness chain precise ⊆ iterative ⊆ naive on every table
+    (inside ``check_differential``) plus precise == oracle and per-table
+    ``precise`` flags.  Shrunk failures are committed as
+    ``tests/corpus/*.json`` like the relational fuzzer's."""
     cat = build_catalog(cat_desc)
     plan = build_plan(ops)
     check_differential(cat, plan, row_seed, out_nonempty_only=False)

@@ -1,13 +1,17 @@
-"""Unit tests for per-operator pushdown rules + the symbolic verifier."""
+"""Unit tests for per-operator pushdown rules, the rule registry, and the
+symbolic verifier."""
 
 import numpy as np
 import pytest
 
 from repro.core import ops as O
 from repro.core.expr import (
-    Col, IsIn, Lit, Param, TRUE, FALSE, conjuncts, land, lor, row_selection_for,
+    Col, IsIn, LineageAnnotation, Lit, Param, TRUE, FALSE, UDFExpr, conjuncts,
+    land, lor, row_selection_for,
 )
-from repro.core.pushdown import Pushdown, pins_of
+from repro.core.pushdown import (
+    DEFAULT_REGISTRY, Push, Pushdown, PushdownRuleRegistry, pins_of,
+)
 from repro.core.verify import symbolic_check
 
 SCHEMAS = {
@@ -135,6 +139,153 @@ def test_unpivot_pushdown():
     push = pd.push_node(up, F)
     assert push.precise
     assert "or" in repr(push.gs[up.child.id]).lower()
+
+
+# --------------------------------------------------------------------------- #
+# UDF rules (annotation-driven)
+# --------------------------------------------------------------------------- #
+
+
+def test_map_udf_pass_through_atoms_push_precisely():
+    m = O.MapUDF(O.Source("r"), cols=["a", "v"], out_cols=["m"],
+                 fn=lambda a, v: (a + v) % 3, name="m1")
+    pd = _pd(m)
+    push = pd.push_node(m, Col("b").eq(Param("x")))
+    assert push.precise and not push.dropped
+    # atom on the UDF output drops; precise only under full input pins
+    push2 = pd.push_node(m, Col("m").eq(Param("y")))
+    assert not push2.precise and push2.dropped
+    Frow, _ = row_selection_for(["a", "b", "v", "m"])
+    push3 = pd.push_node(m, Frow)
+    assert push3.precise  # determining cols pinned => dropped atom determined
+
+
+def test_map_udf_one_to_one_needs_only_key_pins():
+    m = O.MapUDF(O.Source("r"), cols=["a"], out_cols=["m"],
+                 fn=lambda a: a * 13 % 7,
+                 annotation=LineageAnnotation.one_to_one("a"), name="m2")
+    pd = _pd(m)
+    F = land(Col("a").eq(Param("k")), Col("m").eq(Param("y")))
+    push = pd.push_node(m, F)
+    assert push.precise  # key pin determines the output atom
+    assert "k" in push.required
+
+
+def test_filter_udf_pushes_its_body():
+    f = O.FilterUDF(O.Source("r"), cols=["v"], fn=lambda v: v % 2 == 0,
+                    name="evens")
+    pd = _pd(f)
+    push = pd.push_node(f, Col("a").eq(Param("x")))
+    assert push.precise
+    atoms = conjuncts(push.gs[f.child.id])
+    assert any(isinstance(a, UDFExpr) for a in atoms), atoms
+
+
+def test_expand_udf_superset_without_pins():
+    e = O.ExpandUDF(O.Source("r"), cols=["a", "v"], out_cols=["e"],
+                    fn=lambda a, v: (np.arange(0), {"e": np.arange(0)}),
+                    name="ex")
+    pd = _pd(e)
+    # pass-through atom alone is NOT precise: k may be 0 for matching inputs
+    push = pd.push_node(e, Col("b").eq(Param("x")))
+    assert not push.precise
+    Frow, _ = row_selection_for(["a", "b", "v", "e"])
+    assert pd.push_node(e, Frow).precise
+
+
+def test_opaque_udf_superset_marker():
+    o = O.OpaqueUDF(O.Source("r"), lambda t: {"b": t.cols["b"]},
+                    out_schema=["b"], name="op")
+    pd = _pd(o)
+    push = pd.push_node(o, Col("b").eq(Param("x")))
+    assert push.superset and push.precise
+    assert push.gs[o.child.id] == TRUE  # whole-input lineage
+    assert push.dropped  # the atom is recorded as dropped
+
+
+# --------------------------------------------------------------------------- #
+# the rule registry
+# --------------------------------------------------------------------------- #
+
+
+class _TaggedFilter(O.Filter):
+    """Third-party operator: inherits Filter's executor but wants its own
+    pushdown rule."""
+
+
+def test_registry_custom_operator_rule():
+    reg = PushdownRuleRegistry(parent=DEFAULT_REGISTRY)
+    seen = []
+
+    def rule(pd, n, F, relaxed):
+        seen.append(type(n).__name__)
+        return Push({n.child.id: land(F, n.pred)}, True)
+
+    reg.register(_TaggedFilter, rule)
+    node = _TaggedFilter(O.Source("r"), Col("v") > 3)
+    pd = Pushdown(node, SCHEMAS, registry=reg)
+    push = pd.push_node(node, Col("a").eq(Param("x")))
+    assert push.precise and seen == ["_TaggedFilter"]
+    # parent-chain fallback: ordinary operators still resolve
+    plain = O.Filter(O.Source("r"), Col("v") > 3)
+    pd2 = Pushdown(plain, SCHEMAS, registry=reg)
+    assert pd2.push_node(plain, Col("a").eq(Param("x"))).precise
+
+
+def test_registry_subclass_inherits_base_rule():
+    node = _TaggedFilter(O.Source("r"), Col("v") > 3)
+    pd = Pushdown(node, SCHEMAS)  # default registry: falls back to Filter's
+    push = pd.push_node(node, Col("a").eq(Param("x")))
+    assert push.precise
+    assert len(conjuncts(push.gs[node.child.id])) == 2
+
+
+def test_registry_annotation_dispatch_beats_generic():
+    reg = PushdownRuleRegistry(parent=DEFAULT_REGISTRY)
+    reg.register(O.MapUDF, lambda pd, n, F, relaxed: Push(
+        {n.child.id: TRUE}, False), annotation="one_to_one")
+    keyed = O.MapUDF(O.Source("r"), cols=["a"], out_cols=["m"],
+                     fn=lambda a: a,
+                     annotation=LineageAnnotation.one_to_one("a"), name="k")
+    pd = Pushdown(keyed, SCHEMAS, registry=reg)
+    assert not pd.push_node(keyed, Col("a").eq(Param("x"))).precise
+    # a row_preserving MapUDF is untouched by the one_to_one override
+    plain = O.MapUDF(O.Source("r"), cols=["a"], out_cols=["m"],
+                     fn=lambda a: a, name="p")
+    pd2 = Pushdown(plain, SCHEMAS, registry=reg)
+    assert pd2.push_node(plain, Col("a").eq(Param("x"))).precise
+
+
+def test_registry_unknown_operator_raises():
+    class Mystery(O.Node):
+        def __init__(self, child):
+            self.child = child
+            O.Node.__post_init__(self)
+
+        @property
+        def children(self):
+            return [self.child]
+
+    reg = PushdownRuleRegistry()  # no parent, empty
+    with pytest.raises(TypeError, match="no pushdown rule registered"):
+        reg.rule_for(Mystery(O.Source("r")))
+    with pytest.raises(TypeError, match="no pushup rule registered"):
+        reg.pushup_for(Mystery(O.Source("r")))
+
+
+def test_annotation_validation():
+    with pytest.raises(ValueError):
+        LineageAnnotation("not_a_kind")
+    with pytest.raises(ValueError):
+        LineageAnnotation.one_to_one()  # key_cols required
+    ann = LineageAnnotation.one_to_one("a", "b")
+    assert ann.determines(["a", "b", "c"]) == ("a", "b")
+    assert LineageAnnotation.row_preserving().determines(["x"]) == ("x",)
+    with pytest.raises(ValueError):
+        O.MapUDF(O.Source("r"), cols=["a"], out_cols=["m"],
+                 fn=lambda a: a, annotation=LineageAnnotation.opaque())
+    with pytest.raises(ValueError):
+        O.MapUDF(O.Source("r"), cols=["a"], out_cols=["m"])  # no body
 
 
 def test_scalar_subquery_pushdown():

@@ -1,0 +1,34 @@
+"""Real-world pipeline conformance suite (see tests/real_world_cases.py).
+
+Every sampled-workload pipeline is checked differentially against naive
+recomputation across the full serving matrix the paper's UDF claim spans:
+
+  budgets {0, partial, None}  x  partitioning {off, on}
+
+Precise mode must be bit-identical to the oracle with per-table ``precise``
+flags set; degraded modes must be provably-superset (never under-
+approximate), with any still-precise-flagged table exactly the oracle set.
+"""
+
+import pytest
+
+from real_world_cases import CASES, run_case
+
+BUDGETS = [None, "partial", 0]
+PARTITIONS = [None, 4]
+
+
+@pytest.mark.parametrize("parts", PARTITIONS,
+                         ids=lambda p: "part" if p else "flat")
+@pytest.mark.parametrize("budget", BUDGETS,
+                         ids=lambda b: {None: "budget_none", 0: "budget_0",
+                                        "partial": "budget_partial"}[b])
+@pytest.mark.parametrize("case", CASES, ids=lambda c: c.name)
+def test_real_world_conformance(case, budget, parts):
+    run_case(case, budget, parts)
+
+
+def test_at_least_ten_pipelines():
+    """The paper's coverage claim needs a real corpus, not a token one."""
+    assert len(CASES) >= 10
+    assert len({c.name for c in CASES}) == len(CASES)

@@ -252,6 +252,64 @@ def test_answer_cache_hits_and_generation_invalidation(tpch_db):
     pt.close()
 
 
+class _PinnedGeneration:
+    """PredTrace wrapper with a frozen answer-generation token: models the
+    window where a budget/precision change is not accompanied by a data
+    generation change, so only the cache KEY can keep answer kinds apart."""
+
+    def __init__(self, pt):
+        self._pt = pt
+        self._gen = pt.answer_generation()
+
+    def __getattr__(self, name):
+        return getattr(self._pt, name)
+
+    def answer_generation(self):
+        return self._gen
+
+
+def test_cache_key_includes_precision_mode(tpch_db):
+    """Regression: the answer-cache key must include the pipeline's
+    effective budget/precision mode.  A superset answer cached under a tight
+    budget must never be served to a caller who restored precision (here:
+    the budget is changed and the store re-attached while the generation
+    token is pinned) — and vice versa."""
+    inner = _prep(tpch_db, "q3", store=True)
+    pt = _PinnedGeneration(inner)
+    svc = LineageService({"q3": pt}, window_s=0.001)
+
+    precise = svc.query(0, "q3", timeout=JOIN_TIMEOUT)
+    assert precise.all_precise()
+    token_before = inner.precision_token()
+
+    # tighten the budget to zero and re-plan against the same store: every
+    # stage drops, answers become flagged supersets
+    inner.budget_bytes = 0
+    inner.attach_store(inner.store)
+    assert inner.precision_token() != token_before
+    degraded = svc.query(0, "q3", timeout=JOIN_TIMEOUT)
+    # without the precision token in the key this would be a cache hit
+    # serving the PRECISE answer despite the degraded pipeline
+    assert degraded.detail.get("cache") != "hit"
+    assert not degraded.all_precise()
+    # superset soundness across the mode flip
+    for tab, rids in precise.lineage.items():
+        assert set(rids.tolist()) <= set(
+            degraded.lineage.get(tab, rids[:0]).tolist())
+
+    # the degraded answer is itself cached under the degraded token, and
+    # repeat queries hit it (never the precise entry)
+    again = svc.query(0, "q3", timeout=JOIN_TIMEOUT)
+    assert again.detail.get("cache") == "hit"
+    assert not again.all_precise()
+
+    # the service's superset accounting saw the degraded answers
+    assert svc.stats()["superset_answers"] >= 2
+    assert 0.0 < svc.stats()["superset_rate"] <= 1.0
+    svc.close()
+    inner.close()
+
+
 def test_equal_bindings_share_one_cache_entry(tpch_db):
     """Cache keys are normalized output bindings, not row indexes: a dict
     row spec equal to an indexed row's binding is the same question."""

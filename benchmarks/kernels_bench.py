@@ -23,6 +23,85 @@ from repro.kernels.pred_filter import scan_mask
 from .common import time_ms
 
 
+def _bench_batched(rng) -> List[tuple]:
+    """Batched [K, A] fused launches: K bindings answered by one launch via
+    the PallasBackend carrier, vs. K sequential numpy scans.  Per-launch
+    achieved bandwidth (column bytes read / wall-clock) is merged into
+    ``BENCH_scan.json`` for the roofline report."""
+    import json
+    from pathlib import Path
+
+    from repro.core.scan import PallasBackend
+    from repro.kernels.pred_filter import pred_filter_batch, pred_filter_batch_ref
+
+    rows: List[tuple] = []
+    report = {}
+    n = 1 << 21
+    A = 4
+    slab = rng.integers(0, 1_000_000, (A, n)).astype(np.int32)
+    atoms = ((0, 5), (1, 2), (2, 3), (3, 4))  # >= < <= >
+    be = PallasBackend(device_cutover=0, batch_cutover=0)
+    entry = be._build_entry(slab)
+    for K in (1, 8, 32):
+        thr = rng.integers(0, 1_000_000, (K, A)).astype(np.int32)
+
+        def host():
+            return [(slab[0] >= t[0]) & (slab[1] < t[1])
+                    & (slab[2] <= t[2]) & (slab[3] > t[3]) for t in thr]
+
+        be._launch(entry, atoms, thr)  # warm (jit trace)
+        t_np = time_ms(host, repeat=5)
+        t_dev = time_ms(lambda: be._launch(entry, atoms, thr), repeat=5)
+        # bytes the launch must stream: each column block read once for all
+        # K bindings (the whole point of the [K, A] operand) plus the
+        # [K, N] bool mask writeback
+        moved_bytes = slab.nbytes + K * n
+        gbps = moved_bytes / max(t_dev * 1e-3, 1e-12) / 1e9
+        ok = bool(np.array_equal(
+            np.stack(host()),
+            be._launch(entry, atoms, thr),
+        ))
+        report[f"batched_k{K}"] = {
+            "rows": n, "atoms": A, "bindings": K,
+            "numpy_ms": t_np, "device_ms": t_dev,
+            "speedup": t_np / max(t_dev, 1e-9),
+            "achieved_gbps": gbps, "identical": ok,
+        }
+        rows.append((f"kernels.batched_scan.k{K}", t_dev * 1e3,
+                     f"numpy={t_np:.2f}ms device={t_dev:.2f}ms "
+                     f"speedup={t_np / max(t_dev, 1e-9):.2f}x "
+                     f"bw={gbps:.1f}GB/s identical={ok}"))
+    # interpret-mode correctness of the batched kernel proper (zone-pruned
+    # grid vs zone-free oracle), small slice — interpret timing is meaningless
+    import jax.numpy as _jnp
+
+    from repro.kernels.pred_filter import block_bounds
+
+    head = slab[:, :8192]
+    lo, hi = block_bounds(head, 1024, tuple(range(A)))
+    thr = rng.integers(0, 1_000_000, (4, A)).astype(np.int32)
+    got = pred_filter_batch(_jnp.asarray(head), _jnp.asarray(thr), atoms,
+                            _jnp.asarray(lo), _jnp.asarray(hi),
+                            block_rows=1024, interpret=True)
+    want = pred_filter_batch_ref(_jnp.asarray(head), _jnp.asarray(thr), atoms)
+    report["pallas_interpret_ok"] = bool(np.array_equal(np.asarray(got),
+                                                        np.asarray(want)))
+    rows.append(("kernels.batched_scan.interpret", 0.0,
+                 f"pallas_interpret_ok={report['pallas_interpret_ok']}"))
+
+    # merge (not overwrite) into the shared scan report
+    out = Path("BENCH_scan.json")
+    data = {}
+    if out.exists():
+        try:
+            data = json.loads(out.read_text())
+        except ValueError:
+            data = {}
+    data["kernels.batched"] = report
+    out.write_text(json.dumps(data, indent=2, sort_keys=True))
+    return rows
+
+
 def bench_kernels() -> List[tuple]:
     rows = []
     rng = np.random.default_rng(0)
@@ -60,6 +139,8 @@ def bench_kernels() -> List[tuple]:
         rows.append((f"kernels.pred_scan.n{n}", t_np * 1e3,
                      f"numpy={t_np:.1f}ms engine={t_eng:.1f}ms jit={t_jax:.1f}ms "
                      f"pallas_interpret_ok={ok} engine_pallas_ok={eng_ok}"))
+    rows += _bench_batched(rng)
+
     # membership probe (jit path = sorted binary search, the TPU-kernel analogue)
     vals = rng.integers(0, 100_000, 1_000_000).astype(np.int32)
     vset = rng.choice(100_000, 5_000, replace=False).astype(np.int32)

@@ -1,17 +1,130 @@
-"""§Roofline: read the dry-run artifacts and emit the per-cell table."""
+"""§Roofline: dry-run artifact table + achieved-vs-peak scan bandwidth.
+
+``BENCH_roofline.json`` turns the ROADMAP's "fast as the hardware allows"
+into a gated number: the fused batched scan's achieved bandwidth (bytes
+streamed / wall-clock) against the *measured* peak of this host (memcpy
+bandwidth — a pure streaming scan can't beat memcpy), plus the XLA cost
+model's accounting and the TPU v5e HBM projection from
+``launch/roofline.py``.  CI fails when achieved < 20% of the roofline.
+"""
 
 from __future__ import annotations
 
 import json
+import time
 from pathlib import Path
-from typing import List
+from typing import Dict, List
+
+import numpy as np
 
 DRYRUN_DIR = Path(__file__).resolve().parent.parent / "experiments" / "dryrun"
+OUT_JSON = Path("BENCH_roofline.json")
+
+
+def _best_s(fn, repeat: int = 7) -> float:
+    fn()
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _host_peak_gbps(nbytes: int = 1 << 26) -> float:
+    """Measured memcpy bandwidth — the streaming roofline of this host.
+    A predicate scan reads every column byte and writes the mask; it cannot
+    move bytes faster than a straight copy does."""
+    src = np.ones(nbytes, dtype=np.uint8)
+    dst = np.empty_like(src)
+    t = _best_s(lambda: np.copyto(dst, src))
+    return 2 * nbytes / t / 1e9  # read + write
+
+
+def scan_roofline() -> Dict[str, object]:
+    """Achieved vs. peak bandwidth of the fused batched scan path."""
+    from repro.core.scan import PallasBackend
+    from repro.launch import roofline as rl
+    from repro.kernels.pred_filter.ref import pred_filter_batch_xla
+
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(3)
+    n, A = 1 << 22, 4
+    slab = rng.integers(0, 1_000_000, (A, n)).astype(np.int32)
+    atoms = ((0, 5), (1, 2), (2, 3), (3, 4))
+
+    be = PallasBackend(device_cutover=0, batch_cutover=0)
+    entry = be._build_entry(slab)
+    peak = _host_peak_gbps()
+
+    # K=1 is the pure streaming scan — that's the number the roofline gate
+    # judges.  Larger K shows where the batched launch turns compute-bound:
+    # each extra binding adds A compares per byte read, so effective
+    # bandwidth drops while per-binding latency keeps improving.
+    sweep = []
+    for K in (1, 4, 8):
+        thr = rng.integers(0, 1_000_000, (K, A)).astype(np.int32)
+        t_launch = _best_s(lambda: be._launch(entry, atoms, thr))
+        moved = slab.nbytes + K * n  # columns once + [K, N] bool mask out
+        sweep.append({
+            "bindings": K,
+            "moved_bytes": moved,
+            "launch_ms": t_launch * 1e3,
+            "per_binding_ms": t_launch * 1e3 / K,
+            "achieved_gbps": moved / t_launch / 1e9,
+            "achieved_frac": moved / t_launch / 1e9 / max(peak, 1e-9),
+        })
+    gate = sweep[0]
+
+    report: Dict[str, object] = {
+        "rows": n, "atoms": A,
+        "peak_gbps": peak,
+        "peak_source": "measured host memcpy (read+write)",
+        "sweep": sweep,
+        "achieved_gbps": gate["achieved_gbps"],
+        "achieved_frac": gate["achieved_frac"],
+        "launch_ms": gate["launch_ms"],
+        "target_met": bool(gate["achieved_frac"] >= 0.20),
+    }
+    # XLA's own accounting of the fused graph, through launch/roofline.py —
+    # the same analyzer the dry-run artifacts use
+    try:
+        thr1 = rng.integers(0, 1_000_000, (1, A)).astype(np.int32)
+        compiled = pred_filter_batch_xla.lower(
+            jnp.asarray(slab), jnp.asarray(thr1), atoms).compile()
+        r = rl.analyze(compiled, total_devices=1)
+        report["xla_cost"] = {
+            "flops": r.flops,
+            "bytes_accessed": r.bytes_accessed,
+            "memory_s_at_tpu_hbm": r.bytes_accessed / rl.HBM_BW,
+        }
+    except Exception as e:  # pragma: no cover - cost model availability
+        report["xla_cost"] = {"error": str(e)[:120]}
+    # projection: the same launch at TPU v5e HBM bandwidth
+    report["tpu_projection"] = {
+        "hbm_gbps": rl.HBM_BW / 1e9,
+        "projected_launch_ms": gate["moved_bytes"] / rl.HBM_BW * 1e3,
+    }
+    return report
 
 
 def bench_roofline() -> List[tuple]:
     rows: List[tuple] = []
+
+    scan = scan_roofline()
+    out: Dict[str, object] = {"scan_bandwidth": scan}
     summary = DRYRUN_DIR / "summary.json"
+    if summary.exists():
+        out["dryrun_summary"] = str(summary)
+    OUT_JSON.write_text(json.dumps(out, indent=2, sort_keys=True))
+    rows.append((
+        "roofline.scan_bandwidth", scan["launch_ms"] * 1e3,
+        f"achieved={scan['achieved_gbps']:.1f}GB/s "
+        f"peak={scan['peak_gbps']:.1f}GB/s frac={scan['achieved_frac']:.2f} "
+        f"target_met={scan['target_met']} -> {OUT_JSON}",
+    ))
+
     if not summary.exists():
         rows.append(("roofline.missing", 0.0,
                      "run: PYTHONPATH=src python -m repro.launch.dryrun --all --both-meshes"))

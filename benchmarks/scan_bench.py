@@ -111,6 +111,15 @@ def bench_scan_engine() -> List[tuple]:
         f"compiled_batch{BATCH}_ms": t_comp_batch,
     }
 
-    OUT_JSON.write_text(json.dumps(results, indent=2, sort_keys=True))
+    # merge: kernels_bench writes its batched-launch section into the same
+    # report file, so neither suite may clobber the other's keys
+    data = {}
+    if OUT_JSON.exists():
+        try:
+            data = json.loads(OUT_JSON.read_text())
+        except ValueError:
+            data = {}
+    data.update(results)
+    OUT_JSON.write_text(json.dumps(data, indent=2, sort_keys=True))
     rows.append(("scan_engine.json", 0.0, f"wrote {OUT_JSON}"))
     return rows

@@ -1,0 +1,230 @@
+"""Measured dispatch cutovers for the scan paths.
+
+Three dispatch decisions in the scan stack depend on machine-specific
+constant factors, not asymptotics, so hard-coding them is wrong on every
+host but the one they were tuned on:
+
+* numpy per-atom scan vs. the device-fused kernel launch (fixed launch /
+  dispatch overhead vs. better per-row throughput),
+* serial partition scan vs. thread-pool fan-out (pool round-trip overhead
+  vs. parallel speedup on the surviving rows),
+* in-situ encoded scan vs. decode-then-scan (per-atom Python + searchsorted
+  overhead vs. one amortized decode).
+
+Each is measured lazily, once per process, on tiny synthetic workloads
+(<100 ms total), cached under a lock, and overridable via environment for CI
+and tests (``PREDTRACE_DEVICE_CUTOVER``, ``PREDTRACE_PARALLEL_CUTOVER``,
+``PREDTRACE_INSITU_CUTOVER`` — integer row thresholds).
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+import time
+from typing import Callable, Optional, Sequence, Tuple
+
+import numpy as np
+
+_LOCK = threading.RLock()
+
+NEVER = 1 << 62  # cutover value meaning "the alternative path never wins"
+
+
+def _best_s(fn: Callable[[], object], repeat: int = 5) -> float:
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def measured_crossover(
+    host_fn: Callable[[int], object],
+    alt_fn: Callable[[int], object],
+    sizes: Tuple[int, int],
+    repeat: int = 5,
+) -> float:
+    """Rows at which ``alt_fn`` starts beating ``host_fn``.
+
+    Fits cost(n) = a + b*n to two timed sizes per path and solves for the
+    crossing.  Returns ``inf`` when the alternative's marginal cost is not
+    lower (it never wins), 0 when it wins even at the small size.
+    """
+    n1, n2 = sizes
+    # warm both paths (jit compiles, pool spin-up) before timing
+    host_fn(n1), alt_fn(n1), host_fn(n2), alt_fn(n2)
+    h1, h2 = _best_s(lambda: host_fn(n1), repeat), _best_s(lambda: host_fn(n2), repeat)
+    a1, a2 = _best_s(lambda: alt_fn(n1), repeat), _best_s(lambda: alt_fn(n2), repeat)
+    bh = (h2 - h1) / (n2 - n1)
+    ba = (a2 - a1) / (n2 - n1)
+    if ba >= bh:  # alternative is not cheaper per row
+        return float("inf")
+    ah, aa = h1 - bh * n1, a1 - ba * n1
+    n_star = (aa - ah) / (bh - ba)
+    return max(n_star, 0.0)
+
+
+def _env_int(name: str) -> Optional[int]:
+    v = os.environ.get(name)
+    if v is None or v == "":
+        return None
+    try:
+        return int(v)
+    except ValueError:
+        return None
+
+
+# --------------------------------------------------------------------------- #
+# device fused-scan cutover (rows x atoms work product)
+# --------------------------------------------------------------------------- #
+
+_device_cutovers: dict = {}
+
+
+def device_scan_cutover(key: str, launch: Callable[[np.ndarray, np.ndarray], np.ndarray],
+                        n_atoms: int = 4, batch: int = 1) -> int:
+    """Measured rows*atoms*batch product below which the numpy per-atom path
+    beats a fused device launch.  ``launch(slab, thr)`` must run the backend's
+    real launch path (slab [C, n] int32, thr [batch, n_atoms] int32) so the
+    measurement includes padding, upload, and readback overheads.
+    """
+    env = _env_int("PREDTRACE_DEVICE_CUTOVER")
+    if env is not None:
+        return env
+    with _LOCK:
+        if key in _device_cutovers:
+            return _device_cutovers[key]
+        rng = np.random.default_rng(11)
+        # the fused-launch crossover sits near 10^6 rows x atoms on CPU
+        # hosts; both probe sizes must bracket the linear regime around it
+        sizes = (1 << 17, 1 << 21)
+        slabs = {n: rng.integers(-1000, 1000, (n_atoms, n)).astype(np.int32) for n in sizes}
+        thr = rng.integers(-1000, 1000, (batch, n_atoms)).astype(np.int32)
+        ops = [np.greater_equal, np.less, np.greater, np.less_equal]
+
+        def host(n: int) -> np.ndarray:
+            slab = slabs[n]
+            outs = []
+            for k in range(batch):  # numpy answers a batch one binding at a time
+                m = ops[0](slab[0], thr[k, 0])
+                for j in range(1, n_atoms):
+                    m &= ops[j % len(ops)](slab[j], thr[k, j])
+                outs.append(m)
+            return outs[-1]
+
+        def dev(n: int) -> np.ndarray:
+            return launch(slabs[n], thr)
+
+        try:
+            rows = measured_crossover(host, dev, sizes)
+        except Exception:
+            rows = float("inf")
+        cut = NEVER if rows == float("inf") else int(
+            min(max(rows * n_atoms * batch * 1.25, 1 << 12), NEVER)
+        )
+        _device_cutovers[key] = cut
+        return cut
+
+
+# --------------------------------------------------------------------------- #
+# parallel fan-out cutover (total surviving rows)
+# --------------------------------------------------------------------------- #
+
+_parallel_cutovers: dict = {}
+PARALLEL_FLOOR = 16384  # never fan out below this, whatever the measurement says
+
+
+def parallel_scan_cutover(pool, workers: int) -> int:
+    """Measured total-row threshold below which serial beats pool fan-out:
+    break-even where the pool's submit/join round-trip overhead equals the
+    scan time it can save (≈ (W-1)/W of the serial cost), doubled for safety.
+    """
+    env = _env_int("PREDTRACE_PARALLEL_CUTOVER")
+    if env is not None:
+        return env
+    key = id(pool)
+    with _LOCK:
+        if key in _parallel_cutovers:
+            return _parallel_cutovers[key]
+
+        def _noop(_):
+            return None
+
+        list(pool.map(_noop, range(workers)))  # warm the pool threads
+        overhead = _best_s(lambda: list(pool.map(_noop, range(workers))))
+        n = 1 << 16
+        arr = np.arange(n, dtype=np.int64)
+        row_cost = _best_s(lambda: (arr > 5) & (arr < n)) / n
+        savable = max(1.0 - 1.0 / max(workers, 2), 0.5)
+        rows = 2.0 * overhead / max(row_cost * savable, 1e-12)
+        cut = int(min(max(rows, PARALLEL_FLOOR), 1 << 24))
+        _parallel_cutovers[key] = cut
+        return cut
+
+
+# --------------------------------------------------------------------------- #
+# in-situ vs decode-then-scan cutover (stage rows)
+# --------------------------------------------------------------------------- #
+
+_insitu_cutover: Optional[int] = None
+
+
+def insitu_scan_cutover() -> int:
+    """Measured stage-row threshold below which decode-then-scan beats the
+    in-situ encoded path (whose per-atom Python dispatch + searchsorted setup
+    dominates tiny stages).  Compares a dictionary-encoded compare against a
+    plain numpy compare on the decoded column; the decode itself is amortized
+    (stages cache their decoded table), so it is not charged here.
+    """
+    global _insitu_cutover
+    env = _env_int("PREDTRACE_INSITU_CUTOVER")
+    if env is not None:
+        return env
+    with _LOCK:
+        if _insitu_cutover is not None:
+            return _insitu_cutover
+        rng = np.random.default_rng(13)
+        sizes = (1 << 10, 1 << 16)
+        data = {}
+        for n in sizes:
+            raw = rng.integers(0, 200, n).astype(np.int64) * 10
+            values = np.unique(raw)
+            codes = np.searchsorted(values, raw).astype(np.uint16)
+            data[n] = (raw, values, codes)
+
+        def insitu(n: int) -> np.ndarray:
+            raw, values, codes = data[n]
+            # dict code-space compare: searchsorted + present check + code cmp
+            v = 550
+            lo = int(values.searchsorted(v, side="left"))
+            present = lo < len(values) and values[lo] == v
+            if present:
+                return codes == lo
+            return np.zeros(n, bool)
+
+        def decoded(n: int) -> np.ndarray:
+            raw = data[n][0]
+            return raw == 550
+
+        try:
+            rows = measured_crossover(decoded, insitu, sizes)
+        except Exception:
+            rows = float("inf")
+        # below the crossover the decoded path wins; clamp to a sane band
+        # (inf = the in-situ slope never wins -> always prefer decode)
+        if rows == float("inf"):
+            _insitu_cutover = 1 << 20
+        else:
+            _insitu_cutover = int(min(max(rows, 256), 1 << 20))
+        return _insitu_cutover
+
+
+def reset_for_tests() -> None:
+    """Drop all cached measurements (tests re-measure or use env overrides)."""
+    global _insitu_cutover
+    with _LOCK:
+        _device_cutovers.clear()
+        _parallel_cutovers.clear()
+        _insitu_cutover = None

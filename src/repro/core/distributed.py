@@ -123,12 +123,15 @@ class PartitionExecutor:
     def __init__(self, engine: Optional[ScanEngine] = None,
                  max_workers: Optional[int] = None,
                  mesh=None, mesh_axes: Tuple[str, ...] = ("pod", "data"),
-                 min_parallel_rows: int = MIN_PARALLEL_ROWS):
+                 min_parallel_rows: Optional[int] = None):
         self.engine = engine or default_engine()
         self.mesh = mesh
         self.mesh_axes = mesh_axes
         self.max_workers = max_workers
-        self.min_parallel_rows = min_parallel_rows
+        # None -> measured lazily on first fan-out decision (pool round-trip
+        # overhead vs. per-row scan cost on *this* host — core/dispatch.py);
+        # an explicit int is honored verbatim (tests pin 0 to force fan-out)
+        self._min_parallel_rows = min_parallel_rows
         self._pool: Optional[ThreadPoolExecutor] = None
         # id(table) -> (weakref, _DeviceTable); weakref eviction keeps dead
         # tables from pinning device memory
@@ -140,6 +143,26 @@ class PartitionExecutor:
         self._lock = threading.Lock()
 
     # ------------------------------------------------------------------ #
+    @property
+    def min_parallel_rows(self) -> int:
+        """Surviving-row threshold below which fan-out is not worth the pool
+        round-trip.  Measured once per executor unless set explicitly."""
+        v = self._min_parallel_rows
+        if v is None:
+            pool = self.pool()
+            if pool is None:
+                v = MIN_PARALLEL_ROWS
+            else:
+                from .dispatch import parallel_scan_cutover
+
+                v = parallel_scan_cutover(pool, pool._max_workers)
+            self._min_parallel_rows = v
+        return v
+
+    @min_parallel_rows.setter
+    def min_parallel_rows(self, v: Optional[int]) -> None:
+        self._min_parallel_rows = v
+
     def pool(self) -> Optional[ThreadPoolExecutor]:
         if self.max_workers == 0:
             return None
@@ -192,22 +215,48 @@ class PartitionExecutor:
                      binding: Dict[str, object], plan) -> np.ndarray:
         prog, alive = plan
         n = table.nrows
+        backend = self.engine.backend
+        carry = getattr(backend, "fused_carry_ok", None)
+        if carry is None:
+            # serial shortcut before any run/bounds bookkeeping: even if
+            # every surviving partition were full, selective scans far below
+            # the fan-out threshold must cost exactly the serial path
+            cap = int(np.count_nonzero(alive)) * table.part_rows
+            if self.max_workers == 0 or cap < self.min_parallel_rows:
+                return self.engine._scan_pruned(prog, table, binding, plan)
         runs = alive_runs(alive)
         if not runs:
             self.engine.record_prune(0, len(alive))
             return np.zeros(n, dtype=bool)
         pr = table.part_rows
         bounds = [(p0 * pr, min(p1 * pr, n)) for p0, p1 in runs]
-        backend = self.engine.backend
         pool = self.pool() if getattr(backend, "parallel_safe", False) else None
         total = sum(hi - lo for lo, hi in bounds)
+        # device carrier: when the backend's fused kernel can take the whole
+        # scan, launch it over the full table — the kernel's in-grid zone
+        # check re-prunes every block (a superset of the partition pruning
+        # already computed), so surviving partitions are never sliced and
+        # the per-partition jit scans disappear into one launch
+        if carry is not None and carry(prog, table, binding, total):
+            ns = int(np.count_nonzero(alive))
+            self.engine.record_prune(ns, len(alive) - ns)
+            return backend.scan(prog, table, binding)
         if pool is None or len(bounds) <= 1 or total < self.min_parallel_rows:
             # small / contiguous work: the engine's serial pruned scan picks
             # the cheapest shape (slice, gather, or full scan)
             return self.engine._scan_pruned(prog, table, binding, plan)
         ns = int(np.count_nonzero(alive))
         self.engine.record_prune(ns, len(alive) - ns)
-        mask = np.zeros(n, dtype=bool)
+        return self.fanout_bounds(prog, table, binding, bounds, pool)
+
+    def fanout_bounds(self, prog, table: Table, binding: Dict[str, object],
+                      bounds, pool) -> np.ndarray:
+        """Pool fan-out over surviving partition runs; also the hand-off
+        target of ``ScanEngine._scan_pruned`` when an engine carries this
+        executor as its ``fanout`` hook."""
+        backend = self.engine.backend
+        self.engine.stats.bump(fanout_scans=1)
+        mask = np.zeros(table.nrows, dtype=bool)
         # slices are created (and cached) serially; workers only evaluate
         subs = [self.engine.partition_slice(table, lo, hi) for lo, hi in bounds]
         results = pool.map(lambda sub: backend.scan(prog, sub, binding), subs)

@@ -306,7 +306,18 @@ class PredTrace:
             self.partition_exec = PartitionExecutor(
                 self.scan_engine, max_workers=workers, mesh=mesh
             )
-            self._scan = self.partition_exec.scan
+            if (mesh is not None or getattr(self.scan_engine.backend,
+                                            "fused_carry_ok", None) is not None):
+                # mesh sharding / device-carry backends need the executor's
+                # own dispatch on every scan
+                self._scan = self.partition_exec.scan
+            else:
+                # worker fan-out only: scans stay on the engine's serial path
+                # and hand off to the executor *inside* _scan_pruned, only
+                # when surviving work clears the measured cutover — below it
+                # the parallel configuration is cost-identical to serial
+                self.scan_engine.fanout = self.partition_exec
+                self._scan = self.scan_engine.scan
         else:
             self._scan = self.scan_engine.scan
         self.mat_plan: Optional[MaterializationPlan] = None

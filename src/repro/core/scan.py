@@ -38,6 +38,7 @@ candidate rows per binding see the remaining atoms.
 from __future__ import annotations
 
 import dataclasses
+import math
 import threading
 import weakref
 from collections import OrderedDict
@@ -526,12 +527,141 @@ class NumpyBackend:
         return _member(table.cols[a.col], vals)
 
 
+_KERNEL_MODE: Optional[str] = None
+
+INT32_MIN = -(2**31)
+INT32_MAX = 2**31 - 1
+
+# constant-outcome atoms expressible over any int32 lane: nothing is below
+# INT32_MIN, so ``< INT32_MIN`` is always False and ``>= INT32_MIN`` always True
+_FALSE_ATOM = (OPS["<"], INT32_MIN)
+_TRUE_ATOM = (OPS[">="], INT32_MIN)
+
+
+def _default_kernel_mode() -> str:
+    """``"pallas"`` when a real TPU backs jax (compiled kernel), ``"xla"``
+    elsewhere — the jitted fused graph of the same computation
+    (``kernels/pred_filter/ref.py``), which is the production device path on
+    CPU/GPU hosts; Pallas interpret mode stays a correctness-only tool."""
+    global _KERNEL_MODE
+    if _KERNEL_MODE is None:
+        try:
+            import jax
+
+            plat = jax.devices()[0].platform
+        except Exception:  # pragma: no cover - no usable jax runtime
+            plat = "cpu"
+        _KERNEL_MODE = "pallas" if plat == "tpu" else "xla"
+    return _KERNEL_MODE
+
+
+def _lane_thr(op: int, t) -> Optional[Tuple[int, int]]:
+    """Translate ``lane <op> t`` (``t`` real, lanes int32-valued) into an
+    equivalent int32 comparison.  Non-integral and out-of-range thresholds
+    shift to the enclosing integer boundary; impossible/tautological atoms
+    become the constant forms above.  Returns None only for un-orderable
+    thresholds."""
+    try:
+        t = float(t)
+    except (TypeError, ValueError, OverflowError):
+        return None
+    if t != t:  # NaN: False under every op but !=
+        return _TRUE_ATOM if op == _NE else _FALSE_ATOM
+    if t in (float("inf"), float("-inf")):
+        below = t < 0
+        if op == EQ:
+            return _FALSE_ATOM
+        if op == _NE:
+            return _TRUE_ATOM
+        if op in (_LT, _LE):
+            return _FALSE_ATOM if below else _TRUE_ATOM
+        return _TRUE_ATOM if below else _FALSE_ATOM
+    if t.is_integer():
+        ti = int(t)
+        if INT32_MIN <= ti <= INT32_MAX:
+            return (op, ti)
+        below = ti < INT32_MIN
+        if op == EQ:
+            return _FALSE_ATOM
+        if op == _NE:
+            return _TRUE_ATOM
+        if op in (_LT, _LE):
+            return _FALSE_ATOM if below else _TRUE_ATOM
+        return _TRUE_ATOM if below else _FALSE_ATOM
+    # non-integral: lane < t  <=>  lane < floor(t)+1 ; lane > t <=> lane >= floor(t)+1
+    ti = math.floor(t) + 1
+    if op == EQ:
+        return _FALSE_ATOM
+    if op == _NE:
+        return _TRUE_ATOM
+    code = _LT if op in (_LT, _LE) else _GE
+    if ti > INT32_MAX:
+        return _TRUE_ATOM if code == _LT else _FALSE_ATOM
+    if ti < INT32_MIN:
+        return _FALSE_ATOM if code == _LT else _TRUE_ATOM
+    return (code, ti)
+
+
+def _skipped_blocks(static_atoms, lo: np.ndarray, hi: np.ndarray,
+                    thr: np.ndarray) -> int:
+    """Host-side mirror of the kernel's in-grid zone check (stats only):
+    grid blocks no binding can match, which the launch early-outs."""
+    alive = np.ones((thr.shape[0], lo.shape[1]), dtype=bool)
+    for j, (_, op) in enumerate(static_atoms):
+        l, h = lo[j][None, :], hi[j][None, :]
+        t = thr[:, j][:, None]
+        if op == EQ:
+            a = (l <= t) & (t <= h)
+        elif op == _NE:
+            a = ~((l == h) & (l == t))
+        elif op == _LT:
+            a = l < t
+        elif op == _LE:
+            a = l <= t
+        elif op == _GT:
+            a = h > t
+        else:
+            a = h >= t
+        alive &= a
+    return int((~alive.any(axis=0)).sum())
+
+
+class _KernelSlab:
+    """Device-resident launch operands for one (table, column-set): the
+    padded int32 slab uploaded once, plus per-block min/max bounds the
+    batched kernel prunes against in-grid."""
+
+    __slots__ = ("dev", "lo", "hi", "n")
+
+    def __init__(self, dev, lo: np.ndarray, hi: np.ndarray, n: int):
+        self.dev = dev
+        self.lo = lo
+        self.hi = hi
+        self.n = n
+
+
 class PallasBackend(NumpyBackend):
-    """Fast path: comparison atoms run on the fused ``pred_filter`` Pallas
-    scan over an int32 columnar slab; ``IN`` atoms run on the ``membership``
-    probe kernel.  Atoms outside the int32 fragment (float columns,
-    non-integral thresholds, residuals) fall back to the NumPy oracle —
-    correctness never depends on the kernel fragment."""
+    """Device carrier for predicate scans.
+
+    Comparison atoms in the int32 fragment run through the fused
+    ``kernels/pred_filter`` batched kernel over a device-resident columnar
+    slab (uploaded once per table/column-set, with per-block zone bounds
+    fused into the launch); ``IN`` atoms run on the ``membership`` probe.
+    Atoms outside the fragment (float columns, non-integral thresholds,
+    residuals) fall back to the NumPy oracle — correctness never depends on
+    the kernel fragment.
+
+    ``interpret=None`` (default) resolves the execution mode per host:
+    compiled Pallas on TPU, the jitted XLA graph of the same fused
+    computation elsewhere, with a *measured* rows x atoms cutover below
+    which the plain numpy path wins (``core/dispatch.py``).  Passing
+    ``interpret`` explicitly forces Pallas (interpret or compiled) with no
+    cutover — the correctness-testing configuration.
+
+    Encoded ``StoredTable`` stages scan in situ on device via
+    :meth:`scan_stored`: dictionary / frame-of-reference / bitpacked columns
+    upload as int32 *code* slabs and thresholds are translated into code
+    space, so no decode happens on the scan path."""
 
     name = "pallas"
 
@@ -543,27 +673,101 @@ class PallasBackend(NumpyBackend):
     # executor falls back to serial per-partition scans on this backend
     parallel_safe = False
 
-    def __init__(self, interpret: bool = True, block_rows: int = 1024):
-        self.interpret = interpret
+    def __init__(self, interpret: Optional[bool] = None, block_rows: int = 1024,
+                 device_cutover: Optional[int] = None,
+                 batch_cutover: Optional[int] = None):
+        if interpret is None:
+            self.mode = _default_kernel_mode()
+            self.interpret = False
+            self._forced = False
+        else:
+            self.mode = "pallas"
+            self.interpret = bool(interpret)
+            self._forced = True  # explicit kernel request: no dispatch cutover
         self.block_rows = block_rows
-        # slab cache: id(table) -> (weakref, {cols tuple: [C, N] int32 slab})
+        self._device_cutover = device_cutover
+        self._batch_cutover = batch_cutover if batch_cutover is not None \
+            else device_cutover
+        # slab cache: id(table) -> (weakref, {cols tuple: _KernelSlab})
         self._slabs: LRUCache = LRUCache(self.SLAB_CACHE)
-        # per-(table, col) int32-representability verdict (columns are
-        # immutable, so the O(N) range check runs once, not per scan)
+        # per-(table, col) / per-encoding int32-representability verdict
+        # (columns are immutable, so the O(N) range check runs once)
         self._col_ok: LRUCache = LRUCache(self.COL_OK_CACHE)
         # guards the check-then-install on both caches: a slab entry's inner
         # {cols: slab} dict is shared state, and two unsynchronized builders
         # for one table would overwrite (lose) each other's entries
         self._lock = threading.Lock()
+        self._stats = None  # ScanStats, attached by the owning engine
+        self._bench_slabs: Dict = {}  # cutover-measurement slabs (2 tiny)
 
     def caches(self) -> Dict[str, LRUCache]:
         return {"slabs": self._slabs, "col_ok": self._col_ok}
 
+    def attach_stats(self, stats) -> None:
+        """Called by the owning ScanEngine so device launches land in its
+        ScanStats (device_scans / device_blocks_pruned / ...)."""
+        self._stats = stats
+
+    # ------------------------------------------------------------------ #
+    # measured dispatch cutover
+    # ------------------------------------------------------------------ #
+    def device_cutover_value(self) -> int:
+        """rows x atoms work product below which the numpy path wins a
+        single-binding scan (0 when the kernel mode was forced)."""
+        if self._forced:
+            return 0
+        if self._device_cutover is None:
+            from .dispatch import device_scan_cutover
+
+            self._device_cutover = device_scan_cutover(
+                f"scan:{self.mode}:{self.block_rows}", self._bench_launch,
+                n_atoms=4, batch=1)
+        return self._device_cutover
+
+    def batch_cutover_value(self) -> int:
+        """rows x atoms x bindings product below which B sequential numpy
+        scans beat one batched launch."""
+        if self._forced:
+            return 0
+        if self._batch_cutover is None:
+            from .dispatch import device_scan_cutover
+
+            self._batch_cutover = device_scan_cutover(
+                f"batch:{self.mode}:{self.block_rows}", self._bench_launch,
+                n_atoms=4, batch=8)
+        return self._batch_cutover
+
+    def _use_device(self, n: int, n_atoms: int, n_bindings: int) -> bool:
+        cut = (self.device_cutover_value() if n_bindings == 1
+               else self.batch_cutover_value())
+        return n * n_atoms * n_bindings >= cut
+
+    def _bench_launch(self, slab: np.ndarray, thr: np.ndarray) -> np.ndarray:
+        """Measurement probe for ``dispatch.device_scan_cutover``: the real
+        launch path on a synthetic slab (entry build amortized, as in real
+        scans where the slab cache is warm)."""
+        key = (id(slab), thr.shape)
+        entry = self._bench_slabs.get(key)
+        if entry is None:
+            entry = self._build_entry(slab)
+            self._bench_slabs[key] = entry
+        # op order must mirror the dispatch module's host ops: >= < > <=
+        codes = (_GE, _LT, _GT, _LE)
+        atoms = tuple((j, codes[j % 4]) for j in range(thr.shape[1]))
+        return self._launch(entry, atoms, thr, count_stats=False)
+
+    # ------------------------------------------------------------------ #
+    # table scans
+    # ------------------------------------------------------------------ #
     def scan(self, prog: AtomProgram, table: Table,
              binding: Dict[str, object]) -> np.ndarray:
         n = table.nrows
         mask = np.ones(n, dtype=bool)
         kernel_cmp, fallback_cmp = self._split_cmp(prog, table, binding)
+        if kernel_cmp and n and not self._use_device(n, len(kernel_cmp), 1):
+            # below the measured cutover the numpy path wins — keep it
+            fallback_cmp = kernel_cmp + fallback_cmp
+            kernel_cmp = []
         if kernel_cmp and n:
             mask &= self._kernel_scan(kernel_cmp, table, binding)
         for a in fallback_cmp:
@@ -575,6 +779,183 @@ class PallasBackend(NumpyBackend):
                 mask &= np.asarray(eval_np(r, table.cols, binding, n=n), bool)
         return mask
 
+    def scan_batch_fused(self, prog: AtomProgram, table: Table,
+                         bindings: Sequence[Dict[str, object]]
+                         ) -> Optional[List[np.ndarray]]:
+        """One fused launch answering every binding of a coalesced
+        ``query_batch``: thresholds become a ``[B, A]`` runtime operand, each
+        column block is read once for all B predicates, and in-grid zone
+        pruning skips blocks no binding can match.  Returns None when the
+        program leaves the kernel fragment or the batch is below the
+        measured cutover (callers keep the host batch path)."""
+        if (prog.isin_atoms or prog.residual_static is not None
+                or prog.residual_dynamic is not None or not prog.cmp_atoms
+                or not bindings):
+            return None
+        atoms = prog.cmp_atoms
+        n = table.nrows
+        if n and not self._use_device(n, len(atoms), len(bindings)):
+            return None
+        thr = np.empty((len(bindings), len(atoms)), dtype=np.int32)
+        for j, a in enumerate(atoms):
+            if a.kind == "col" or not self._int32_col(table, a.col):
+                return None
+            if a.kind == "lit":
+                t = self._kernel_value(a.rhs)
+                if t is None:
+                    return None
+                thr[:, j] = t
+            else:
+                for k, b in enumerate(bindings):
+                    t = self._kernel_value(_bind(b, a.rhs))
+                    if t is None:
+                        return None
+                    thr[k, j] = t
+        if n == 0:
+            return [np.zeros(0, dtype=bool) for _ in bindings]
+        cols = tuple(sorted({a.col for a in atoms}))
+        order = {c: i for i, c in enumerate(cols)}
+        entry = self._slab_entry(table, cols)
+        static = tuple((order[a.col], a.op) for a in atoms)
+        masks = self._launch(entry, static, thr)
+        if self._stats is not None:
+            self._stats.bump(device_batch_scans=1,
+                             device_batch_rows=len(bindings))
+        return list(masks)
+
+    # ------------------------------------------------------------------ #
+    # encoded (StoredTable) scans — in situ, on device, no decode
+    # ------------------------------------------------------------------ #
+    def scan_stored(self, prog: AtomProgram, st,
+                    binding: Dict[str, object]) -> Optional[np.ndarray]:
+        """Device mask over an encoded ``core.store.StoredTable``: encoded
+        columns upload once as int32 *code* slabs (dict codes, FoR frame
+        offsets, unpacked bits) and thresholds translate into code space, so
+        the fused kernel scans in situ.  None when any atom falls outside
+        the encoded-int32 fragment or below the cutover — the caller keeps
+        the host in-situ / decode paths."""
+        if (prog.isin_atoms or prog.residual_static is not None
+                or prog.residual_dynamic is not None or not prog.cmp_atoms):
+            return None
+        n = st.nrows
+        if not self._use_device(n, len(prog.cmp_atoms), 1):
+            return None
+        trans = []
+        for a in prog.cmp_atoms:
+            if a.kind == "col":
+                return None
+            enc = st.enc.get(a.col)
+            if enc is None or not self._stored_lane_ok(enc):
+                return None
+            v = a.rhs if a.kind == "lit" else binding.get(a.rhs, _UNBOUND)
+            if v is _UNBOUND:
+                return None  # unbound param: the fallback raises uniformly
+            ot = self._stored_thr(enc, a.op, v)
+            if ot is None:
+                return None
+            trans.append((a.col, ot[0], ot[1]))
+        if n == 0:
+            return np.zeros(0, dtype=bool)
+        cols = tuple(sorted({c for c, _, _ in trans}))
+        order = {c: i for i, c in enumerate(cols)}
+        static = tuple((order[c], op) for c, op, _ in trans)
+        thr = np.asarray([[t for _, _, t in trans]], dtype=np.int32)
+        entry = self._stored_entry(st, cols)
+        return self._launch(entry, static, thr)[0]
+
+    def _stored_lane_ok(self, enc) -> bool:
+        """Can this encoding scan as an int32 code lane?  Cached per
+        encoded-column object (immutable)."""
+        ck = ("enc", id(enc))
+        entry = self._col_ok.get(ck)
+        if entry is not None and entry[0]() is enc:
+            return entry[1]
+        kind = enc.kind
+        if kind == "plain":
+            arr = enc.values
+            ok = arr.dtype.kind in "iu" and np.abs(arr).max(initial=0) < 2**31
+        elif kind == "dict":
+            codes = enc.codes
+            ok = codes.dtype.kind in "iu" and (
+                codes.dtype.itemsize <= 2 or int(codes.max(initial=0)) < 2**31
+            ) and enc.values.dtype.kind in "iuf"
+        elif kind == "for":
+            p = enc.packed
+            ok = p.dtype.kind in "iu" and (
+                p.dtype.itemsize <= 2 or int(p.max(initial=0)) < 2**31
+            )
+        elif kind == "bitpack":
+            ok = True
+        else:  # rle / delta / scaled: no flat int32 lane
+            ok = False
+        with self._lock:
+            self._col_ok[ck] = (
+                weakref.ref(enc, lambda _, k=ck, d=self._col_ok: d.pop(k, None)),
+                ok,
+            )
+        return ok
+
+    @staticmethod
+    def _stored_lane(enc) -> np.ndarray:
+        kind = enc.kind
+        if kind == "plain":
+            return enc.values.astype(np.int32)
+        if kind == "dict":
+            return enc.codes.astype(np.int32)
+        if kind == "for":
+            return enc.packed.astype(np.int32)
+        return enc.decode().astype(np.int32)  # bitpack: 0/1 lanes
+
+    @staticmethod
+    def _stored_thr(enc, op: int, v) -> Optional[Tuple[int, int]]:
+        """``(op, threshold)`` in the encoding's code space, equivalent to
+        ``col <op> v`` over the decoded column — the same order-isomorphism
+        ``core.store`` exploits for host in-situ compares.  None when the
+        atom can't be answered in code space exactly."""
+        if v is None or _is_setlike(v):
+            return None
+        if isinstance(v, np.generic):
+            v = v.item()
+        if not isinstance(v, (bool, int, float)):
+            return None
+        kind = enc.kind
+        if kind == "dict":
+            if v != v:  # NaN
+                return _TRUE_ATOM if op == _NE else _FALSE_ATOM
+            values = enc.values
+            # NaN dictionary values sort last: order-compares that would
+            # sweep the tail in (>= / >) can't stay in code space
+            if (values.dtype.kind == "f" and len(values)
+                    and np.isnan(values[-1]) and op in (_GT, _GE)):
+                return None
+            try:
+                lo = int(values.searchsorted(v, side="left"))
+                hi = int(values.searchsorted(v, side="right"))
+            except (TypeError, ValueError):
+                return None
+            if op == EQ:
+                return (EQ, lo) if hi > lo else _FALSE_ATOM
+            if op == _NE:
+                return (_NE, lo) if hi > lo else _TRUE_ATOM
+            if op == _LT:
+                return (_LT, lo)
+            if op == _GE:
+                return (_GE, lo)
+            if op == _LE:
+                return (_LT, hi)
+            return (_GE, hi)  # _GT
+        if kind == "for":
+            if v != v:
+                return _TRUE_ATOM if op == _NE else _FALSE_ATOM
+            t = (int(v) if isinstance(v, (bool, int)) else float(v)) - enc.base
+            return _lane_thr(op, t)
+        if kind in ("plain", "bitpack"):
+            return _lane_thr(op, v)
+        return None
+
+    # ------------------------------------------------------------------ #
+    # launch plumbing
+    # ------------------------------------------------------------------ #
     def _int32_col(self, table: Table, col: str) -> bool:
         """Is a column exactly representable in the kernel's int32 lanes?
         Cached per (table, col) — the range scan runs once per table."""
@@ -596,6 +977,23 @@ class PallasBackend(NumpyBackend):
             )
         return ok
 
+    @staticmethod
+    def _kernel_value(v) -> Optional[int]:
+        """int32 kernel threshold for a binding value, or None when the
+        value leaves the fragment (sets, bools, non-integral floats, out of
+        int32 range)."""
+        if v is None or _is_setlike(v) or isinstance(v, (bool, np.bool_)):
+            return None
+        if isinstance(v, (float, np.floating)) and not float(v).is_integer():
+            return None
+        try:
+            i = int(v)
+        except (TypeError, ValueError, OverflowError):
+            return None
+        if abs(i) >= 2**31:
+            return None
+        return i
+
     def _split_cmp(self, prog, table, binding):
         kernel, fallback = [], []
         for a in prog.cmp_atoms:
@@ -605,23 +1003,35 @@ class PallasBackend(NumpyBackend):
             elif a.kind == "param" and a.rhs in binding:
                 v = binding[a.rhs]
             ok = (
-                v is not None
-                and not _is_setlike(v)
-                and not isinstance(v, (bool, np.bool_))
-                and not (isinstance(v, (float, np.floating))
-                         and not float(v).is_integer())
+                a.kind != "col"
+                and self._kernel_value(v) is not None
                 and self._int32_col(table, a.col)
-                and abs(int(v)) < 2**31
             )
             (kernel if ok else fallback).append(a)
         return kernel, fallback
 
-    def _slab(self, table: Table, cols: Tuple[str, ...]) -> np.ndarray:
+    def _build_entry(self, slab: np.ndarray) -> _KernelSlab:
+        """Pad to the block grid, compute per-block zone bounds, and upload
+        the slab — done once per (table, column-set), cached."""
+        from ..kernels.pred_filter import block_bounds
+
+        import jax.numpy as jnp
+
+        n = slab.shape[1]
+        pad = (-n) % self.block_rows
+        padded = np.pad(slab, ((0, 0), (0, pad))) if pad else slab
+        lo, hi = block_bounds(padded, self.block_rows,
+                              tuple(range(padded.shape[0])))
+        return _KernelSlab(jnp.asarray(padded), lo, hi, n)
+
+    def _slab_entry(self, table: Table, cols: Tuple[str, ...]) -> _KernelSlab:
         tk = id(table)
         entry = self._slabs.get(tk)
         if entry is not None and entry[0]() is table and cols in entry[1]:
             return entry[1][cols]
-        slab = np.stack([table.cols[c].astype(np.int32) for c in cols])
+        slab = np.stack([np.asarray(table.cols[c]).astype(np.int32)
+                         for c in cols])
+        built = self._build_entry(slab)
         with self._lock:
             entry = self._slabs.get(tk)
             if entry is None or entry[0]() is not table:
@@ -629,33 +1039,84 @@ class PallasBackend(NumpyBackend):
                 # dead tables don't pin their slabs for the engine's lifetime
                 ref = weakref.ref(table,
                                   lambda _, k=tk, d=self._slabs: d.pop(k, None))
-                self._slabs[tk] = (ref, {cols: slab})
+                self._slabs[tk] = (ref, {cols: built})
             else:
-                entry[1].setdefault(cols, slab)
-        return slab
+                entry[1].setdefault(cols, built)
+                built = entry[1][cols]
+        return built
 
-    def _kernel_scan(self, atoms: List[CmpAtom], table: Table, binding):
-        from ..kernels.pred_filter import pred_filter
+    def _stored_entry(self, st, cols: Tuple[str, ...]) -> _KernelSlab:
+        tk = ("stored", id(st))
+        entry = self._slabs.get(tk)
+        if entry is not None and entry[0]() is st and cols in entry[1]:
+            return entry[1][cols]
+        slab = np.stack([self._stored_lane(st.enc[c]) for c in cols])
+        built = self._build_entry(slab)
+        with self._lock:
+            entry = self._slabs.get(tk)
+            if entry is None or entry[0]() is not st:
+                ref = weakref.ref(st,
+                                  lambda _, k=tk, d=self._slabs: d.pop(k, None))
+                self._slabs[tk] = (ref, {cols: built})
+            else:
+                entry[1].setdefault(cols, built)
+                built = entry[1][cols]
+        return built
 
+    def _launch(self, entry: _KernelSlab, static_atoms: Tuple[Tuple[int, int], ...],
+                thr: np.ndarray, count_stats: bool = True) -> np.ndarray:
+        """Run one fused launch: ``[K, A]`` thresholds against the cached
+        slab, in-grid zone pruning from the cached block bounds.  Returns
+        ``[K, n]`` boolean masks (padding and K-rounding sliced away)."""
         import jax.numpy as jnp
 
+        from ..kernels.pred_filter import pred_filter_batch
+        from ..kernels.pred_filter.ref import pred_filter_batch_xla
+
+        K = thr.shape[0]
+        # pad K to the next power of two so jit retraces stay bounded; the
+        # duplicated rows are sliced off below
+        Kp = 1 << (K - 1).bit_length()
+        thr_pad = thr if Kp == K else np.vstack(
+            [thr, np.repeat(thr[-1:], Kp - K, axis=0)])
+        rows = [ci for ci, _ in static_atoms]
+        lo, hi = entry.lo[rows], entry.hi[rows]
+        if self.mode == "pallas":
+            out = pred_filter_batch(
+                entry.dev, jnp.asarray(thr_pad), static_atoms,
+                jnp.asarray(lo), jnp.asarray(hi),
+                block_rows=self.block_rows, interpret=self.interpret)
+        else:
+            out = pred_filter_batch_xla(entry.dev, jnp.asarray(thr_pad),
+                                        static_atoms)
+        mask = np.asarray(out)[:K, :entry.n]
+        if mask.dtype != np.bool_:
+            mask = mask != 0
+        if count_stats and self._stats is not None:
+            self._stats.bump(
+                device_scans=1,
+                device_rows=K * entry.n,
+                device_blocks_pruned=_skipped_blocks(static_atoms, lo, hi, thr),
+            )
+        return mask
+
+    def _kernel_scan(self, atoms: List[CmpAtom], table: Table, binding):
         cols = tuple(sorted({a.col for a in atoms}))
         order = {c: i for i, c in enumerate(cols)}
-        slab = self._slab(table, cols)
+        entry = self._slab_entry(table, cols)
         static = tuple((order[a.col], a.op) for a in atoms)
         thr = np.asarray(
-            [int(a.rhs if a.kind == "lit" else binding[a.rhs]) for a in atoms],
+            [[int(a.rhs if a.kind == "lit" else binding[a.rhs]) for a in atoms]],
             dtype=np.int32,
         )
-        n = slab.shape[1]
-        pad = (-n) % self.block_rows
-        padded = np.pad(slab, ((0, 0), (0, pad))) if pad else slab
-        mask = pred_filter(jnp.asarray(padded), jnp.asarray(thr), static,
-                           block_rows=self.block_rows, interpret=self.interpret)
-        return np.asarray(mask[:n]).astype(bool)
+        return self._launch(entry, static, thr)[0]
 
     def _probe_mask(self, a: IsInAtom, table: Table, binding, n) -> np.ndarray:
         vals = a.rhs if a.kind == "lit" else _bind(binding, a.rhs)
+        if self.mode != "pallas":
+            # auto mode on non-TPU hosts: the vectorized host membership is
+            # the production path (the probe kernel validates on TPU)
+            return self._isin_mask(a, table, binding, n)
         arr = np.asarray(vals)
         if (
             arr.size == 0 or n == 0
@@ -667,6 +1128,27 @@ class PallasBackend(NumpyBackend):
         from ..kernels.membership import probe
 
         return probe(table.cols[a.col], arr, interpret=self.interpret)
+
+    # ------------------------------------------------------------------ #
+    def fused_carry_ok(self, prog: AtomProgram, table: Table,
+                       binding: Dict[str, object],
+                       surviving_rows: Optional[int] = None) -> bool:
+        """Should the partition executor hand this scan to the fused kernel
+        (full-table launch, zone pruning in-grid) instead of slicing
+        surviving partitions on the host?"""
+        if not prog.cmp_atoms:
+            return False
+        kernel_cmp, _ = self._split_cmp(prog, table, binding)
+        if not kernel_cmp:
+            return False
+        n = table.nrows
+        surv = n if surviving_rows is None else surviving_rows
+        if self.mode != "pallas" and surv * 2 < n:
+            # the XLA fused graph re-reads every row (no in-grid pruning on
+            # this host); when partition pruning drops most of the table the
+            # host pruned scan wins
+            return False
+        return self._use_device(surv, len(kernel_cmp), 1)
 
 
 # --------------------------------------------------------------------------- #
@@ -687,6 +1169,23 @@ class ScanStats:
     prune_calls: int = 0
     partitions_scanned: int = 0
     partitions_pruned: int = 0
+    # device (fused-kernel) carrier: launches, rows x bindings answered, and
+    # grid blocks the in-kernel zone check early-outed
+    device_scans: int = 0
+    device_rows: int = 0
+    device_blocks_pruned: int = 0
+    # coalesced query_batch launches ([B, A] thresholds, one launch for B
+    # bindings) and the bindings they covered
+    device_batch_scans: int = 0
+    device_batch_rows: int = 0
+    # per-stage scan-path choice on encoded stores (core/store.py dispatch):
+    # device in-situ kernel / host in-situ compare / decode-then-scan
+    device_chosen: int = 0
+    insitu_chosen: int = 0
+    decode_chosen: int = 0
+    # scans the worker pool actually fanned out (surviving work cleared the
+    # measured cutover); zero means the parallel path ran serial throughout
+    fanout_scans: int = 0
     # the engine's bounded caches, registered for the stats() snapshot
     caches: Dict[str, "LRUCache"] = field(default_factory=dict, repr=False)
     # counter increments are read-modify-write; concurrent scans (the
@@ -762,6 +1261,11 @@ class ScanEngine:
         # stats.compiles stays exact (one per distinct structure).  Reads
         # stay lock-free through the LRUCache's own lock.
         self._build_lock = threading.RLock()
+        # optional PartitionExecutor: when set, _scan_pruned hands scans
+        # whose surviving work clears the executor's measured cutover to its
+        # worker pool; below it, scans take the serial path untouched (the
+        # None test is the only cost a serial engine pays)
+        self.fanout = None
         self.stats = ScanStats()
         self.stats.caches = {
             "programs": self._programs,
@@ -771,6 +1275,8 @@ class ScanEngine:
         }
         for name, cache in getattr(self.backend, "caches", lambda: {})().items():
             self.stats.caches[name] = cache
+        if hasattr(self.backend, "attach_stats"):
+            self.backend.attach_stats(self.stats)
 
     # ------------------------------------------------------------------ #
     def compile(self, pred: Expr) -> AtomProgram:
@@ -850,6 +1356,15 @@ class ScanEngine:
         pr = table.part_rows
         bounds = [(p0 * pr, min(p1 * pr, n)) for p0, p1 in runs]
         scanned = sum(hi - lo for lo, hi in bounds)
+        ex = self.fanout
+        if (ex is not None and len(bounds) > 1
+                and getattr(self.backend, "parallel_safe", False)
+                and scanned >= ex.min_parallel_rows):
+            pool = ex.pool()
+            if pool is not None:
+                ns = int(np.count_nonzero(alive))
+                self.record_prune(ns, P - ns)
+                return ex.fanout_bounds(prog, table, binding, bounds, pool)
         if n - scanned < max(n * self.MIN_SKIP_FRACTION, pr):
             # too little to skip: the vectorized full scan wins
             self.record_prune(P, 0)
@@ -892,6 +1407,10 @@ class ScanEngine:
         """B boolean masks, one scan over ``table``: equivalent to
         ``[self.scan(pred, table, b) for b in bindings]`` but with the whole
         batch answered in one vectorized pass (see :meth:`scan_batch_idx`)."""
+        masks = self._fused_batch(pred, table, bindings)
+        if masks is not None:
+            self.stats.bump(batch_scans=1, batch_rows=len(bindings))
+            return masks
         n = table.nrows
         out = []
         for idx in self.scan_batch_idx(pred, table, bindings):
@@ -899,6 +1418,27 @@ class ScanEngine:
             m[idx] = True
             out.append(m)
         return out
+
+    def _fused_batch(self, pred: Expr, table: Table,
+                     bindings: Sequence[Dict[str, object]]
+                     ) -> Optional[List[np.ndarray]]:
+        """Masks for the whole batch from one fused device launch, or None
+        when the backend / program / scale can't carry it.  Predicates with a
+        NaN-free equality atom stay on the binary-search pivot path — B tiny
+        index probes beat any full-table launch."""
+        fused = getattr(self.backend, "scan_batch_fused", None)
+        if fused is None or not bindings or not params_of(pred):
+            return None
+        prog = self.compile(pred)
+        try:
+            if any(a.op == EQ and a.kind == "param"
+                   and not _is_setlike(_bind(b, a.rhs))
+                   and not _has_nan(np.asarray(_bind(b, a.rhs)))
+                   for a in prog.param_cmp for b in bindings[:1]):
+                return None
+        except KeyError:
+            return None
+        return fused(prog, table, bindings)
 
     def scan_batch_idx(self, pred: Expr, table: Table,
                        bindings: Sequence[Dict[str, object]]) -> List[np.ndarray]:
@@ -962,6 +1502,16 @@ class ScanEngine:
             rest_eq = eq_atoms[:pivot] + eq_atoms[pivot + 1:]
             statics_pending = True  # static atoms applied per candidate
         else:
+            # no pivot to binary-search: this is the device carrier's case —
+            # one fused launch answers the whole coalesced batch ([B, A]
+            # thresholds, one column read per block for all B bindings) when
+            # the program sits in the kernel fragment and the batch clears
+            # the measured cutover
+            fused = getattr(self.backend, "scan_batch_fused", None)
+            if fused is not None:
+                masks = fused(prog, table, bindings)
+                if masks is not None:
+                    return [np.flatnonzero(m) for m in masks]
             # no usable equality: one shared pass for the static conjunction
             static_mask = np.ones(n, dtype=bool)
             for a in prog.static_cmp:

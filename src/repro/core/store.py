@@ -1126,7 +1126,6 @@ class IntermediateStore:
         proved empty are skipped, and the survivors are evaluated in
         candidate mode (per-encoding ``gather``) without decoding."""
         prog = engine.compile(pred)
-        engine.stats.bump(scans=1, insitu_scans=1)
         st = self.stages[node_id]
         binding = binding or {}
         zm = st.zone_maps
@@ -1134,8 +1133,8 @@ class IntermediateStore:
             alive = prune_zone_maps(prog, zm, binding)
             ns = int(np.count_nonzero(alive))
             P = len(alive)
-            engine.stats.bump(prune_calls=1)
             if ns == 0:
+                engine.stats.bump(scans=1, insitu_scans=1, prune_calls=1)
                 engine.record_prune(0, P)
                 return np.zeros(st.nrows, dtype=bool)
             skipped = int(zm.part_sizes()[~alive].sum())
@@ -1143,11 +1142,50 @@ class IntermediateStore:
             # ScanEngine.MIN_SKIP_FRACTION and keep the vectorized full scan
             if skipped >= max(st.nrows * ScanEngine.MIN_SKIP_FRACTION,
                               zm.part_rows):
+                engine.stats.bump(scans=1, insitu_scans=1, prune_calls=1)
                 engine.record_prune(ns, P - ns)
                 idx = rows_of_alive(alive, zm.part_rows, st.nrows)
                 return self.backend.scan_ranges(prog, st, binding, idx)
+            engine.stats.bump(prune_calls=1)
             engine.record_prune(P, 0)
+        # device carrier: encoded columns scan in situ on device as int32
+        # code slabs with code-space thresholds (no decode, zone pruning
+        # in-grid); only programs fully inside the encoded-int32 fragment
+        # qualify, so answers stay bit-identical to the host paths
+        dev = getattr(engine.backend, "scan_stored", None)
+        if dev is not None:
+            mask = dev(prog, st, binding)
+            if mask is not None:
+                engine.stats.bump(scans=1, insitu_scans=1, device_chosen=1)
+                return mask
+        # host dispatch: per-atom in-situ compares pay Python + searchsorted
+        # setup per scan, a decoded stage pays one (cached) decode — pick by
+        # stage size against the measured crossover
+        if self._prefer_decode(st, prog):
+            engine.stats.bump(scans=1, insitu_scans=1, decode_chosen=1)
+            return engine.backend.scan(prog, st.to_table(), binding)
+        engine.stats.bump(scans=1, insitu_scans=1, insitu_chosen=1)
         return self.backend.scan(prog, st, binding)
+
+    # encodings whose cmp/isin masks are O(1)-setup vectorized code compares;
+    # rle/delta/scaled pay real per-atom work, shifting the crossover up
+    _CHEAP_SCAN_KINDS = frozenset({"plain", "dict", "for", "bitpack"})
+
+    def _prefer_decode(self, st: StoredTable, prog) -> bool:
+        """Decode-then-scan beats the in-situ encoded path when the stage is
+        small (fixed per-atom overhead dominates) or already decoded (the
+        decode cost is sunk — ``to_table`` caches)."""
+        if st._table is not None:
+            return True
+        from .dispatch import insitu_scan_cutover
+
+        cut = insitu_scan_cutover()
+        cols = {a.col for a in prog.cmp_atoms}
+        cols.update(a.col for a in prog.isin_atoms)
+        kinds = {st.enc[c].kind for c in cols if c in st.enc}
+        if kinds - self._CHEAP_SCAN_KINDS:
+            cut <<= 4
+        return st.nrows <= cut
 
     # ------------------------------------------------------------------ #
     def sizes(self) -> Dict[int, int]:

@@ -10,7 +10,24 @@ Layout: a block is ``[C, BN]`` (columns x rows, int32 — dictionary codes,
 YYYYMMDD dates, or fixed-point cents).  The atom structure (which column,
 which comparison) is *static* (baked at trace time per pushed-down predicate —
 PredTrace compiles one kernel per inferred lineage plan); thresholds are a
-runtime ``[K]`` vector so re-binding ``t_o`` does NOT recompile.
+runtime operand so re-binding ``t_o`` does NOT recompile.
+
+Two entry points:
+
+* :func:`pred_filter` — the original single-binding kernel (``[K]``
+  thresholds, one per atom).
+* :func:`pred_filter_batch` — the batched carrier: thresholds are a ``[K, A]``
+  runtime operand (K target-row bindings x A atoms), the output is ``[K, N]``,
+  and **zone-map pruning is fused into the grid**: per-block min/max bounds
+  (``[A, G]`` operands, one row per atom) are checked against every binding's
+  thresholds *before* the block's columns are touched; a block no binding can
+  match early-outs via ``pl.when`` and just zeroes its output tile.  One
+  launch answers an entire coalesced ``query_batch`` — one read of each
+  column per block for all K predicates, no recompile per target.
+
+The zone bounds must genuinely bound each block's column values (build them
+with :func:`block_bounds`); pruning is then conservative by construction and
+the batched kernel is bit-identical to the zone-free reference.
 
 Atom ops: 0:== 1:!= 2:< 3:<= 4:> 5:>=
 """
@@ -18,10 +35,11 @@ Atom ops: 0:== 1:!= 2:< 3:<= 4:> 5:>=
 from __future__ import annotations
 
 import functools
-from typing import Sequence, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
 BLOCK_ROWS = 1024
@@ -42,6 +60,24 @@ def _apply_op(op_code: int, col, thr):
         return col > thr
     if op_code == 5:
         return col >= thr
+    raise ValueError(op_code)
+
+
+def _zone_alive(op_code: int, lo, hi, thr):
+    """Can *any* value in ``[lo, hi]`` satisfy ``value <op> thr``?  Exact for
+    ==/</<=/>/>=; ``!=`` prunes only provably-constant blocks (lo == hi)."""
+    if op_code == 0:
+        return jnp.logical_and(lo <= thr, thr <= hi)
+    if op_code == 1:
+        return jnp.logical_not(jnp.logical_and(lo == hi, lo == thr))
+    if op_code == 2:
+        return lo < thr
+    if op_code == 3:
+        return lo <= thr
+    if op_code == 4:
+        return hi > thr
+    if op_code == 5:
+        return hi >= thr
     raise ValueError(op_code)
 
 
@@ -77,3 +113,90 @@ def pred_filter(
         out_specs=pl.BlockSpec((block_rows,), lambda i: (i,)),
         interpret=interpret,
     )(cols, thresholds)
+
+
+# --------------------------------------------------------------------------- #
+# batched launch with in-grid zone-map pruning
+# --------------------------------------------------------------------------- #
+
+
+def _kernel_batch(cols_ref, thr_ref, lo_ref, hi_ref, out_ref, *,
+                  atoms: Tuple[Tuple[int, int], ...]):
+    """One grid step = one row block x all K bindings.
+
+    The per-block ``[lo, hi]`` bounds are checked against every binding's
+    thresholds first; bindings the bounds refute are masked out, and when
+    *no* binding survives the block's columns are never streamed through the
+    compare pipeline — the tile is just zeroed (``pl.when`` early-out)."""
+    K = thr_ref.shape[0]
+    alive = jnp.ones((K,), jnp.bool_)
+    for j, (_, op) in enumerate(atoms):
+        alive = jnp.logical_and(
+            alive, _zone_alive(op, lo_ref[j, 0], hi_ref[j, 0], thr_ref[:, j])
+        )
+    any_alive = jnp.any(alive)
+
+    @pl.when(any_alive)
+    def _eval():
+        acc = jnp.ones((K, cols_ref.shape[1]), jnp.bool_)
+        for j, (ci, op) in enumerate(atoms):
+            col = cols_ref[ci, :]  # one read per column for all K bindings
+            acc = jnp.logical_and(
+                acc, _apply_op(op, col[None, :], thr_ref[:, j][:, None])
+            )
+        out_ref[...] = jnp.logical_and(acc, alive[:, None]).astype(jnp.int32)
+
+    @pl.when(jnp.logical_not(any_alive))
+    def _skip():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+
+@functools.partial(jax.jit, static_argnames=("atoms", "block_rows", "interpret"))
+def pred_filter_batch(
+    cols: jax.Array,  # [C, N] int32 columnar slab, N % block_rows == 0
+    thresholds: jax.Array,  # [K, A] int32 — K bindings x A atoms
+    atoms: Tuple[Tuple[int, int], ...],  # static (col_idx, op_code) per atom
+    blk_lo: jax.Array,  # [A, G] int32 per-(atom, block) lower bounds
+    blk_hi: jax.Array,  # [A, G] int32 per-(atom, block) upper bounds
+    block_rows: int = BLOCK_ROWS,
+    interpret: bool = True,
+) -> jax.Array:  # [K, N] int32 masks
+    C, N = cols.shape
+    K, A = thresholds.shape
+    assert N % block_rows == 0, f"pad N={N} to a multiple of {block_rows}"
+    assert A == len(atoms) and blk_lo.shape == blk_hi.shape == (A, N // block_rows)
+    kern = functools.partial(_kernel_batch, atoms=atoms)
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((K, N), jnp.int32),
+        grid=(N // block_rows,),
+        in_specs=[
+            pl.BlockSpec((C, block_rows), lambda i: (0, i)),  # column slab
+            pl.BlockSpec((K, A), lambda i: (0, 0)),  # thresholds (all bindings)
+            pl.BlockSpec((A, 1), lambda i: (0, i)),  # this block's lo bounds
+            pl.BlockSpec((A, 1), lambda i: (0, i)),  # this block's hi bounds
+        ],
+        out_specs=pl.BlockSpec((K, block_rows), lambda i: (0, i)),
+        interpret=interpret,
+    )(cols, thresholds, blk_lo, blk_hi)
+
+
+def block_bounds(slab: np.ndarray, block_rows: int,
+                 atom_cols: Tuple[int, ...]) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-(atom, block) ``[lo, hi]`` bounds of an ``[C, N]`` int32 slab —
+    the zone operands :func:`pred_filter_batch` prunes against.  One
+    ``reduceat`` pass per referenced column, computed once per cached slab."""
+    C, N = slab.shape
+    assert N % block_rows == 0
+    starts = np.arange(0, N, block_rows)
+    lo = np.empty((len(atom_cols), len(starts)), np.int32)
+    hi = np.empty_like(lo)
+    per_col = {}
+    for j, ci in enumerate(atom_cols):
+        if ci not in per_col:
+            per_col[ci] = (
+                np.minimum.reduceat(slab[ci], starts),
+                np.maximum.reduceat(slab[ci], starts),
+            )
+        lo[j], hi[j] = per_col[ci]
+    return lo, hi

@@ -1,19 +1,54 @@
-"""Pure-jnp oracle for the fused predicate scan."""
+"""Pure-jnp oracles for the fused predicate scan.
+
+``pred_filter_batch_ref`` takes no zone operands on purpose: the batched
+kernel's in-grid pruning only skips blocks its (data-derived) bounds prove
+empty, so kernel-with-zones must be bit-identical to this zone-free oracle —
+that identity is what the differential suite asserts.  Jitted, this oracle is
+also the production fused scan graph on hosts without a TPU (the same
+computation the Pallas kernel implements on device).
+"""
 
 from __future__ import annotations
 
 from typing import Sequence, Tuple
 
+import jax
 import jax.numpy as jnp
+
+
+def _cmp(col, t, op: int):
+    return [col == t, col != t, col < t, col <= t, col > t, col >= t][op]
 
 
 def pred_filter_ref(cols, thresholds, atoms: Tuple[Tuple[int, int], ...]):
     acc = jnp.ones((cols.shape[1],), jnp.bool_)
     for j, (ci, op) in enumerate(atoms):
-        col = cols[ci]
-        t = thresholds[j]
-        cmp = [
-            col == t, col != t, col < t, col <= t, col > t, col >= t,
-        ][op]
-        acc = jnp.logical_and(acc, cmp)
+        acc = jnp.logical_and(acc, _cmp(cols[ci], thresholds[j], op))
     return acc.astype(jnp.int32)
+
+
+def pred_filter_batch_ref(cols, thresholds, atoms: Tuple[Tuple[int, int], ...]):
+    """Batched oracle: cols [C, N], thresholds [K, A] -> [K, N] int32 masks."""
+    acc = jnp.ones((thresholds.shape[0], cols.shape[1]), jnp.bool_)
+    for j, (ci, op) in enumerate(atoms):
+        acc = jnp.logical_and(
+            acc, _cmp(cols[ci][None, :], thresholds[:, j][:, None], op)
+        )
+    return acc.astype(jnp.int32)
+
+
+def _batch_bool(cols, thresholds, atoms: Tuple[Tuple[int, int], ...]):
+    # bool output, not the kernel's int32: the mask readback is 1/4 the
+    # bytes, which decides the CPU crossover vs. numpy
+    ci, op = atoms[0]
+    acc = _cmp(cols[ci][None, :], thresholds[:, 0][:, None], op)
+    for j, (ci, op) in enumerate(atoms[1:], 1):
+        acc = jnp.logical_and(
+            acc, _cmp(cols[ci][None, :], thresholds[:, j][:, None], op)
+        )
+    return acc
+
+
+# jitted fused-scan graph — the CPU/GPU production path behind PallasBackend's
+# auto mode; cached per static atom structure, thresholds stay a runtime operand
+pred_filter_batch_xla = jax.jit(_batch_bool, static_argnames=("atoms",))

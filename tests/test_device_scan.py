@@ -1,0 +1,354 @@
+"""Differential suite for the device-native scan path.
+
+Every configuration of the ``PallasBackend`` carrier — Pallas interpret
+mode, the forced XLA device path, fused batched launches, in-grid
+zone-pruned grids, and encoded-slab (code-space) scans — must be
+bit-identical to the ``NumpyBackend`` oracle.  Correctness never depends
+on which side of a dispatch cutover a scan lands, so these tests force
+both sides.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import ScanEngine
+from repro.core.expr import Col, IsIn, Lit, Param, land, lor
+from repro.core.scan import OPS, PallasBackend
+from repro.core.store import BitPackColumn, DictColumn, FORColumn, StoredTable
+from repro.core.table import Table, partition_table
+from repro.kernels.pred_filter import (
+    block_bounds,
+    pred_filter_batch,
+    pred_filter_batch_ref,
+)
+
+N = 4096
+
+
+def _engines():
+    """(name, engine) triples: the numpy oracle, the forced XLA device path
+    (cutover 0 so even tiny tables take the device route), and compiled-
+    kernel semantics via Pallas interpret mode."""
+    return [
+        ("numpy", ScanEngine()),
+        ("xla", ScanEngine(backend="pallas", device_cutover=0)),
+        ("pallas-interpret", ScanEngine(backend="pallas", interpret=True)),
+    ]
+
+
+def _check_all(pred, table, binding):
+    want = None
+    for name, eng in _engines():
+        got = eng.scan(pred, table, binding)
+        if want is None:
+            want = got
+        else:
+            assert np.array_equal(got, want), f"{name} diverges from numpy"
+    return want
+
+
+# --------------------------------------------------------------------------- #
+# dtype sweep
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("dtype", [
+    np.int8, np.int16, np.int32, np.int64, np.uint8, np.uint16, np.bool_,
+])
+def test_integer_dtypes_identical(dtype):
+    rng = np.random.default_rng(7)
+    hi = 2 if dtype == np.bool_ else min(np.iinfo(np.dtype(dtype) if dtype
+                                         != np.bool_ else np.int8).max, 500)
+    a = rng.integers(0, hi, N).astype(dtype)
+    k = rng.integers(0, 100, N).astype(np.int32)
+    t = Table({"a": a, "k": k}, {}, "t")
+    pred = land(Col("a") >= Param("p"), Col("k") < Lit(80))
+    _check_all(pred, t, {"p": int(hi) // 2})
+    # equality + inequality through the method spelling (== on Expr is
+    # structural, not columnar)
+    pred2 = land(Col("a").eq(Param("p")), Col("k").ne(Lit(3)))
+    _check_all(pred2, t, {"p": 1})
+
+
+def test_float_columns_fall_back_identically():
+    rng = np.random.default_rng(8)
+    f = rng.normal(0, 100, N)
+    f[::17] = np.nan
+    k = rng.integers(0, 1000, N).astype(np.int32)
+    t = Table({"f": f, "k": k}, {}, "t")
+    pred = land(Col("f") >= Param("p"), Col("k") < Param("q"))
+    m = _check_all(pred, t, {"p": -5.5, "q": 900})
+    # NaN rows never satisfy an order comparison
+    assert not m[::17].any()
+
+
+def test_nan_and_inf_thresholds():
+    rng = np.random.default_rng(9)
+    k = rng.integers(-1000, 1000, N).astype(np.int64)
+    t = Table({"k": k}, {}, "t")
+    for p in (np.nan, np.inf, -np.inf, 0.5, -0.5, 2.0**33, -(2.0**33)):
+        for pred in (Col("k") > Param("p"), Col("k") <= Param("p"),
+                     Col("k").eq(Param("p")), Col("k").ne(Param("p"))):
+            _check_all(pred, t, {"p": p})
+
+
+def test_membership_atoms_identical():
+    rng = np.random.default_rng(10)
+    k = rng.integers(0, 500, N).astype(np.int32)
+    j = rng.integers(0, 100, N).astype(np.int32)
+    t = Table({"k": k, "j": j}, {}, "t")
+    vset = np.unique(rng.integers(0, 500, 40)).astype(np.int32)
+    pred = land(IsIn(Col("k"), vset.tolist()), Col("j") >= Param("p"))
+    _check_all(pred, t, {"p": 20})
+    pred_param = land(IsIn(Col("k"), Param("s")), Col("j") < Lit(90))
+    _check_all(pred_param, t, {"s": vset})
+
+
+def test_disjunction_residual_identical():
+    rng = np.random.default_rng(11)
+    a = rng.integers(0, 100, N).astype(np.int32)
+    b = rng.integers(0, 100, N).astype(np.int32)
+    t = Table({"a": a, "b": b}, {}, "t")
+    pred = lor(Col("a") < Param("p"), Col("b") >= Lit(95))
+    _check_all(pred, t, {"p": 5})
+
+
+# --------------------------------------------------------------------------- #
+# batched bindings
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("k_bindings", [1, 3, 8])
+def test_batched_bindings_match_sequential(k_bindings):
+    rng = np.random.default_rng(12)
+    a = rng.integers(0, 10_000, N).astype(np.int32)
+    b = rng.integers(0, 100, N).astype(np.int32)
+    t = Table({"a": a, "b": b}, {}, "t")
+    pred = land(Col("a") >= Param("p"), Col("b") < Param("q"))
+    # duplicates and out-of-range values on purpose: the fused [K, A]
+    # launch must answer them exactly as K separate scans would
+    base = [{"p": int(v), "q": 50 + i}
+            for i, v in enumerate(rng.integers(0, 12_000, k_bindings))]
+    if k_bindings >= 3:
+        base[1] = dict(base[0])          # duplicate binding
+        base[-1] = {"p": 10**7, "q": 0}  # empty answer
+    eng_np = ScanEngine()
+    eng_dev = ScanEngine(backend="pallas", device_cutover=0)
+    want = [np.flatnonzero(eng_np.scan(pred, t, bd)) for bd in base]
+    got = eng_dev.scan_batch_idx(pred, t, base)
+    assert len(got) == len(want)
+    for w, g in zip(want, got):
+        assert np.array_equal(w, g)
+    # and through the backend's fused hook directly
+    prog = eng_dev.compile(pred)
+    masks = eng_dev.backend.scan_batch_fused(prog, t, base)
+    assert masks is not None
+    for w, m in zip(want, masks):
+        assert np.array_equal(w, np.flatnonzero(m))
+
+
+def test_batch_fused_refuses_out_of_fragment():
+    rng = np.random.default_rng(13)
+    t = Table({"a": rng.normal(size=N), "b": rng.integers(0, 9, N).astype(np.int32)},
+              {}, "t")
+    be = PallasBackend(device_cutover=0, batch_cutover=0)
+    eng = ScanEngine(backend=be)
+    # float column: outside the int32 kernel fragment -> None, caller keeps
+    # the host batch path (which must still be correct)
+    prog = eng.compile(land(Col("a") >= Param("p"), Col("b") < Lit(5)))
+    assert be.scan_batch_fused(prog, t, [{"p": 0.25}]) is None
+    got = eng.scan_batch_idx(land(Col("a") >= Param("p"), Col("b") < Lit(5)),
+                             t, [{"p": 0.25}])
+    want = np.flatnonzero(ScanEngine().scan(
+        land(Col("a") >= Param("p"), Col("b") < Lit(5)), t, {"p": 0.25}))
+    assert np.array_equal(got[0], want)
+
+
+# --------------------------------------------------------------------------- #
+# in-grid zone pruning: the pruned kernel vs the zone-free oracle
+# --------------------------------------------------------------------------- #
+def _grid_case(kind: str, block_rows: int = 256, blocks: int = 8):
+    """Block-structured data where zone pruning is total / impossible /
+    partial, so the @pl.when early-out path is actually exercised."""
+    n = block_rows * blocks
+    base = np.repeat(np.arange(blocks) * 1000, block_rows).astype(np.int32)
+    jitter = np.tile(np.arange(block_rows) % 100, blocks).astype(np.int32)
+    col = base + jitter
+    if kind == "all":     # no block's [min, max] can satisfy col >= 10^6
+        thr = np.array([[1_000_000]], np.int32)
+    elif kind == "none":  # every block min passes col >= 0
+        thr = np.array([[0]], np.int32)
+    else:                 # only the top half of blocks can match
+        thr = np.array([[blocks // 2 * 1000]], np.int32)
+    return col.reshape(1, n), thr, block_rows
+
+
+@pytest.mark.parametrize("kind", ["all", "none", "partial"])
+def test_pruned_grid_matches_oracle(kind):
+    import jax.numpy as jnp
+
+    cols, thr, br = _grid_case(kind)
+    atoms = ((0, OPS[">="]),)
+    lo, hi = block_bounds(cols, br, (0,))
+    got = pred_filter_batch(jnp.asarray(cols), jnp.asarray(thr), atoms,
+                            jnp.asarray(lo), jnp.asarray(hi),
+                            block_rows=br, interpret=True)
+    want = pred_filter_batch_ref(jnp.asarray(cols), jnp.asarray(thr), atoms)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+    if kind == "all":
+        assert not np.asarray(got).any()
+
+
+def test_pruned_grid_multi_binding_mixed_blocks():
+    import jax.numpy as jnp
+
+    cols, _, br = _grid_case("partial")
+    # bindings alive in disjoint block subsets: a block is skipped only
+    # when *no* binding can match it
+    thr = np.array([[0], [3000], [1_000_000]], np.int32)
+    atoms = ((0, OPS[">="]),)
+    lo, hi = block_bounds(cols, br, (0,))
+    got = pred_filter_batch(jnp.asarray(cols), jnp.asarray(thr), atoms,
+                            jnp.asarray(lo), jnp.asarray(hi),
+                            block_rows=br, interpret=True)
+    want = pred_filter_batch_ref(jnp.asarray(cols), jnp.asarray(thr), atoms)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+    assert not np.asarray(got)[2].any() and np.asarray(got)[0].all()
+
+
+@pytest.mark.parametrize("n", [1, 1000, 1024, 1025, 4097])
+def test_ragged_row_counts(n):
+    """Row counts off the block boundary: slab padding must never leak
+    padded rows into the answer."""
+    rng = np.random.default_rng(n)
+    a = rng.integers(-50, 50, n).astype(np.int32)
+    t = Table({"a": a}, {}, "t")
+    pred = Col("a") >= Param("p")
+    m = _check_all(pred, t, {"p": 0})
+    assert m.shape == (n,)
+
+
+def test_empty_table():
+    t = Table({"a": np.zeros(0, np.int32)}, {}, "t")
+    m = _check_all(Col("a") >= Param("p"), t, {"p": 0})
+    assert m.shape == (0,)
+
+
+# --------------------------------------------------------------------------- #
+# encoded slabs: code-space device scans over StoredTable
+# --------------------------------------------------------------------------- #
+def _stored(col: str, enc) -> StoredTable:
+    return StoredTable({col: enc}, {}, "st", enc.n, enc.n * 8)
+
+
+def _assert_stored_matches(st: StoredTable, pred, binding,
+                           expect_device: bool = True):
+    be = PallasBackend(device_cutover=0, batch_cutover=0)
+    eng = ScanEngine(backend=be)
+    prog = eng.compile(pred)
+    got = be.scan_stored(prog, st, binding)
+    want = ScanEngine().scan(pred, st.to_table(), binding)
+    if expect_device:
+        assert got is not None, "device path refused an in-fragment scan"
+        assert np.array_equal(got, want)
+    else:
+        assert got is None
+    return want
+
+
+def test_stored_dict_boundaries():
+    rng = np.random.default_rng(20)
+    vals = np.array([-7, 3, 50, 1_000_000], np.int64)
+    arr = rng.choice(vals, N)
+    st = _stored("c", DictColumn.encode(arr))
+    # present values, absent values, and between-codes thresholds across
+    # every op: the lo/hi searchsorted mapping must hit each branch
+    for v in (-7, 3, 50, 1_000_000, 4, -100, 2_000_000, 49):
+        for pred in (Col("c").eq(Param("p")), Col("c").ne(Param("p")),
+                     Col("c") < Param("p"), Col("c") <= Param("p"),
+                     Col("c") > Param("p"), Col("c") >= Param("p")):
+            _assert_stored_matches(st, pred, {"p": v})
+
+
+def test_stored_dict_nan_values_gate():
+    # NaN dictionary values sort last; >= / > would sweep the NaN tail into
+    # the code-space answer, so the device path must refuse (and the host
+    # fallback must agree with the decoded oracle)
+    arr = np.array([0.5, 1.5, np.nan, 1.5, np.nan, 0.5] * 300)
+    st = _stored("c", DictColumn.encode(arr))
+    _assert_stored_matches(st, Col("c") >= Param("p"), {"p": 1.0},
+                           expect_device=False)
+    _assert_stored_matches(st, Col("c") > Param("p"), {"p": 0.5},
+                           expect_device=False)
+    # < / <= / == / != stay answerable in code space
+    for pred in (Col("c") < Param("p"), Col("c") <= Param("p"),
+                 Col("c").eq(Param("p")), Col("c").ne(Param("p"))):
+        _assert_stored_matches(st, pred, {"p": 1.5})
+
+
+def test_stored_for_range_and_out_of_frame():
+    rng = np.random.default_rng(21)
+    arr = (rng.integers(0, 1000, N) + 10_000_000_000).astype(np.int64)
+    enc = FORColumn.encode(arr, np.uint16)
+    st = _stored("c", enc)
+    lo, hi = int(arr.min()), int(arr.max())
+    for v in (lo, hi, (lo + hi) // 2, lo - 5, hi + 5, 0, 10_000_000_000.5):
+        for pred in (Col("c") >= Param("p"), Col("c") < Param("p"),
+                     Col("c").eq(Param("p")), Col("c").ne(Param("p"))):
+            _assert_stored_matches(st, pred, {"p": v})
+
+
+def test_stored_bitpack():
+    rng = np.random.default_rng(22)
+    arr = rng.integers(0, 2, N).astype(bool)
+    st = _stored("c", BitPackColumn.encode(arr))
+    for v in (0, 1):
+        _assert_stored_matches(st, Col("c").eq(Param("p")), {"p": v})
+        _assert_stored_matches(st, Col("c") >= Param("p"), {"p": v})
+
+
+def test_stored_unbound_param_refused():
+    arr = np.arange(N, dtype=np.int64)
+    st = _stored("c", DictColumn.encode(arr % 16))
+    be = PallasBackend(device_cutover=0)
+    eng = ScanEngine(backend=be)
+    prog = eng.compile(Col("c") >= Param("p"))
+    assert be.scan_stored(prog, st, {}) is None  # fallback raises uniformly
+
+
+# --------------------------------------------------------------------------- #
+# partitioned tables through the device route
+# --------------------------------------------------------------------------- #
+def test_partition_executor_device_route_identical():
+    from repro.core.distributed import PartitionExecutor
+
+    rng = np.random.default_rng(30)
+    n = 1 << 14
+    t = Table({
+        "a": np.sort(rng.integers(0, 10_000, n)).astype(np.int32),
+        "b": rng.integers(0, 100, n).astype(np.int32),
+    }, {}, "t")
+    pt = partition_table(t, 16)
+    pred = land(Col("a") >= Param("p"), Col("b") < Lit(90))
+    eng_np = ScanEngine()
+    eng_dev = ScanEngine(backend="pallas", device_cutover=0)
+    ex_np = PartitionExecutor(eng_np, max_workers=0)
+    ex_dev = PartitionExecutor(eng_dev, max_workers=0)
+    for p in (0, 2_500, 9_990, 10**6):
+        m_np = ex_np.scan(pred, pt, {"p": p})
+        m_dev = ex_dev.scan(pred, pt, {"p": p})
+        assert np.array_equal(m_np, m_dev)
+    # the device route actually launched (not a silent numpy fallback)
+    assert eng_dev.stats.snapshot()["device_scans"] > 0
+
+
+def test_fused_carry_respects_pruning_on_host():
+    """In XLA mode (no in-grid early-out on host) the carry must refuse
+    when partition pruning would skip most of the table."""
+    be = PallasBackend(device_cutover=0)
+    eng = ScanEngine(backend=be)
+    rng = np.random.default_rng(31)
+    n = 1 << 14
+    t = Table({"a": np.sort(rng.integers(0, 10_000, n)).astype(np.int32)}, {}, "t")
+    pt = partition_table(t, 16)
+    prog = eng.compile(Col("a") >= Param("p"))
+    assert not be.fused_carry_ok(prog, pt, {"p": 9_990}, surviving_rows=n // 16)
+    assert be.fused_carry_ok(prog, pt, {"p": 0}, surviving_rows=n)

@@ -297,7 +297,9 @@ def test_concurrent_pallas_slab_cache(scan_table):
     slabs or change any answer."""
     from repro.core import PallasBackend
 
-    eng = ScanEngine(backend="pallas")
+    # device_cutover=0: force the device carrier at test scale so the slab
+    # cache is actually exercised (auto mode would route tiny tables to numpy)
+    eng = ScanEngine(backend="pallas", device_cutover=0)
     preds = [PREDS[0], PREDS[1], PREDS[9]]  # distinct kernel column sets
     want = [
         np.asarray(eval_np(p, scan_table.cols, b, n=scan_table.nrows), bool)

@@ -1,0 +1,123 @@
+"""Cost-model / explain() benchmark: estimate accuracy before and after
+online feedback.
+
+Explains a batch of lineage queries on TPC-H Q3/Q10 twice — once with the
+cost model freshly seeded from the measured dispatch cutovers, and once
+after a feedback window of plain queries has refined the per-route slopes —
+and writes ``BENCH_explain.json`` with the acceptance metrics:
+
+* ``median_err_seeded`` / ``median_err_refined`` — median absolute estimate
+  error ``|est/actual - 1|`` over recorded scan decisions whose work is
+  above the model's learning floor (tiny scans are timing-overhead noise on
+  both sides of the comparison and are reported separately).
+* ``gate_met``           — ``median_err_refined < 1.0`` (estimates within
+  2x of actuals at the median once the feedback loop has run).
+* ``identical_answers``  — ``explain()`` answers match plain ``query()``
+  answers on every explained row.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List
+
+from repro.core import Executor, PredTrace
+from repro.core.cost import WORK_FLOOR
+from repro.tpch import ALL_QUERIES
+
+from . import common
+from .common import db, lineage_sets
+
+QUERIES = ("q3", "q10")
+N_ROWS = 8
+FEEDBACK_ROUNDS = 4
+OUT_JSON = Path("BENCH_explain.json")
+
+
+def _prepared(d, plan, **kw) -> PredTrace:
+    res = Executor(d).run(plan)
+    pt = PredTrace(d, plan, **kw)
+    pt.infer(stats=res.stats)
+    pt.run()
+    return pt
+
+
+def _decision_errors(reports) -> Dict[str, List[float]]:
+    """Absolute estimate errors of recorded decisions, split at the model's
+    learning floor (below it, timings are dominated by fixed overhead)."""
+    above: List[float] = []
+    below: List[float] = []
+    for rep in reports:
+        for d in rep.scans:
+            if d.actual_s is None or d.actual_s <= 0:
+                continue
+            err = abs(d.est_s / d.actual_s - 1.0)
+            work = max((c["work"] for c in d.candidates
+                        if c["route"] == d.chosen), default=0.0)
+            (above if work >= WORK_FLOOR else below).append(err)
+    return {"above_floor": above, "below_floor": below}
+
+
+def _median(xs: List[float]):
+    if not xs:
+        return None
+    s = sorted(xs)
+    return float(s[len(s) // 2])
+
+
+def bench_explain() -> List[tuple]:
+    d = db(common.SF_MAIN)
+    rows_out: List[tuple] = []
+    per_query: Dict[str, Dict[str, object]] = {}
+    seeded_errs: List[float] = []
+    refined_errs: List[float] = []
+    identical = True
+    for qname in QUERIES:
+        plan = ALL_QUERIES[qname](d)
+        pt = _prepared(d, plan, store=True, num_partitions=32)
+        nr = min(N_ROWS, pt.exec_result.output.nrows)
+        if nr == 0:
+            continue
+        # pass 1: seed-only estimates
+        seeded_reports = [pt.explain(r) for r in range(nr)]
+        # feedback window: plain queries feed the observation loop
+        for _ in range(FEEDBACK_ROUNDS):
+            for r in range(nr):
+                pt.query(r)
+        # pass 2: refined estimates over the same rows
+        refined_reports = [pt.explain(r) for r in range(nr)]
+        for rep, r in zip(refined_reports, range(nr)):
+            if lineage_sets(rep.answer.lineage) != lineage_sets(pt.query(r).lineage):
+                identical = False
+        e0 = _decision_errors(seeded_reports)
+        e1 = _decision_errors(refined_reports)
+        seeded_errs += e0["above_floor"]
+        refined_errs += e1["above_floor"]
+        snap = pt.scan_engine.cost_model.snapshot()
+        per_query[qname] = {
+            "rows_explained": nr,
+            "median_err_seeded": _median(e0["above_floor"]),
+            "median_err_refined": _median(e1["above_floor"]),
+            "median_err_below_floor": _median(e1["below_floor"]),
+            "decisions": sum(len(r.scans) for r in refined_reports),
+            "flags": snap["flags"],
+            "identical_answers": identical,
+        }
+        m = per_query[qname]["median_err_refined"]
+        rows_out.append((f"explain.{qname}.median_err_refined",
+                         0.0, "-" if m is None else f"{m:.3f}"))
+        pt.close()
+    med_refined = _median(refined_errs)
+    summary = {
+        "median_err_seeded": _median(seeded_errs),
+        "median_err_refined": med_refined,
+        "gate_met": med_refined is not None and med_refined < 1.0,
+        "identical_answers": identical,
+        "decisions_scored": len(refined_errs),
+    }
+    OUT_JSON.write_text(json.dumps(
+        {"sf": common.SF_MAIN, "queries": per_query, "summary": summary},
+        indent=2, sort_keys=True))
+    rows_out.append(("explain.gate_met", 0.0, str(summary["gate_met"])))
+    return rows_out

@@ -25,6 +25,7 @@ def main() -> None:
     if args.seed is not None:
         common.set_seed(args.seed)
 
+    from .explain_bench import bench_explain
     from .kernels_bench import bench_kernels
     from .paper_tables import (
         bench_coverage, bench_fpr, bench_inter_opt, bench_no_inter,
@@ -53,6 +54,7 @@ def main() -> None:
         "partition": bench_partition,     # zone-map pruning + parallel scans
         "serve": bench_serve,             # concurrent service vs serial query()
         "udf": bench_udf,                 # annotation-driven UDF pushdown
+        "explain": bench_explain,         # cost-model estimate accuracy
         "roofline": bench_roofline,       # §Roofline (reads dry-run artifacts)
     }
     selected = args.only.split(",") if args.only else list(benches)

@@ -1,0 +1,137 @@
+#!/usr/bin/env python
+"""Generate docs/api.md from the public-surface docstrings.
+
+The API reference is *generated*, never hand-edited: this script introspects
+the public classes/functions of ``repro.core``, renders each signature plus
+its docstring, and writes ``docs/api.md``.  CI runs ``--check`` to fail when
+the committed file drifts from the source docstrings.
+
+  PYTHONPATH=src python scripts/gen_api_docs.py          # rewrite docs/api.md
+  PYTHONPATH=src python scripts/gen_api_docs.py --check  # CI drift gate
+"""
+
+from __future__ import annotations
+
+import argparse
+import inspect
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+
+OUT = ROOT / "docs" / "api.md"
+
+HEADER = """\
+# API reference
+
+<!-- GENERATED FILE - do not edit by hand.
+     Regenerate with: PYTHONPATH=src python scripts/gen_api_docs.py -->
+
+The public surface of `repro.core`. Everything below is importable as
+`from repro.core import <Name>`; see [architecture.md](architecture.md) for
+how the pieces fit together and [explain.md](explain.md) for the plan/cost
+reporting surface.
+"""
+
+
+def _public_surface():
+    """(section title, [objects]) pairs, in document order."""
+    from repro.core import (
+        CostModel, IntermediateStore, LineageAnswer, LineageService,
+        PlanRecorder, PlanReport, PredTrace, PushdownRuleRegistry,
+        ScanEngine, plan_materialization,
+    )
+    from repro.core.cost import Decision, default_cost_model
+
+    return [
+        ("Lineage system", [PredTrace, LineageAnswer]),
+        ("Serving layer", [LineageService]),
+        ("Scan engine", [ScanEngine]),
+        ("Intermediate store", [IntermediateStore]),
+        ("Pushdown rules", [PushdownRuleRegistry]),
+        ("Cost model and explain", [CostModel, PlanReport, PlanRecorder,
+                                    Decision, default_cost_model]),
+        ("Budget planner", [plan_materialization]),
+    ]
+
+
+def _sig(obj) -> str:
+    try:
+        return str(inspect.signature(obj))
+    except (TypeError, ValueError):
+        return "(...)"
+
+
+def _doc(obj, indent: str = "") -> str:
+    doc = inspect.getdoc(obj) or "*(undocumented)*"
+    return "\n".join(indent + ln if ln else "" for ln in doc.splitlines())
+
+
+def _render_function(fn, level: str = "##") -> list:
+    return [f"{level} `{fn.__name__}{_sig(fn)}`", "", _doc(fn), ""]
+
+
+def _render_class(cls) -> list:
+    out = [f"## `{cls.__name__}`", "", _doc(cls), ""]
+    init = cls.__dict__.get("__init__")
+    if init is not None and not isinstance(init, type(object.__init__)):
+        out += [f"### `{cls.__name__}{_sig(init)}`".replace("(self, ", "(")
+                .replace("(self)", "()"), ""]
+        doc = inspect.getdoc(init)
+        if doc and doc != inspect.getdoc(object.__init__):
+            out += [_doc(init), ""]
+    for name, member in vars(cls).items():
+        if name.startswith("_"):
+            continue
+        fn = member
+        kind = ""
+        if isinstance(member, property):
+            fn, kind = member.fget, " *(property)*"
+        elif isinstance(member, staticmethod):
+            fn, kind = member.__func__, " *(staticmethod)*"
+        elif isinstance(member, classmethod):
+            fn, kind = member.__func__, " *(classmethod)*"
+        if not callable(fn):
+            continue
+        sig = "" if isinstance(member, property) else (
+            _sig(fn).replace("(self, ", "(").replace("(self)", "()"))
+        out += [f"### `{cls.__name__}.{name}{sig}`{kind}", "", _doc(fn), ""]
+    return out
+
+
+def generate() -> str:
+    lines = [HEADER]
+    for title, objs in _public_surface():
+        lines += [f"# {title}", ""]
+        for obj in objs:
+            if inspect.isclass(obj):
+                lines += _render_class(obj)
+            else:
+                lines += _render_function(obj)
+    return "\n".join(lines).rstrip() + "\n"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 when docs/api.md is stale instead of writing")
+    args = ap.parse_args(argv)
+    text = generate()
+    if args.check:
+        current = OUT.read_text() if OUT.exists() else ""
+        if current != text:
+            sys.stderr.write(
+                "docs/api.md is stale; regenerate with "
+                "`PYTHONPATH=src python scripts/gen_api_docs.py`\n")
+            return 1
+        print("docs/api.md is up to date")
+        return 0
+    OUT.parent.mkdir(parents=True, exist_ok=True)
+    OUT.write_text(text)
+    print(f"wrote {OUT} ({len(text.splitlines())} lines)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

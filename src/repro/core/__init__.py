@@ -1,6 +1,7 @@
 # The paper's primary contribution: row-level lineage inference via predicate
 # pushdown (PredTrace).  See DESIGN.md for the module map.
 from . import ops
+from .cost import CostModel, Decision, PlanRecorder, PlanReport, default_cost_model
 from .eager import EagerExecutor, oracle_lineage_for_values
 from .executor import ExecResult, Executor
 from .expr import (
@@ -37,4 +38,5 @@ __all__ = [
     "PartitionedTable", "ZoneMaps", "partition_table", "build_zone_maps",
     "prune_zone_maps", "PartitionExecutor", "distributed_refine", "LRUCache",
     "LineageService", "LineageRequest", "DeadlineExceeded", "RequestCancelled",
+    "CostModel", "Decision", "PlanRecorder", "PlanReport", "default_cost_model",
 ]

@@ -15,6 +15,14 @@ Each is measured lazily, once per process, on tiny synthetic workloads
 (<100 ms total), cached under a lock, and overridable via environment for CI
 and tests (``PREDTRACE_DEVICE_CUTOVER``, ``PREDTRACE_PARALLEL_CUTOVER``,
 ``PREDTRACE_INSITU_CUTOVER`` — integer row thresholds).
+
+Probes are *invalidatable*: each cached measurement is a :class:`Probe`
+stamped with its wall-clock time and a confidence that decays every time the
+cost model's feedback loop reports that observed actuals disagree with the
+probe-seeded estimates by more than 3x (``core/cost.py``).  A disagreement
+(:func:`note_disagreement`) drops the probe, so the next consult re-measures
+— a probe taken while the host was under load no longer poisons every later
+decision for the life of the process.
 """
 
 from __future__ import annotations
@@ -22,13 +30,50 @@ from __future__ import annotations
 import os
 import threading
 import time
-from typing import Callable, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
 _LOCK = threading.RLock()
 
 NEVER = 1 << 62  # cutover value meaning "the alternative path never wins"
+
+
+@dataclass
+class Probe:
+    """One cached cutover measurement with provenance.
+
+    ``confidence`` starts at 1.0 for a fresh measurement and halves for each
+    prior disagreement of its family (a probe re-taken after being
+    contradicted is trusted less, so the cost model hands over to observed
+    actuals sooner); ``source`` is ``"measured"`` or ``"env"``."""
+
+    value: int
+    measured_at: float          # time.time() stamp
+    source: str                 # "measured" | "env"
+    confidence: float = 1.0
+    remeasures: int = 0         # disagreement-driven re-measurements before it
+
+    def as_dict(self) -> Dict[str, object]:
+        return {"value": self.value, "measured_at": self.measured_at,
+                "source": self.source, "confidence": self.confidence,
+                "remeasures": self.remeasures}
+
+
+# disagreement counters per probe family ("device" / "parallel" / "insitu"):
+# bumped by note_disagreement, consumed as the confidence of the next probe
+_disagreements: Dict[str, int] = {}
+
+
+def _family_confidence(kind: str) -> float:
+    return 0.5 ** _disagreements.get(kind, 0)
+
+
+def _mk_probe(kind: str, value: int, source: str = "measured") -> Probe:
+    return Probe(value=value, measured_at=time.time(), source=source,
+                 confidence=1.0 if source == "env" else _family_confidence(kind),
+                 remeasures=_disagreements.get(kind, 0))
 
 
 def _best_s(fn: Callable[[], object], repeat: int = 5) -> float:
@@ -83,16 +128,17 @@ def _env_int(name: str) -> Optional[int]:
 _device_cutovers: dict = {}
 
 
-def device_scan_cutover(key: str, launch: Callable[[np.ndarray, np.ndarray], np.ndarray],
-                        n_atoms: int = 4, batch: int = 1) -> int:
+def device_scan_probe(key: str, launch: Callable[[np.ndarray, np.ndarray], np.ndarray],
+                      n_atoms: int = 4, batch: int = 1) -> Probe:
     """Measured rows*atoms*batch product below which the numpy per-atom path
-    beats a fused device launch.  ``launch(slab, thr)`` must run the backend's
-    real launch path (slab [C, n] int32, thr [batch, n_atoms] int32) so the
-    measurement includes padding, upload, and readback overheads.
+    beats a fused device launch, as a stamped :class:`Probe`.
+    ``launch(slab, thr)`` must run the backend's real launch path (slab
+    [C, n] int32, thr [batch, n_atoms] int32) so the measurement includes
+    padding, upload, and readback overheads.
     """
     env = _env_int("PREDTRACE_DEVICE_CUTOVER")
     if env is not None:
-        return env
+        return _mk_probe("device", env, source="env")
     with _LOCK:
         if key in _device_cutovers:
             return _device_cutovers[key]
@@ -124,8 +170,15 @@ def device_scan_cutover(key: str, launch: Callable[[np.ndarray, np.ndarray], np.
         cut = NEVER if rows == float("inf") else int(
             min(max(rows * n_atoms * batch * 1.25, 1 << 12), NEVER)
         )
-        _device_cutovers[key] = cut
-        return cut
+        probe = _mk_probe("device", cut)
+        _device_cutovers[key] = probe
+        return probe
+
+
+def device_scan_cutover(key: str, launch: Callable[[np.ndarray, np.ndarray], np.ndarray],
+                        n_atoms: int = 4, batch: int = 1) -> int:
+    """Cutover value of :func:`device_scan_probe` (compat accessor)."""
+    return device_scan_probe(key, launch, n_atoms=n_atoms, batch=batch).value
 
 
 # --------------------------------------------------------------------------- #
@@ -136,14 +189,15 @@ _parallel_cutovers: dict = {}
 PARALLEL_FLOOR = 16384  # never fan out below this, whatever the measurement says
 
 
-def parallel_scan_cutover(pool, workers: int) -> int:
-    """Measured total-row threshold below which serial beats pool fan-out:
-    break-even where the pool's submit/join round-trip overhead equals the
-    scan time it can save (≈ (W-1)/W of the serial cost), doubled for safety.
+def parallel_scan_probe(pool, workers: int) -> Probe:
+    """Measured total-row threshold below which serial beats pool fan-out,
+    as a stamped :class:`Probe`: break-even where the pool's submit/join
+    round-trip overhead equals the scan time it can save (≈ (W-1)/W of the
+    serial cost), doubled for safety.
     """
     env = _env_int("PREDTRACE_PARALLEL_CUTOVER")
     if env is not None:
-        return env
+        return _mk_probe("parallel", env, source="env")
     key = id(pool)
     with _LOCK:
         if key in _parallel_cutovers:
@@ -160,28 +214,35 @@ def parallel_scan_cutover(pool, workers: int) -> int:
         savable = max(1.0 - 1.0 / max(workers, 2), 0.5)
         rows = 2.0 * overhead / max(row_cost * savable, 1e-12)
         cut = int(min(max(rows, PARALLEL_FLOOR), 1 << 24))
-        _parallel_cutovers[key] = cut
-        return cut
+        probe = _mk_probe("parallel", cut)
+        _parallel_cutovers[key] = probe
+        return probe
+
+
+def parallel_scan_cutover(pool, workers: int) -> int:
+    """Cutover value of :func:`parallel_scan_probe` (compat accessor)."""
+    return parallel_scan_probe(pool, workers).value
 
 
 # --------------------------------------------------------------------------- #
 # in-situ vs decode-then-scan cutover (stage rows)
 # --------------------------------------------------------------------------- #
 
-_insitu_cutover: Optional[int] = None
+_insitu_cutover: Optional[Probe] = None
 
 
-def insitu_scan_cutover() -> int:
+def insitu_scan_probe() -> Probe:
     """Measured stage-row threshold below which decode-then-scan beats the
     in-situ encoded path (whose per-atom Python dispatch + searchsorted setup
-    dominates tiny stages).  Compares a dictionary-encoded compare against a
-    plain numpy compare on the decoded column; the decode itself is amortized
-    (stages cache their decoded table), so it is not charged here.
+    dominates tiny stages), as a stamped :class:`Probe`.  Compares a
+    dictionary-encoded compare against a plain numpy compare on the decoded
+    column; the decode itself is amortized (stages cache their decoded
+    table), so it is not charged here.
     """
     global _insitu_cutover
     env = _env_int("PREDTRACE_INSITU_CUTOVER")
     if env is not None:
-        return env
+        return _mk_probe("insitu", env, source="env")
     with _LOCK:
         if _insitu_cutover is not None:
             return _insitu_cutover
@@ -215,16 +276,97 @@ def insitu_scan_cutover() -> int:
         # below the crossover the decoded path wins; clamp to a sane band
         # (inf = the in-situ slope never wins -> always prefer decode)
         if rows == float("inf"):
-            _insitu_cutover = 1 << 20
+            cut = 1 << 20
         else:
-            _insitu_cutover = int(min(max(rows, 256), 1 << 20))
+            cut = int(min(max(rows, 256), 1 << 20))
+        _insitu_cutover = _mk_probe("insitu", cut)
         return _insitu_cutover
 
 
+def insitu_scan_cutover() -> int:
+    """Cutover value of :func:`insitu_scan_probe` (compat accessor)."""
+    return insitu_scan_probe().value
+
+
+# --------------------------------------------------------------------------- #
+# host scan cost baseline + probe invalidation
+# --------------------------------------------------------------------------- #
+
+_host_row_cost: Optional[float] = None
+
+
+def host_row_cost() -> float:
+    """Measured seconds per row x atom of a vectorized host compare — the
+    baseline slope every cost-model route is seeded relative to
+    (``PREDTRACE_HOST_ROW_NS`` overrides, in nanoseconds per row)."""
+    global _host_row_cost
+    env = os.environ.get("PREDTRACE_HOST_ROW_NS")
+    if env:
+        try:
+            return max(float(env), 1e-3) * 1e-9
+        except ValueError:
+            pass
+    with _LOCK:
+        if _host_row_cost is None:
+            n = 1 << 16
+            arr = np.arange(n, dtype=np.int64)
+            _host_row_cost = float(
+                min(max(_best_s(lambda: arr > 5) / n, 1e-11), 1e-7)
+            )
+        return _host_row_cost
+
+
+def note_disagreement(kind: str) -> int:
+    """The cost model observed actuals persistently disagreeing (>3x) with
+    estimates seeded from this probe family (``"device"`` / ``"parallel"`` /
+    ``"insitu"``): drop the cached probe so the next consult re-measures,
+    and decay the family's confidence.  Returns the disagreement count."""
+    with _LOCK:
+        n = _disagreements.get(kind, 0) + 1
+        _disagreements[kind] = n
+        invalidate(kind)
+        return n
+
+
+def invalidate(kind: Optional[str] = None) -> None:
+    """Drop cached probes of one family (or all, ``kind=None``) so the next
+    consult re-measures under current load."""
+    global _insitu_cutover, _host_row_cost
+    with _LOCK:
+        if kind in (None, "device"):
+            _device_cutovers.clear()
+        if kind in (None, "parallel"):
+            _parallel_cutovers.clear()
+        if kind in (None, "insitu"):
+            _insitu_cutover = None
+        if kind is None:
+            _host_row_cost = None
+
+
+def probe_info() -> Dict[str, object]:
+    """Snapshot of every cached probe (value, timestamp, confidence,
+    re-measurement count) plus the per-family disagreement counters —
+    surfaced by ``LineageService.stats()`` and the explain CLI."""
+    with _LOCK:
+        out: Dict[str, object] = {
+            "device": {k: p.as_dict() for k, p in _device_cutovers.items()},
+            "parallel": {str(k): p.as_dict()
+                         for k, p in _parallel_cutovers.items()},
+            "insitu": (None if _insitu_cutover is None
+                       else _insitu_cutover.as_dict()),
+            "disagreements": dict(_disagreements),
+            "host_row_cost_s": _host_row_cost,
+        }
+    return out
+
+
 def reset_for_tests() -> None:
-    """Drop all cached measurements (tests re-measure or use env overrides)."""
-    global _insitu_cutover
+    """Drop all cached measurements and disagreement counters (tests
+    re-measure or use env overrides)."""
+    global _insitu_cutover, _host_row_cost
     with _LOCK:
         _device_cutovers.clear()
         _parallel_cutovers.clear()
         _insitu_cutover = None
+        _host_row_cost = None
+        _disagreements.clear()

@@ -211,18 +211,38 @@ class PartitionExecutor:
         return self._fanout_scan(pred, table, binding, plan)
 
     # ------------------------------------------------------------------ #
+    def parallel_ratio(self) -> float:
+        """Seeded marginal cost of the fan-out route relative to a serial
+        scan: ``1/W`` of the work per wall-second with W pool workers,
+        floored at 0.5 (matching the dispatch probe's savable fraction)."""
+        pool = self.pool()
+        workers = pool._max_workers if pool is not None else 1
+        return min(1.0 / max(workers, 2), 0.5)
+
+    def _parallel_seed(self) -> Dict[str, float]:
+        from .cost import PARALLEL_CAL_ATOMS
+
+        return {"cutover": float(self.min_parallel_rows) * PARALLEL_CAL_ATOMS,
+                "ratio": self.parallel_ratio()}
+
     def _fanout_scan(self, pred: Expr, table: PartitionedTable,
                      binding: Dict[str, object], plan) -> np.ndarray:
+        from .cost import prog_atoms
+
         prog, alive = plan
         n = table.nrows
         backend = self.engine.backend
+        cm = self.engine.cost_model
+        A = prog_atoms(prog)
         carry = getattr(backend, "fused_carry_ok", None)
         if carry is None:
             # serial shortcut before any run/bounds bookkeeping: even if
-            # every surviving partition were full, selective scans far below
-            # the fan-out threshold must cost exactly the serial path
-            cap = int(np.count_nonzero(alive)) * table.part_rows
-            if self.max_workers == 0 or cap < self.min_parallel_rows:
+            # every surviving partition were full, the fan-out estimate must
+            # lose to the serial one before any pool round-trip is worth it
+            cap = float(np.count_nonzero(alive) * table.part_rows) * A
+            if (self.max_workers == 0
+                    or cm.estimate("parallel", cap, **self._parallel_seed())
+                    >= cm.estimate("serial", cap)):
                 return self.engine._scan_pruned(prog, table, binding, plan)
         runs = alive_runs(alive)
         if not runs:
@@ -236,18 +256,39 @@ class PartitionExecutor:
         # scan, launch it over the full table — the kernel's in-grid zone
         # check re-prunes every block (a superset of the partition pruning
         # already computed), so surviving partitions are never sliced and
-        # the per-partition jit scans disappear into one launch
+        # the per-partition jit scans disappear into one launch.  The carry
+        # verdict is the backend's cost-model compare (fused_carry_ok).
         if carry is not None and carry(prog, table, binding, total):
             ns = int(np.count_nonzero(alive))
             self.engine.record_prune(ns, len(alive) - ns)
-            return backend.scan(prog, table, binding)
-        if pool is None or len(bounds) <= 1 or total < self.min_parallel_rows:
+            ch = cm.note(f"scan:{getattr(table, 'name', None) or '?'}",
+                         "device", float(total) * A,
+                         meta={"rows": int(n), "atoms": int(A),
+                               "rows_alive": int(total), "carry": True})
+            t0 = time.perf_counter()
+            mask = backend.scan(prog, table, binding)
+            ch.done(time.perf_counter() - t0)
+            return mask
+        if (pool is None or len(bounds) <= 1
+                or cm.estimate("parallel", float(total) * A,
+                               **self._parallel_seed())
+                >= min(cm.estimate("serial", float(n) * A),
+                       cm.estimate("pruned", float(total + pr) * A))):
             # small / contiguous work: the engine's serial pruned scan picks
             # the cheapest shape (slice, gather, or full scan)
             return self.engine._scan_pruned(prog, table, binding, plan)
         ns = int(np.count_nonzero(alive))
         self.engine.record_prune(ns, len(alive) - ns)
-        return self.fanout_bounds(prog, table, binding, bounds, pool)
+        ch = cm.note(f"scan:{getattr(table, 'name', None) or '?'}",
+                     "parallel", float(total) * A, meta={
+                         "rows": int(n), "atoms": int(A),
+                         "rows_alive": int(total), "alive": ns},
+                     alternatives=[("serial", float(n) * A),
+                                   ("pruned", float(total + pr) * A)])
+        t0 = time.perf_counter()
+        mask = self.fanout_bounds(prog, table, binding, bounds, pool)
+        ch.done(time.perf_counter() - t0)
+        return mask
 
     def fanout_bounds(self, prog, table: Table, binding: Dict[str, object],
                       bounds, pool) -> np.ndarray:

@@ -203,6 +203,9 @@ class LineageAnswer:
     # (iterative fallback, or an unmaterialized opaque-UDF boundary above
     # the table).  Tables absent from the dict default to precise.
     precise: Dict[str, bool] = field(default_factory=dict)
+    # full plan/cost breakdown (a repro.core.cost.PlanReport) — populated by
+    # PredTrace.explain(); plain query() leaves it None (recording off)
+    plan: Optional[object] = field(default=None, repr=False)
 
     def total_rows(self) -> int:
         return int(sum(len(v) for v in self.lineage.values()))
@@ -245,6 +248,25 @@ def _clean_binding_value(v):
 
 
 class PredTrace:
+    """The paper's end-to-end system: row-level lineage for a pipeline via
+    predicate pushdown.
+
+    Three-phase workflow::
+
+        pt = PredTrace(catalog, plan, store=True, num_partitions=64)
+        pt.infer(stats=...)   # 1. lineage inference (pushdown, Algorithm 1)
+        pt.run()              # 2. pipeline execution (+ stage materialization)
+        ans = pt.query(row)   # 3. lineage queries (Lemma 3.1 / Algorithm 3)
+
+    ``query`` returns a :class:`LineageAnswer` mapping each source table to
+    the row ids the selected output row(s) derive from; ``explain`` runs the
+    same query with plan recording on and returns the cost-model
+    :class:`~repro.core.cost.PlanReport`.  Optional knobs: a compressed
+    :class:`IntermediateStore` with a byte budget (per-table degradation to
+    the iterative/superset path), fixed-size partitioning with zone-map
+    pruning, a worker pool, or a device mesh — answers are identical under
+    every configuration."""
+
     def __init__(
         self,
         catalog: Dict[str, Table],
@@ -259,6 +281,27 @@ class PredTrace:
         parallel: Union[bool, int, None] = None,
         mesh=None,
     ):
+        """Build a lineage system for one pipeline.
+
+        Args:
+            catalog: source tables by name.
+            plan: pipeline plan (``repro.core.ops`` operator tree).
+            optimize_placement: run the Algorithm-2 placement optimizer
+                when execution stats are supplied to :meth:`infer`.
+            precise_minmax: push min/max aggregate predicates precisely
+                instead of falling back to the superset bound.
+            scan_engine: shared :class:`ScanEngine` (one is created when
+                omitted; its cost model drives every dispatch decision).
+            store: ``True`` to materialize stages into a fresh compressed
+                :class:`IntermediateStore`, or an existing store instance.
+            budget_bytes: store byte budget (``None`` = keep everything,
+                ``0`` = keep nothing — pure iterative path).
+            num_partitions / partition_rows: fixed-size partition layout
+                with zone maps; lineage scans prune partitions first.
+            parallel: fan surviving partitions over a thread pool
+                (``True`` = default size, int = worker count).
+            mesh: device mesh for sharded scans (``distrib/sharding``).
+        """
         # partitioned table runtime: with ``num_partitions``/``partition_rows``
         # every source table (and every materialized stage) is split into
         # fixed-size row chunks carrying zone maps; lineage-query scans prune
@@ -372,6 +415,19 @@ class PredTrace:
 
     # ------------------------------------------------------------------ #
     def infer(self, stats: Optional[Dict] = None) -> LineagePlan:
+        """Lineage-inference phase: run predicate pushdown (Algorithm 1,
+        plus the Algorithm-2 placement optimization when ``stats`` are
+        given) over the pipeline plan.
+
+        Args:
+            stats: optional per-node :class:`NodeStats` from a prior
+                execution (``Executor.run(...).stats``) — enables the
+                cardinality-driven placement optimizer.
+
+        Returns:
+            LineagePlan: stages to materialize plus per-source-table
+            predicates; also stored on ``self.lineage_plan``.
+        """
         t0 = time.perf_counter()
         inf = LineageInference(
             self.plan,
@@ -385,6 +441,14 @@ class PredTrace:
         return self.lineage_plan
 
     def infer_iterative(self) -> IterativePlan:
+        """Infer the iterative-refinement plan (Algorithm 3): per-table
+        scan predicates refined to a fixpoint at query time, requiring no
+        materialized intermediates.
+
+        Returns:
+            IterativePlan: refinement stages; also stored on
+            ``self.iter_plan``.
+        """
         t0 = time.perf_counter()
         self.iter_plan = IterativeInference(self.plan, self.executor.schemas()).infer()
         self.infer_seconds = time.perf_counter() - t0
@@ -415,6 +479,7 @@ class PredTrace:
                 self.lineage_plan, self.store.sizes(), budget,
                 partition_sizes=self.store.partition_sizes(),
                 prune_rates=self.store.prune_estimates(),
+                cost_model=self.scan_engine.cost_model,
             )
             if self.mat_plan.dropped:
                 self.store.evict(self.mat_plan.dropped)
@@ -446,6 +511,7 @@ class PredTrace:
             self.lineage_plan, store.sizes(), budget, unavailable=missing,
             partition_sizes=store.partition_sizes(),
             prune_rates=store.prune_estimates(),
+            cost_model=self.scan_engine.cost_model,
         )
         if self.mat_plan.dropped:
             store.evict(self.mat_plan.dropped)
@@ -609,6 +675,115 @@ class PredTrace:
             detail["superset_tables"] = sorted(superset_set)
         return LineageAnswer(lineage, time.perf_counter() - t0, detail,
                              precise={t: t not in superset_set for t in lineage})
+
+    # ------------------------------------------------------------------ #
+    def explain(self, t_o: Union[int, Dict[str, object]]) -> "PlanReport":
+        """Run ``query(t_o)`` with plan recording on and return the full
+        :class:`~repro.core.cost.PlanReport`.
+
+        The report holds, per source table, the plan alternatives the
+        engine weighs (precise scan / iterative inference / whole-input
+        superset) with their estimated costs and the chosen verdict; every
+        scan-dispatch decision made during the query (candidates considered,
+        estimated vs measured seconds, fallbacks); and the cost-model
+        summary (per-route parameters, estimate-error stats, feedback
+        flags).  Recording never changes the answer: the lineage returned
+        under ``explain`` is bit-identical to a plain ``query``.
+
+        Args:
+            t_o: output row selector — an output row index (``int``) or a
+                column-value dict, exactly as :meth:`query` takes it.
+
+        Returns:
+            PlanReport: structured plan/cost breakdown.  ``to_dict()`` /
+            ``to_json()`` are the stable serialized forms, ``pretty()`` the
+            human rendering; ``report.answer`` carries the live
+            :class:`LineageAnswer`, whose ``plan`` field points back at the
+            report.
+        """
+        from .cost import PlanRecorder
+
+        with PlanRecorder() as rec:
+            ans = self.query(t_o)
+        report = self._build_report(rec.decisions, ans)
+        report.answer = ans
+        ans.plan = report
+        return report
+
+    def _build_report(self, decisions, ans: LineageAnswer) -> "PlanReport":
+        """Assemble a :class:`~repro.core.cost.PlanReport` from one query's
+        recorded dispatch decisions plus its answer."""
+        from .cost import BASE_OVERHEAD_S, PlanReport, prog_atoms
+
+        cm = self.scan_engine.cost_model
+        superset = set(ans.detail.get("superset_tables", ()))
+        iters = int(ans.detail.get("iterations", 0))
+        preds: Dict[str, list] = {}
+        if self.lineage_plan is not None:
+            for sp in self.lineage_plan.source_preds:
+                preds.setdefault(sp.table, []).append(sp.pred)
+        tables: Dict[str, Dict[str, object]] = {}
+        for tab, rids in sorted(ans.lineage.items()):
+            t = self.catalog.get(tab)
+            n = int(t.nrows) if t is not None else 0
+            atoms = 1
+            for p in preds.get(tab, ()):
+                try:
+                    atoms = max(atoms, prog_atoms(self.scan_engine.compile(p)))
+                except (KeyError, TypeError, ValueError):
+                    pass
+            w = float(n) * atoms
+            precise_ok = tab not in superset
+            verdict = ("precise" if ans.precise.get(tab, True)
+                       else ("iterative" if iters else "superset"))
+            # iterative refinement re-scans until fixpoint: charge the
+            # observed iteration count (or the typical three passes)
+            passes = max(iters, 3)
+            alts = [
+                {"plan": "precise", "viable": precise_ok,
+                 "est_s": cm.estimate("serial", w),
+                 "chosen": verdict == "precise"},
+                {"plan": "iterative", "viable": True,
+                 "est_s": passes * cm.estimate("serial", w),
+                 "chosen": verdict == "iterative"},
+                {"plan": "superset", "viable": True,
+                 "est_s": BASE_OVERHEAD_S,
+                 "chosen": verdict == "superset"},
+            ]
+            tables[tab] = {
+                "verdict": verdict, "rows": n,
+                "lineage_rows": int(len(rids)),
+                "atoms": atoms, "alternatives": alts,
+            }
+        mp = self.mat_plan
+        pipeline = {
+            "budget_bytes": (self.budget_bytes if mp is None
+                             else mp.budget_bytes),
+            "num_partitions": self.num_partitions,
+            "partition_rows": self.partition_rows,
+            "backend": type(self.scan_engine.backend).__name__,
+            "parallel": self.partition_exec is not None,
+            "stages": (len(self.lineage_plan.stages)
+                       if self.lineage_plan is not None else 0),
+            "stages_dropped": len(mp.dropped) if mp is not None else 0,
+        }
+        routes: Dict[str, int] = {}
+        for d in decisions:
+            routes[d.chosen] = routes.get(d.chosen, 0) + 1
+        cm_snap = cm.snapshot()
+        summary = {
+            "query_seconds": float(ans.seconds),
+            "scan_decisions": len(decisions),
+            "total_est_s": float(sum(d.est_s for d in decisions)),
+            "total_actual_s": float(sum(d.actual_s or 0.0
+                                        for d in decisions)),
+            "routes": routes,
+            "estimate_error": cm.error_summary(),
+            "flags": cm_snap.get("flags", []),
+            "cost_model": cm_snap,
+        }
+        return PlanReport(pipeline=pipeline, tables=tables,
+                          scans=list(decisions), summary=summary)
 
     # ------------------------------------------------------------------ #
     def query_batch(

@@ -150,6 +150,7 @@ def plan_materialization(
     unavailable: Optional[Set[int]] = None,
     partition_sizes: Optional[Dict[int, List[int]]] = None,
     prune_rates: Optional[Dict[int, float]] = None,
+    cost_model=None,
 ) -> MaterializationPlan:
     """Choose which stages fit a byte budget (compressed, column-projected
     sizes from the store's stats pass).
@@ -167,7 +168,13 @@ def plan_materialization(
     chunks — and ``prune_rates`` (estimated zone-map prune fraction per
     stage) feeds the prune-aware ``scan_cost`` recorded on the plan: a
     heavily-prunable stage is cheap to *query* even when it is large to
-    *keep*."""
+    *keep*.
+
+    ``cost_model`` (a :class:`repro.core.cost.CostModel`) refines the
+    per-stage scan-cost estimate: bytes surviving the prune are charged at
+    the model's pruned-gather/serial slope ratio (learned online), capped at
+    the full-scan bytes, instead of the bare ``kept = size * (1 - prune)``
+    heuristic."""
     unavailable = unavailable or set()
     partition_sizes = partition_sizes or {}
     prune_rates = prune_rates or {}
@@ -178,9 +185,16 @@ def plan_materialization(
             return int(sum(parts))
         return int(sizes.get(nid, 0))
 
+    def cost_of(nid: int) -> float:
+        nb = stage_bytes(nid)
+        rate = float(prune_rates.get(nid, 0.0))
+        if cost_model is not None:
+            return cost_model.stage_scan_cost(nb, rate)
+        return nb * (1.0 - rate)
+
     partitions = {nid: len(p) for nid, p in partition_sizes.items()}
     scan_cost = {
-        nid: stage_bytes(nid) * (1.0 - float(prune_rates.get(nid, 0.0)))
+        nid: cost_of(nid)
         for nid in {s.node_id for s in lp.stages} & set(sizes)
     }
     if budget_bytes is None and not unavailable:

@@ -240,6 +240,15 @@ class PushdownRuleRegistry:
         return None
 
     def rule_for(self, node: O.Node) -> RuleFn:
+        """Pushdown rule for ``node`` (most-specific registered match).
+
+        Args:
+            node: pipeline plan operator.
+        Returns:
+            RuleFn: ``(node, pred, ctx) -> Push`` transfer function.
+        Raises:
+            TypeError: no rule registered for the node's type/annotation.
+        """
         fn = self._lookup("down", node)
         if fn is None:
             raise TypeError(
@@ -250,6 +259,15 @@ class PushdownRuleRegistry:
         return fn
 
     def pushup_for(self, node: O.Node) -> PushupFn:
+        """Pushup (output-direction) rule for ``node``.
+
+        Args:
+            node: pipeline plan operator.
+        Returns:
+            PushupFn: forward transfer function for placement optimization.
+        Raises:
+            TypeError: no pushup rule registered for the node.
+        """
         fn = self._lookup("up", node)
         if fn is None:
             raise TypeError(

@@ -40,6 +40,7 @@ from __future__ import annotations
 import dataclasses
 import math
 import threading
+import time
 import weakref
 from collections import OrderedDict
 from dataclasses import dataclass, field
@@ -672,6 +673,9 @@ class PallasBackend(NumpyBackend):
     # the slab caches make concurrent scans racy; the parallel partition
     # executor falls back to serial per-partition scans on this backend
     parallel_safe = False
+    # this backend records its own device-vs-host cost decision in scan();
+    # the engine must not double-report a "serial" decision on top
+    reports_cost = True
 
     def __init__(self, interpret: Optional[bool] = None, block_rows: int = 1024,
                  device_cutover: Optional[int] = None,
@@ -698,6 +702,9 @@ class PallasBackend(NumpyBackend):
         # for one table would overwrite (lose) each other's entries
         self._lock = threading.Lock()
         self._stats = None  # ScanStats, attached by the owning engine
+        self._cost = None  # CostModel, attached by the owning engine
+        self._device_confidence = 1.0
+        self._batch_confidence = 1.0
         self._bench_slabs: Dict = {}  # cutover-measurement slabs (2 tiny)
 
     def caches(self) -> Dict[str, LRUCache]:
@@ -708,6 +715,11 @@ class PallasBackend(NumpyBackend):
         ScanStats (device_scans / device_blocks_pruned / ...)."""
         self._stats = stats
 
+    def attach_cost(self, cost_model) -> None:
+        """Called by the owning ScanEngine: device-vs-host dispatch consults
+        (and feeds observations into) this ``core.cost.CostModel``."""
+        self._cost = cost_model
+
     # ------------------------------------------------------------------ #
     # measured dispatch cutover
     # ------------------------------------------------------------------ #
@@ -717,11 +729,13 @@ class PallasBackend(NumpyBackend):
         if self._forced:
             return 0
         if self._device_cutover is None:
-            from .dispatch import device_scan_cutover
+            from .dispatch import device_scan_probe
 
-            self._device_cutover = device_scan_cutover(
+            probe = device_scan_probe(
                 f"scan:{self.mode}:{self.block_rows}", self._bench_launch,
                 n_atoms=4, batch=1)
+            self._device_cutover = probe.value
+            self._device_confidence = probe.confidence
         return self._device_cutover
 
     def batch_cutover_value(self) -> int:
@@ -730,17 +744,45 @@ class PallasBackend(NumpyBackend):
         if self._forced:
             return 0
         if self._batch_cutover is None:
-            from .dispatch import device_scan_cutover
+            from .dispatch import device_scan_probe
 
-            self._batch_cutover = device_scan_cutover(
+            probe = device_scan_probe(
                 f"batch:{self.mode}:{self.block_rows}", self._bench_launch,
                 n_atoms=4, batch=8)
+            self._batch_cutover = probe.value
+            self._batch_confidence = probe.confidence
         return self._batch_cutover
 
+    def _device_ratio(self) -> float:
+        """Seeded device marginal cost relative to the serial host scan:
+        compiled Pallas prunes in-grid (big per-row win), the XLA fused
+        graph re-reads every row (modest win)."""
+        from .cost import DEVICE_RATIO_PALLAS, DEVICE_RATIO_XLA
+
+        return DEVICE_RATIO_PALLAS if self.mode == "pallas" else DEVICE_RATIO_XLA
+
+    def _device_seed(self, batch: bool = False) -> Dict[str, float]:
+        """Cost-model seed kwargs for the device routes, derived from the
+        measured (and invalidatable) dispatch probe."""
+        if batch:
+            return {"cutover": float(self.batch_cutover_value()),
+                    "ratio": self._device_ratio(),
+                    "confidence": self._batch_confidence}
+        return {"cutover": float(self.device_cutover_value()),
+                "ratio": self._device_ratio(),
+                "confidence": self._device_confidence}
+
     def _use_device(self, n: int, n_atoms: int, n_bindings: int) -> bool:
+        if self._forced:
+            return True  # explicit kernel request: correctness testing
+        w = float(n) * n_atoms * n_bindings
+        if self._cost is not None:
+            route = "device" if n_bindings == 1 else "device_batch"
+            return self._cost.prefer(route, w,
+                                     **self._device_seed(batch=n_bindings > 1))
         cut = (self.device_cutover_value() if n_bindings == 1
                else self.batch_cutover_value())
-        return n * n_atoms * n_bindings >= cut
+        return w >= cut
 
     def _bench_launch(self, slab: np.ndarray, thr: np.ndarray) -> np.ndarray:
         """Measurement probe for ``dispatch.device_scan_cutover``: the real
@@ -764,10 +806,31 @@ class PallasBackend(NumpyBackend):
         n = table.nrows
         mask = np.ones(n, dtype=bool)
         kernel_cmp, fallback_cmp = self._split_cmp(prog, table, binding)
-        if kernel_cmp and n and not self._use_device(n, len(kernel_cmp), 1):
-            # below the measured cutover the numpy path wins — keep it
-            fallback_cmp = kernel_cmp + fallback_cmp
-            kernel_cmp = []
+        ch = None
+        if kernel_cmp and n:
+            if self._cost is not None and not self._forced:
+                # cost-model consult, recorded for explain(): the fused
+                # launch vs. keeping every atom on the numpy path
+                from .cost import prog_atoms
+
+                A = prog_atoms(prog)
+                ch = self._cost.choose(
+                    f"scan:{getattr(table, 'name', None) or '?'}",
+                    [("serial", float(n) * A),
+                     ("device", float(n) * len(kernel_cmp),
+                      self._device_seed())],
+                    meta={"rows": int(n), "atoms": int(A),
+                          "kernel_atoms": len(kernel_cmp),
+                          "backend": self.mode},
+                )
+                use_dev = ch.route == "device"
+            else:
+                use_dev = self._use_device(n, len(kernel_cmp), 1)
+            if not use_dev:
+                # below the measured crossover the numpy path wins — keep it
+                fallback_cmp = kernel_cmp + fallback_cmp
+                kernel_cmp = []
+        t0 = time.perf_counter() if ch is not None else 0.0
         if kernel_cmp and n:
             mask &= self._kernel_scan(kernel_cmp, table, binding)
         for a in fallback_cmp:
@@ -777,6 +840,8 @@ class PallasBackend(NumpyBackend):
         for r in (prog.residual_static, prog.residual_dynamic):
             if r is not None:
                 mask &= np.asarray(eval_np(r, table.cols, binding, n=n), bool)
+        if ch is not None:
+            ch.done(time.perf_counter() - t0)
         return mask
 
     def scan_batch_fused(self, prog: AtomProgram, table: Table,
@@ -827,18 +892,21 @@ class PallasBackend(NumpyBackend):
     # encoded (StoredTable) scans — in situ, on device, no decode
     # ------------------------------------------------------------------ #
     def scan_stored(self, prog: AtomProgram, st,
-                    binding: Dict[str, object]) -> Optional[np.ndarray]:
+                    binding: Dict[str, object],
+                    force: bool = False) -> Optional[np.ndarray]:
         """Device mask over an encoded ``core.store.StoredTable``: encoded
         columns upload once as int32 *code* slabs (dict codes, FoR frame
         offsets, unpacked bits) and thresholds translate into code space, so
         the fused kernel scans in situ.  None when any atom falls outside
         the encoded-int32 fragment or below the cutover — the caller keeps
-        the host in-situ / decode paths."""
+        the host in-situ / decode paths.  ``force=True`` skips the cutover
+        consult (the store's cost-model dispatch already approved the device
+        route); viability checks still apply."""
         if (prog.isin_atoms or prog.residual_static is not None
                 or prog.residual_dynamic is not None or not prog.cmp_atoms):
             return None
         n = st.nrows
-        if not self._use_device(n, len(prog.cmp_atoms), 1):
+        if not force and not self._use_device(n, len(prog.cmp_atoms), 1):
             return None
         trans = []
         for a in prog.cmp_atoms:
@@ -1135,7 +1203,14 @@ class PallasBackend(NumpyBackend):
                        surviving_rows: Optional[int] = None) -> bool:
         """Should the partition executor hand this scan to the fused kernel
         (full-table launch, zone pruning in-grid) instead of slicing
-        surviving partitions on the host?"""
+        surviving partitions on the host?
+
+        Cost-model compare between the device launch (which reads the whole
+        table in XLA mode — no in-grid pruning there — but only surviving
+        blocks in compiled Pallas mode) and the host pruned/serial scan over
+        the surviving rows.  The seeds reproduce the old rules (refuse XLA
+        when pruning drops most of the table; require the measured cutover);
+        observed actuals refine the crossover from there."""
         if not prog.cmp_atoms:
             return False
         kernel_cmp, _ = self._split_cmp(prog, table, binding)
@@ -1143,12 +1218,26 @@ class PallasBackend(NumpyBackend):
             return False
         n = table.nrows
         surv = n if surviving_rows is None else surviving_rows
-        if self.mode != "pallas" and surv * 2 < n:
-            # the XLA fused graph re-reads every row (no in-grid pruning on
-            # this host); when partition pruning drops most of the table the
-            # host pruned scan wins
-            return False
-        return self._use_device(surv, len(kernel_cmp), 1)
+        if self._forced:
+            # explicit kernel request: keep only the XLA-rereads-everything
+            # refusal, as before
+            return not (self.mode != "pallas" and surv * 2 < n)
+        if self._cost is None:
+            if self.mode != "pallas" and surv * 2 < n:
+                return False
+            return self._use_device(surv, len(kernel_cmp), 1)
+        from .cost import prog_atoms
+
+        A = prog_atoms(prog)
+        pr = getattr(table, "part_rows", 0) or 0
+        dev_rows = surv if self.mode == "pallas" else n
+        est_dev = self._cost.estimate(
+            "device", float(dev_rows) * len(kernel_cmp), **self._device_seed())
+        est_host = min(
+            self._cost.estimate("pruned", float(surv + pr) * A),
+            self._cost.estimate("serial", float(n) * A),
+        )
+        return est_dev < est_host
 
 
 # --------------------------------------------------------------------------- #
@@ -1266,6 +1355,12 @@ class ScanEngine:
         # worker pool; below it, scans take the serial path untouched (the
         # None test is the only cost a serial engine pays)
         self.fanout = None
+        # per-engine cost model: every dispatch heuristic in the scan stack
+        # (pruned-vs-full, fan-out, device carry, in-situ-vs-decode) consults
+        # it, and every executed choice is timed back into it (core/cost.py)
+        from .cost import CostModel
+
+        self.cost_model = CostModel()
         self.stats = ScanStats()
         self.stats.caches = {
             "programs": self._programs,
@@ -1277,6 +1372,8 @@ class ScanEngine:
             self.stats.caches[name] = cache
         if hasattr(self.backend, "attach_stats"):
             self.backend.attach_stats(self.stats)
+        if hasattr(self.backend, "attach_cost"):
+            self.backend.attach_cost(self.cost_model)
 
     # ------------------------------------------------------------------ #
     def compile(self, pred: Expr) -> AtomProgram:
@@ -1310,7 +1407,21 @@ class ScanEngine:
         plan = self._partition_plan(prog, table, binding)
         if plan is not None:
             return self._scan_pruned(prog, table, binding, plan)
-        return self.backend.scan(prog, table, binding)
+        n = table.nrows
+        if n == 0 or getattr(self.backend, "reports_cost", False):
+            # device-capable backends record their own device-vs-host
+            # decision inside backend.scan
+            return self.backend.scan(prog, table, binding)
+        from .cost import prog_atoms
+
+        A = prog_atoms(prog)
+        ch = self.cost_model.note(
+            f"scan:{getattr(table, 'name', None) or '?'}", "serial",
+            float(n) * A, meta={"rows": int(n), "atoms": int(A)})
+        t0 = time.perf_counter()
+        mask = self.backend.scan(prog, table, binding)
+        ch.done(time.perf_counter() - t0)
+        return mask
 
     # ------------------------------------------------------------------ #
     # partition pruning
@@ -1339,12 +1450,20 @@ class ScanEngine:
         a full scan never inflates the skip counters."""
         self.stats.bump(partitions_scanned=scanned, partitions_pruned=pruned)
 
-    # pruning below this fraction of skipped rows isn't worth the slicing
-    # overhead — the vectorized full scan wins
+    # historical seed of the pruned-vs-full crossover, kept as the calibration
+    # constant behind the cost model's PRUNED_RATIO (= 1 / (1 - 1/8) th extra
+    # marginal cost for sliced/gathered scans): pruning below ~this fraction
+    # of skipped rows isn't worth the slicing overhead at seed time
     MIN_SKIP_FRACTION = 1 / 8
 
     def _scan_pruned(self, prog: AtomProgram, table: "PartitionedTable",
                      binding: Dict[str, object], plan) -> np.ndarray:
+        """Scan shape for a zone-pruned partitioned table, chosen by the cost
+        model among three routes: ``serial`` (full vectorized scan — wins when
+        too little is skipped), ``pruned`` (slice or gathered scan of the
+        surviving runs, charged one partition's floor plus the gather
+        penalty), and ``parallel`` (pool fan-out via the attached executor,
+        seeded to cross over at the measured pool cutover)."""
         _, alive = plan
         n = table.nrows
         P = len(alive)
@@ -1356,30 +1475,47 @@ class ScanEngine:
         pr = table.part_rows
         bounds = [(p0 * pr, min(p1 * pr, n)) for p0, p1 in runs]
         scanned = sum(hi - lo for lo, hi in bounds)
-        ex = self.fanout
+        from .cost import PARALLEL_CAL_ATOMS, prog_atoms
+
+        A = prog_atoms(prog)
+        cands = [("serial", float(n) * A),
+                 ("pruned", float(scanned + pr) * A)]
+        ex, pool = self.fanout, None
         if (ex is not None and len(bounds) > 1
-                and getattr(self.backend, "parallel_safe", False)
-                and scanned >= ex.min_parallel_rows):
+                and getattr(self.backend, "parallel_safe", False)):
             pool = ex.pool()
             if pool is not None:
-                ns = int(np.count_nonzero(alive))
-                self.record_prune(ns, P - ns)
-                return ex.fanout_bounds(prog, table, binding, bounds, pool)
-        if n - scanned < max(n * self.MIN_SKIP_FRACTION, pr):
+                cands.append((
+                    "parallel", float(scanned) * A,
+                    {"cutover": float(ex.min_parallel_rows) * PARALLEL_CAL_ATOMS,
+                     "ratio": ex.parallel_ratio()},
+                ))
+        ns = int(np.count_nonzero(alive))
+        ch = self.cost_model.choose(
+            f"scan:{getattr(table, 'name', None) or '?'}", cands,
+            meta={"rows": int(n), "atoms": int(A), "partitions": int(P),
+                  "alive": ns, "rows_alive": int(scanned)})
+        t0 = time.perf_counter()
+        if ch.route == "parallel":
+            self.record_prune(ns, P - ns)
+            mask = ex.fanout_bounds(prog, table, binding, bounds, pool)
+        elif ch.route == "serial":
             # too little to skip: the vectorized full scan wins
             self.record_prune(P, 0)
-            return self.backend.scan(prog, table, binding)
-        ns = int(np.count_nonzero(alive))
-        self.record_prune(ns, P - ns)
-        if len(bounds) == 1:
+            mask = self.backend.scan(prog, table, binding)
+        elif len(bounds) == 1:
+            self.record_prune(ns, P - ns)
             lo, hi = bounds[0]
             sub = self.partition_slice(table, lo, hi)
             mask[lo:hi] = self.backend.scan(prog, sub, binding)
-            return mask
-        # scattered survivors: one gathered scan beats per-run dispatch
-        idx = np.concatenate([np.arange(lo, hi, dtype=np.int64)
-                              for lo, hi in bounds])
-        mask[idx] = self.backend.scan(prog, _GatherView(table, idx), binding)
+        else:
+            # scattered survivors: one gathered scan beats per-run dispatch
+            self.record_prune(ns, P - ns)
+            idx = np.concatenate([np.arange(lo, hi, dtype=np.int64)
+                                  for lo, hi in bounds])
+            mask[idx] = self.backend.scan(prog, _GatherView(table, idx),
+                                          binding)
+        ch.done(time.perf_counter() - t0)
         return mask
 
     def partition_slice(self, table: Table, lo: int, hi: int) -> Table:
@@ -1407,9 +1543,16 @@ class ScanEngine:
         """B boolean masks, one scan over ``table``: equivalent to
         ``[self.scan(pred, table, b) for b in bindings]`` but with the whole
         batch answered in one vectorized pass (see :meth:`scan_batch_idx`)."""
+        from .cost import active_recorder
+
+        record = active_recorder() is not None
+        t0 = time.perf_counter() if record else 0.0
         masks = self._fused_batch(pred, table, bindings)
         if masks is not None:
             self.stats.bump(batch_scans=1, batch_rows=len(bindings))
+            if record:
+                self._note_batch(pred, table, bindings, "device_batch",
+                                 time.perf_counter() - t0)
             return masks
         n = table.nrows
         out = []
@@ -1417,7 +1560,40 @@ class ScanEngine:
             m = np.zeros(n, dtype=bool)
             m[idx] = True
             out.append(m)
+        if record:
+            self._note_batch(pred, table, bindings, "batch_pivot",
+                             time.perf_counter() - t0)
         return out
+
+    def _note_batch(self, pred: Expr, table: Table, bindings, route: str,
+                    seconds: float) -> None:
+        """Record the batched-vs-single-binding decision for explain(): the
+        batch structure (pivot-index probes vs. one fused [B, A] launch vs.
+        B sequential scans) is determined by program shape and the measured
+        batch cutover, but the considered alternatives and their estimates
+        belong in the plan report."""
+        from .cost import prog_atoms
+
+        B = len(bindings)
+        n = table.nrows
+        prog = self.compile(pred)
+        A = prog_atoms(prog)
+        serial_work = float(n) * A * B  # B sequential full scans
+        if route == "batch_pivot":
+            # B binary searches + candidate filtering: ~B * (log2 n + c) * A
+            work = float(B) * (math.log2(n + 1) + 64.0) * A
+        else:
+            work = float(n) * A * B
+        alts = [("serial", serial_work)]
+        fused = getattr(self.backend, "scan_batch_fused", None)
+        if fused is not None and route != "device_batch":
+            alts.append(("device_batch", float(n) * A * B,
+                         self.backend._device_seed(batch=True)))
+        ch = self.cost_model.note(
+            f"batch:{getattr(table, 'name', None) or '?'}", route, work,
+            meta={"rows": int(n), "atoms": int(A), "bindings": B},
+            alternatives=alts)
+        ch.done(seconds)
 
     def _fused_batch(self, pred: Expr, table: Table,
                      bindings: Sequence[Dict[str, object]]

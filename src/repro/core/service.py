@@ -216,6 +216,10 @@ class ServiceStats:
         with self._lock:
             self._latencies.append(seconds)
 
+    # optional zero-arg callable merged into the snapshot under "cost_model"
+    # (the LineageService wires this to its pipelines' cost-model snapshots)
+    extra_provider = None
+
     def snapshot(self) -> Dict[str, object]:
         with self._lock:
             out: Dict[str, object] = {
@@ -236,6 +240,8 @@ class ServiceStats:
             out["latency_ms_p99"] = float(np.percentile(lat, 99) * 1e3)
         else:
             out["latency_ms_p50"] = out["latency_ms_p99"] = 0.0
+        if self.extra_provider is not None:
+            out["cost_model"] = self.extra_provider()
         return out
 
     __call__ = snapshot
@@ -301,6 +307,7 @@ class LineageService:
         self._queue: deque = deque()
         self._closed = False
         self.stats = ServiceStats()
+        self.stats.extra_provider = self._cost_stats
         if isinstance(pipelines, PredTrace):
             self.register("default", pipelines)
         elif pipelines:
@@ -321,7 +328,38 @@ class LineageService:
         self._pipelines[key] = pt
 
     def pipelines(self) -> List[str]:
+        """Registered pipeline keys, sorted."""
         return sorted(self._pipelines)
+
+    def _cost_stats(self) -> Dict[str, object]:
+        """Per-pipeline scan cost-model snapshot (routes, estimate-error
+        stats, feedback flags) — merged into ``stats()`` as ``cost_model``."""
+        return {
+            key: pt.scan_engine.cost_model.snapshot()
+            for key, pt in sorted(self._pipelines.items())
+        }
+
+    def explain(self, row: RowSpec, pipeline: str = "default"):
+        """Synchronous plan explanation: run ``row``'s lineage query on the
+        named pipeline with plan recording on and return the
+        :class:`~repro.core.cost.PlanReport` (see ``PredTrace.explain``).
+
+        Runs on the caller's thread, bypassing the coalescing scheduler and
+        the answer cache — an explained query is a diagnostic probe, not a
+        served answer (the answer is still exact and carried on
+        ``report.answer``).
+
+        Args:
+            row: output row selector — row index (``int``) or column-value
+                dict.
+            pipeline: registered pipeline key (default ``"default"``).
+
+        Returns:
+            PlanReport: structured plan/cost breakdown for the query.
+        """
+        if pipeline not in self._pipelines:
+            raise KeyError(f"unknown pipeline {pipeline!r}")
+        return self._pipelines[pipeline].explain(row)
 
     # ------------------------------------------------------------------ #
     def submit(self, row: RowSpec, pipeline: str = "default",

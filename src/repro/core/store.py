@@ -52,6 +52,7 @@ from __future__ import annotations
 
 import itertools
 import threading
+import time
 from dataclasses import dataclass
 from typing import Dict, Iterator, List, Mapping, Optional, Tuple
 
@@ -1093,6 +1094,15 @@ class IntermediateStore:
 
     # ------------------------------------------------------------------ #
     def put(self, node_id: int, table: Table) -> StoredTable:
+        """Encode and store one materialized stage.
+
+        Args:
+            node_id: plan-node id of the stage.
+            table: decoded stage rows.
+        Returns:
+            StoredTable: the encoded (and, with a partition layout,
+            zone-mapped) stage now held by the store.
+        """
         pr = resolve_part_rows(table.nrows, self.num_partitions, self.part_rows)
         st = encode_table(table, part_rows=pr)
         self.stages[node_id] = st
@@ -1103,6 +1113,7 @@ class IntermediateStore:
         return node_id in self.stages
 
     def get(self, node_id: int) -> StoredTable:
+        """The encoded stage for ``node_id`` (KeyError if absent)."""
         return self.stages[node_id]
 
     def table(self, node_id: int) -> Table:
@@ -1110,6 +1121,8 @@ class IntermediateStore:
         return self.stages[node_id].to_table()
 
     def evict(self, node_ids) -> None:
+        """Drop stages (budget planner / invalidation); bumps
+        ``generation`` when anything was actually held."""
         evicted = False
         for nid in list(node_ids):
             evicted = self.stages.pop(nid, None) is not None or evicted
@@ -1122,13 +1135,26 @@ class IntermediateStore:
         """In-situ boolean mask of ``pred`` over a stored stage, using the
         engine's compiled (and cached) atom program.
 
-        Partitioned stages run the zone-map pruning pass first: partitions
-        proved empty are skipped, and the survivors are evaluated in
-        candidate mode (per-encoding ``gather``) without decoding."""
+        Partitioned stages run the zone-map pruning pass first; the
+        surviving work then goes to the engine's cost model, which ranks
+        every viable route — candidate-mode gather over alive partitions,
+        the device in-situ kernel, decode-then-scan, or the encoded host
+        path — and the cheapest one executes (falling down the ranking when
+        a route proves inviable, e.g. the program leaves the encoded-int32
+        device fragment)."""
+        from .cost import prog_atoms
+
         prog = engine.compile(pred)
         st = self.stages[node_id]
         binding = binding or {}
+        cm = engine.cost_model
+        n = st.nrows
+        A = prog_atoms(prog)
+        w_full = float(n) * A
         zm = st.zone_maps
+        alive = None
+        ns = P = 0
+        cands = []
         if zm is not None and zm.n_partitions > 1 and partition_safe(prog, binding):
             alive = prune_zone_maps(prog, zm, binding)
             ns = int(np.count_nonzero(alive))
@@ -1136,59 +1162,105 @@ class IntermediateStore:
             if ns == 0:
                 engine.stats.bump(scans=1, insitu_scans=1, prune_calls=1)
                 engine.record_prune(0, P)
-                return np.zeros(st.nrows, dtype=bool)
-            skipped = int(zm.part_sizes()[~alive].sum())
-            # marginal pruning isn't worth candidate-mode gather: mirror
-            # ScanEngine.MIN_SKIP_FRACTION and keep the vectorized full scan
-            if skipped >= max(st.nrows * ScanEngine.MIN_SKIP_FRACTION,
-                              zm.part_rows):
-                engine.stats.bump(scans=1, insitu_scans=1, prune_calls=1)
-                engine.record_prune(ns, P - ns)
-                idx = rows_of_alive(alive, zm.part_rows, st.nrows)
-                return self.backend.scan_ranges(prog, st, binding, idx)
-            engine.stats.bump(prune_calls=1)
-            engine.record_prune(P, 0)
+                return np.zeros(n, dtype=bool)
+            kept = n - int(zm.part_sizes()[~alive].sum())
+            # candidate-mode gather pays per-row index work plus up to one
+            # partition of slack; the PRUNED_RATIO seed reproduces the old
+            # MIN_SKIP_FRACTION rule against the vectorized full scan
+            cands.append(("pruned", float(kept + zm.part_rows) * A))
         # device carrier: encoded columns scan in situ on device as int32
         # code slabs with code-space thresholds (no decode, zone pruning
         # in-grid); only programs fully inside the encoded-int32 fragment
         # qualify, so answers stay bit-identical to the host paths
         dev = getattr(engine.backend, "scan_stored", None)
         if dev is not None:
-            mask = dev(prog, st, binding)
-            if mask is not None:
+            seed_fn = getattr(engine.backend, "_device_seed", None)
+            cands.append(("device_insitu", w_full,
+                          seed_fn() if seed_fn is not None else {}))
+        cands.append(("decode", w_full))
+        # a cached decoded view makes the decode cost sunk — the in-situ
+        # path can no longer win, so it isn't offered as a candidate
+        if st._table is None:
+            route, kw = self._insitu_candidate(st, prog)
+            cands.append((route, w_full, kw))
+        meta = {"rows": int(n), "atoms": int(A)}
+        if alive is not None:
+            meta.update(partitions=P, alive=ns)
+        ch = cm.choose(f"store:{node_id}", cands, meta=meta)
+        executed = None
+        mask = None
+        t0 = time.perf_counter()
+        for _, route, _ in ch.ranked:
+            if route == "pruned":
+                idx = rows_of_alive(alive, zm.part_rows, n)
+                mask = self.backend.scan_ranges(prog, st, binding, idx)
+                engine.stats.bump(scans=1, insitu_scans=1, prune_calls=1)
+                engine.record_prune(ns, P - ns)
+            elif route == "device_insitu":
+                mask = dev(prog, st, binding, force=True)
+                if mask is None:
+                    continue
+                self._note_unpruned(engine, alive, P)
                 engine.stats.bump(scans=1, insitu_scans=1, device_chosen=1)
-                return mask
-        # host dispatch: per-atom in-situ compares pay Python + searchsorted
-        # setup per scan, a decoded stage pays one (cached) decode — pick by
-        # stage size against the measured crossover
-        if self._prefer_decode(st, prog):
-            engine.stats.bump(scans=1, insitu_scans=1, decode_chosen=1)
-            return engine.backend.scan(prog, st.to_table(), binding)
-        engine.stats.bump(scans=1, insitu_scans=1, insitu_chosen=1)
-        return self.backend.scan(prog, st, binding)
+            elif route == "decode":
+                mask = engine.backend.scan(prog, st.to_table(), binding)
+                self._note_unpruned(engine, alive, P)
+                engine.stats.bump(scans=1, insitu_scans=1, decode_chosen=1)
+            else:  # insitu / insitu_heavy
+                mask = self.backend.scan(prog, st, binding)
+                self._note_unpruned(engine, alive, P)
+                engine.stats.bump(scans=1, insitu_scans=1, insitu_chosen=1)
+            executed = route
+            break
+        ch.done(time.perf_counter() - t0, route=executed)
+        return mask
+
+    @staticmethod
+    def _note_unpruned(engine: ScanEngine, alive, P: int) -> None:
+        """Zone maps ran but the full-extent route won: the prune pass still
+        counts, with every partition recorded as scanned."""
+        if alive is not None:
+            engine.stats.bump(prune_calls=1)
+            engine.record_prune(P, 0)
 
     # encodings whose cmp/isin masks are O(1)-setup vectorized code compares;
     # rle/delta/scaled pay real per-atom work, shifting the crossover up
     _CHEAP_SCAN_KINDS = frozenset({"plain", "dict", "for", "bitpack"})
 
-    def _prefer_decode(self, st: StoredTable, prog) -> bool:
-        """Decode-then-scan beats the in-situ encoded path when the stage is
-        small (fixed per-atom overhead dominates) or already decoded (the
-        decode cost is sunk — ``to_table`` caches)."""
-        if st._table is not None:
-            return True
-        from .dispatch import insitu_scan_cutover
+    def _insitu_candidate(self, st: StoredTable, prog):
+        """Cost-model candidate for the encoded host path: route name plus
+        seed kwargs.  Columns outside the cheap vectorized encodings pay
+        real per-atom decode work, shifting the seeded crossover up 16x
+        (the ``insitu_heavy`` route)."""
+        from .dispatch import insitu_scan_probe
 
-        cut = insitu_scan_cutover()
+        probe = insitu_scan_probe()
         cols = {a.col for a in prog.cmp_atoms}
         cols.update(a.col for a in prog.isin_atoms)
         kinds = {st.enc[c].kind for c in cols if c in st.enc}
         if kinds - self._CHEAP_SCAN_KINDS:
-            cut <<= 4
-        return st.nrows <= cut
+            return "insitu_heavy", {"cutover": float(probe.value << 4),
+                                    "confidence": probe.confidence}
+        return "insitu", {"cutover": float(probe.value),
+                          "confidence": probe.confidence}
+
+    def _prefer_decode(self, st: StoredTable, prog) -> bool:
+        """Compat shim (the scan path now ranks routes via the cost model):
+        does decode-then-scan beat the in-situ encoded path for this stage?
+        True when the stage is already decoded (the decode cost is sunk —
+        ``to_table`` caches) or the seeded/learned estimates say so."""
+        if st._table is not None:
+            return True
+        from .cost import default_cost_model, prog_atoms
+
+        cm = default_cost_model()
+        route, kw = self._insitu_candidate(st, prog)
+        w = float(st.nrows) * prog_atoms(prog)
+        return cm.estimate("decode", w) <= cm.estimate(route, w, **kw)
 
     # ------------------------------------------------------------------ #
     def sizes(self) -> Dict[int, int]:
+        """Encoded bytes per stored stage (budget-planner input)."""
         return {nid: st.nbytes() for nid, st in self.stages.items()}
 
     def partition_sizes(self) -> Dict[int, List[int]]:
@@ -1200,13 +1272,17 @@ class IntermediateStore:
         return {nid: st.prune_estimate() for nid, st in self.stages.items()}
 
     def nbytes(self) -> int:
+        """Total encoded bytes across all stored stages."""
         return int(sum(st.nbytes() for st in self.stages.values()))
 
     def raw_nbytes(self) -> int:
+        """Total decoded (pre-encoding) bytes across all stages."""
         return int(sum(st.raw_nbytes for st in self.stages.values()))
 
     def compression_ratio(self) -> float:
+        """Raw over encoded bytes (>= 1.0 when encodings help)."""
         return self.raw_nbytes() / max(self.nbytes(), 1)
 
     def encodings(self) -> Dict[int, Dict[str, str]]:
+        """Chosen encoding kind per column per stage (diagnostics)."""
         return {nid: st.encodings() for nid, st in self.stages.items()}

@@ -1,0 +1,277 @@
+"""Cost-based plan selection + explain() (core/cost.py).
+
+Contract (ISSUE tentpole):
+  * ``PlanReport.to_dict()`` is schema-stable: fixed top-level keys, fixed
+    per-decision keys, ``schema_version`` guarding consumers.
+  * Every scan route the dispatcher can choose (serial / pruned / parallel /
+    device / in-situ / decode) records an estimated *and* a measured cost
+    when chosen under ``explain()``.
+  * The cheapest-plan choice flips when an observed-cost history contradicts
+    the seeds (the model learns online).
+  * ``explain()`` never changes an answer — differentially identical to a
+    plain ``query()`` across budgets {None, partial, 0} x partitioning.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import Executor, LineageService, PredTrace, ScanEngine
+from repro.core import dispatch
+from repro.core.cost import (
+    MIN_OBS, SCHEMA_VERSION, CostModel, PlanRecorder, PlanReport,
+)
+from repro.tpch import ALL_QUERIES
+
+from conftest import lineage_sets
+
+
+@pytest.fixture(autouse=True)
+def _fresh_dispatch():
+    """Env-forced cutovers must not leak probe caches across tests."""
+    dispatch.reset_for_tests()
+    yield
+    dispatch.reset_for_tests()
+
+
+def _prepared(db, qname="q3", **kw) -> PredTrace:
+    plan = ALL_QUERIES[qname](db)
+    res = Executor(db).run(plan)
+    pt = PredTrace(db, plan, **kw)
+    pt.infer(stats=res.stats)
+    pt.run()
+    return pt
+
+
+def _routes(report: PlanReport):
+    return {d.chosen for d in report.scans}
+
+
+# --------------------------------------------------------------------------- #
+# schema stability
+# --------------------------------------------------------------------------- #
+
+
+def test_plan_report_schema_golden(tpch_db):
+    pt = _prepared(tpch_db, store=True, num_partitions=8)
+    rep = pt.explain(0)
+    d = rep.to_dict()
+    assert set(d) == {"schema_version", "pipeline", "tables", "scans",
+                      "summary"}
+    assert d["schema_version"] == SCHEMA_VERSION
+    assert {"budget_bytes", "num_partitions", "partition_rows", "backend",
+            "parallel", "stages", "stages_dropped"} <= set(d["pipeline"])
+    assert d["tables"], "q3 must touch tables"
+    for info in d["tables"].values():
+        assert {"verdict", "rows", "lineage_rows", "atoms",
+                "alternatives"} <= set(info)
+        assert ({a["plan"] for a in info["alternatives"]}
+                == {"precise", "iterative", "superset"})
+        assert sum(a["chosen"] for a in info["alternatives"]) == 1
+    assert d["scans"], "q3 must record scan decisions"
+    for dec in d["scans"]:
+        assert set(dec) == {"site", "chosen", "est_s", "actual_s",
+                            "fallback_from", "candidates", "meta"}
+        for c in dec["candidates"]:
+            assert set(c) == {"route", "work", "est_s"}
+    assert {"query_seconds", "scan_decisions", "total_est_s",
+            "total_actual_s", "routes", "estimate_error",
+            "flags"} <= set(d["summary"])
+    # stable JSON round-trip
+    assert json.loads(rep.to_json()) == json.loads(
+        json.dumps(d, sort_keys=True, default=str))
+    assert isinstance(rep.pretty(), str) and "Lineage plan" in rep.pretty()
+
+
+def test_answer_carries_plan_backlink(tpch_db):
+    pt = _prepared(tpch_db)
+    rep = pt.explain(0)
+    assert rep.answer is not None and rep.answer.plan is rep
+    # plain query leaves the field unset (recording off on the hot path)
+    assert pt.query(0).plan is None
+
+
+# --------------------------------------------------------------------------- #
+# every route records estimated + actual
+# --------------------------------------------------------------------------- #
+
+
+def _assert_route_recorded(report: PlanReport, route: str):
+    decs = [d for d in report.scans if d.chosen == route]
+    assert decs, (f"no decision chose {route!r}; "
+                  f"got {sorted(_routes(report))}")
+    for d in decs:
+        assert d.est_s > 0.0
+        assert d.actual_s is not None and d.actual_s > 0.0
+        assert d.candidates
+
+
+def test_serial_route_recorded(tpch_db):
+    rep = _prepared(tpch_db).explain(0)
+    _assert_route_recorded(rep, "serial")
+
+
+def test_pruned_route_recorded(tpch_db):
+    rep = _prepared(tpch_db, store=True, num_partitions=16).explain(0)
+    _assert_route_recorded(rep, "pruned")
+
+
+def test_insitu_route_recorded(tpch_db, monkeypatch):
+    # cutover 0: the in-situ estimate beats decode at any stage size
+    monkeypatch.setenv("PREDTRACE_INSITU_CUTOVER", "0")
+    dispatch.reset_for_tests()
+    rep = _prepared(tpch_db, store=True).explain(0)
+    got = _routes(rep)
+    assert got & {"insitu", "insitu_heavy"}, got
+    for r in ("insitu", "insitu_heavy"):
+        if any(d.chosen == r for d in rep.scans):
+            _assert_route_recorded(rep, r)
+
+
+def test_decode_route_recorded(tpch_db, monkeypatch):
+    # huge cutover: decode-then-scan wins every store dispatch
+    monkeypatch.setenv("PREDTRACE_INSITU_CUTOVER", str(10**9))
+    dispatch.reset_for_tests()
+    rep = _prepared(tpch_db, store=True).explain(0)
+    _assert_route_recorded(rep, "decode")
+
+
+def test_device_route_recorded(tpch_db):
+    eng = ScanEngine(backend="pallas", device_cutover=0)
+    rep = _prepared(tpch_db, scan_engine=eng).explain(0)
+    _assert_route_recorded(rep, "device")
+
+
+def test_parallel_route_recorded(tpch_db, monkeypatch):
+    monkeypatch.setenv("PREDTRACE_PARALLEL_CUTOVER", "0")
+    dispatch.reset_for_tests()
+    pt = _prepared(tpch_db, num_partitions=16, parallel=2)
+    try:
+        rep = pt.explain(0)
+        _assert_route_recorded(rep, "parallel")
+    finally:
+        pt.close()
+
+
+# --------------------------------------------------------------------------- #
+# online learning flips choices; feedback flags bad estimates
+# --------------------------------------------------------------------------- #
+
+
+def test_choice_flips_on_observed_history():
+    cm = CostModel()
+    w = 1e6
+    assert cm.choose("s", [("serial", w), ("pruned", w)]).route == "serial"
+    # observed history contradicting the seed: serial is pathologically slow
+    for _ in range(MIN_OBS + 2):
+        cm.observe("serial", w, seconds=1.0)
+        cm.observe("pruned", w, seconds=1e-4)
+    assert cm.choose("s", [("serial", w), ("pruned", w)]).route == "pruned"
+
+
+def test_feedback_flags_and_reprobes():
+    cm = CostModel()
+    w = 1e7
+    before = dispatch.probe_info()["disagreements"].get("parallel", 0)
+    # estimates persistently ~100x over actuals -> flag + probe invalidation
+    for _ in range(12):
+        est = cm.estimate("parallel", w, cutover=1e3, ratio=0.5)
+        cm.observe("parallel", w, seconds=est / 100.0, est=est)
+    snap = cm.snapshot()
+    assert any(f["route"] == "parallel" for f in snap["flags"])
+    assert dispatch.probe_info()["disagreements"]["parallel"] > before
+
+
+def test_dispatch_probe_invalidation(monkeypatch):
+    monkeypatch.setenv("PREDTRACE_PARALLEL_CUTOVER", "12345")
+    dispatch.reset_for_tests()
+    assert dispatch.parallel_scan_cutover(None, 4) == 12345
+    p0 = dispatch.parallel_scan_probe(None, 4)
+    assert p0.source == "env" and p0.confidence == 1.0
+    assert dispatch.note_disagreement("parallel") == 1
+    # env-pinned values stay fully trusted, but the disagreement is stamped
+    p1 = dispatch.parallel_scan_probe(None, 4)
+    assert p1.value == 12345 and p1.confidence == 1.0 and p1.remeasures == 1
+    assert dispatch.probe_info()["disagreements"]["parallel"] == 1
+    # measured probes decay: family confidence halves per disagreement
+    assert dispatch._family_confidence("parallel") == pytest.approx(0.5)
+
+
+# --------------------------------------------------------------------------- #
+# explain() never changes the answer
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("partitions", [None, 16])
+@pytest.mark.parametrize("budget", ["none", "partial", "zero"])
+def test_explain_differential_vs_query(tpch_db, budget, partitions):
+    kw = dict(num_partitions=partitions)
+    if budget == "zero":
+        kw.update(store=True, budget_bytes=0)
+    elif budget == "partial":
+        full = _prepared(tpch_db, store=True, num_partitions=partitions)
+        kw.update(store=True, budget_bytes=max(full.store.nbytes() // 2, 1))
+    pt = _prepared(tpch_db, **kw)
+    for r in range(min(3, pt.exec_result.output.nrows)):
+        want = pt.query(r)
+        rep = pt.explain(r)
+        again = pt.query(r)
+        assert lineage_sets(rep.answer.lineage) == lineage_sets(want.lineage)
+        assert lineage_sets(again.lineage) == lineage_sets(want.lineage)
+        assert rep.answer.precise == want.precise
+
+
+def test_recorder_is_thread_local(tpch_db):
+    pt = _prepared(tpch_db)
+    with PlanRecorder() as rec:
+        pt.query(0)
+    n = len(rec.decisions)
+    assert n > 0
+    # no recorder active: the same query records nothing anywhere
+    with PlanRecorder() as rec2:
+        pass
+    pt.query(0)
+    assert len(rec2.decisions) == 0 and len(rec.decisions) == n
+
+
+# --------------------------------------------------------------------------- #
+# service surface
+# --------------------------------------------------------------------------- #
+
+
+def test_service_stats_and_explain(tpch_db):
+    pt = _prepared(tpch_db, store=True, num_partitions=8)
+    svc = LineageService(pt)
+    try:
+        svc.query(0)
+        rep = svc.explain(0)
+        assert rep.scans and rep.answer is not None
+        stats = svc.stats()
+        assert "cost_model" in stats
+        assert "routes" in stats["cost_model"]["default"]
+        with pytest.raises(KeyError):
+            svc.explain(0, pipeline="nope")
+    finally:
+        svc.close()
+
+
+def test_plan_materialization_cost_model_caps_scan_cost():
+    from repro.core.expr import BinOp, Col, Param
+    from repro.core.plan import LineagePlan, Stage, plan_materialization
+
+    p0 = BinOp("==", Col("k"), Param("v_out"))
+    lp = LineagePlan(plan=None, out_params={"v_out": "k"},
+                     stages=[Stage(10, run_pred=p0, params_out={"v": "k"})],
+                     source_preds=[])
+    cm = CostModel()
+    for rate in (0.0, 0.5, 0.9):
+        mp = plan_materialization(lp, {10: 1000}, None,
+                                  prune_rates={10: rate}, cost_model=cm)
+        # never dearer than the un-pruned full scan, cheaper as pruning bites
+        assert 0.0 < mp.scan_cost[10] <= 1000
+    hi = plan_materialization(lp, {10: 1000}, None, prune_rates={10: 0.0},
+                              cost_model=cm).scan_cost[10]
+    lo = plan_materialization(lp, {10: 1000}, None, prune_rates={10: 0.9},
+                              cost_model=cm).scan_cost[10]
+    assert lo < hi

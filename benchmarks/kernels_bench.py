@@ -102,6 +102,105 @@ def _bench_batched(rng) -> List[tuple]:
     return rows
 
 
+def _bench_member_float(rng) -> List[tuple]:
+    """IN-heavy and float-heavy predicate mixes through the fused kernel.
+
+    The IN-heavy mix races the in-grid membership fusion (per-lane binary
+    search over a device-resident sorted set) against the pre-fusion host
+    probe (``np.isin`` over the full column); the float-heavy mix races the
+    order-preserving int32 key lane against the numpy float compare.  Both
+    merge into ``BENCH_scan.json``: bench-smoke gates
+    ``member_fused_beats_host`` and the usual identical flags; nightly holds
+    the membership launch to >= 20% of the measured roofline."""
+    import json
+    from pathlib import Path
+
+    from repro.core.expr import IsIn
+    from repro.core.scan import PallasBackend
+
+    rows: List[tuple] = []
+    report = {}
+    n = 1 << 21
+    # wide-domain keys, the lineage-membership shape: order/part keys span
+    # millions of distinct values, so the host probe cannot use numpy's
+    # narrow-range table lookup and pays a sort-based ``np.isin`` per scan
+    k = rng.integers(0, 2**30, n).astype(np.int32)
+    j = rng.integers(0, 100, n).astype(np.int32)
+    t = Table({"k": k, "j": j}, {}, "bench")
+    vset = np.sort(rng.choice(k, 4_000, replace=False)).astype(np.int32)
+    pred = land(IsIn(Col("k"), Param("s")), Col("j") >= Param("p"))
+    binding = {"s": vset, "p": 20}
+    # standalone backend: cutover 0 pins the device route so the timing is
+    # the fused launch itself, not a cost-model mix of routes
+    from repro.core.scan import ScanStats
+
+    be = PallasBackend(device_cutover=0, batch_cutover=0)
+    be.attach_stats(ScanStats())
+    prog = ScanEngine().compile(pred)
+    got = be.scan(prog, t, binding)               # warm: jit trace + slabs
+    fused = int(be._stats.member_fused_scans) > 0
+
+    def host_probe():
+        return np.isin(k, vset) & (j >= 20)
+
+    t_host = time_ms(host_probe, repeat=5)
+    t_dev = time_ms(lambda: be.scan(prog, t, binding), repeat=5)
+    # two int32 column reads plus the bool mask writeback; the sorted set
+    # rides in cache and is noise at this size
+    moved = k.nbytes + j.nbytes + n
+    gbps = moved / max(t_dev * 1e-3, 1e-12) / 1e9
+    ok = bool(np.array_equal(got, host_probe()))
+    report["in_heavy"] = {
+        "rows": n, "set_size": int(vset.size), "member_fused": fused,
+        "host_probe_ms": t_host, "device_ms": t_dev,
+        "speedup": t_host / max(t_dev, 1e-9),
+        "achieved_gbps": gbps, "identical": ok,
+    }
+    report["member_fused_beats_host"] = bool(fused and ok and t_dev < t_host)
+    rows.append(("kernels.member_fused.n2M_m4k", t_dev * 1e3,
+                 f"host_probe={t_host:.2f}ms device={t_dev:.2f}ms "
+                 f"speedup={t_host / max(t_dev, 1e-9):.2f}x "
+                 f"bw={gbps:.1f}GB/s identical={ok} fused={fused}"))
+
+    f = rng.normal(0, 100, n).astype(np.float32)
+    f[::31] = np.nan
+    tf = Table({"f": f, "j": j}, {}, "benchf")
+    predf = land(Col("f") >= Param("p"), Col("j") < Param("q"))
+    bindf = {"p": -5.5, "q": 90}
+    be_f = PallasBackend(device_cutover=0, batch_cutover=0)
+    be_f.attach_stats(ScanStats())
+    progf = ScanEngine().compile(predf)
+    gotf = be_f.scan(progf, tf, bindf)            # warm
+    lane = int(be_f._stats.float_lane_scans) > 0
+
+    def host_float():
+        return (f >= np.float32(-5.5)) & (j < 90)
+
+    t_np = time_ms(host_float, repeat=5)
+    t_devf = time_ms(lambda: be_f.scan(progf, tf, bindf), repeat=5)
+    okf = bool(np.array_equal(gotf, host_float()))
+    report["float_heavy"] = {
+        "rows": n, "float_lane": lane,
+        "numpy_ms": t_np, "device_ms": t_devf,
+        "speedup": t_np / max(t_devf, 1e-9), "identical": okf,
+    }
+    rows.append(("kernels.float_lane.n2M", t_devf * 1e3,
+                 f"numpy={t_np:.2f}ms device={t_devf:.2f}ms "
+                 f"speedup={t_np / max(t_devf, 1e-9):.2f}x "
+                 f"identical={okf} key_lane={lane}"))
+
+    out = Path("BENCH_scan.json")
+    data = {}
+    if out.exists():
+        try:
+            data = json.loads(out.read_text())
+        except ValueError:
+            data = {}
+    data["kernels.member_float"] = report
+    out.write_text(json.dumps(data, indent=2, sort_keys=True))
+    return rows
+
+
 def bench_kernels() -> List[tuple]:
     rows = []
     rng = np.random.default_rng(0)
@@ -140,6 +239,7 @@ def bench_kernels() -> List[tuple]:
                      f"numpy={t_np:.1f}ms engine={t_eng:.1f}ms jit={t_jax:.1f}ms "
                      f"pallas_interpret_ok={ok} engine_pallas_ok={eng_ok}"))
     rows += _bench_batched(rng)
+    rows += _bench_member_float(rng)
 
     # membership probe (jit path = sorted binary search, the TPU-kernel analogue)
     vals = rng.integers(0, 100_000, 1_000_000).astype(np.int32)

@@ -86,6 +86,76 @@ def _stage_scan_times(pt_store: PredTrace, pt_raw: PredTrace):
     return None
 
 
+def _bench_rle_stage(results: Dict[str, object], rows: List[tuple]) -> bool:
+    """RLE-heavy synthetic stage: threshold scans answered in run space.
+
+    Long-run columns encode to a few thousand runs; the store dispatch
+    offers ``insitu_rle`` and the scan never touches row space, so every
+    decoded byte of the predicate columns is a byte the route avoided
+    moving.  Records ``decode_avoided_bytes`` (decoded column bytes minus
+    the run arrays actually read) and checks the dispatch kept
+    ``decode_chosen`` at zero for the stage."""
+    from repro.core import ScanEngine
+    from repro.core.expr import Col, Param, land
+    from repro.core.store import IntermediateStore
+    from repro.core.table import Table
+
+    rng = np.random.default_rng(common.SEED)
+    n = 200_000
+    runs = rng.integers(50, 400, 2_000)
+    a = np.repeat(rng.integers(0, 40, runs.size), runs)[:n].astype(np.int64)
+    b = np.repeat(rng.integers(-30, 30, runs.size), rng.permutation(runs))[:n]
+    b = b.astype(np.int64)
+    t = Table({"a": a, "b": b}, {}, "rle_stage")
+    store = IntermediateStore()
+    st = store.put(9001, t)
+    eng = ScanEngine(backend="pallas", device_cutover=0)
+    pred = land(Col("a") < Param("v"), Col("b") >= Param("w"))
+    binding = {"v": 20, "w": -5}
+
+    got = store.scan(9001, pred, binding, eng)
+    identical = bool(np.array_equal(got, (a < 20) & (b >= -5)))
+    snap = eng.stats()
+    rle_chosen = bool(snap["rle_insitu_chosen"] >= 1)
+    no_decode = bool(snap["decode_chosen"] == 0)
+
+    t_insitu = _avg_ms(lambda: store.scan(9001, pred, binding, eng), iters=50)
+    t_decode = _avg_ms(
+        lambda: eng.backend.scan(eng.compile(pred),
+                                 st.to_table(cache=False), binding),
+        iters=20,
+    )
+    # bytes the run-space route never moved: the decoded predicate columns,
+    # less the run arrays it read instead
+    decoded = sum(t.cols[c].nbytes for c in ("a", "b"))
+    run_bytes = sum(st.enc[c].nbytes() for c in ("a", "b"))
+    avoided = int(decoded - run_bytes)
+
+    ok = identical and rle_chosen and no_decode
+    results["store.rle_stage"] = {
+        "rows": n,
+        "runs_per_col": int(runs.size),
+        "encodings": {c: st.enc[c].kind for c in ("a", "b")},
+        "decoded_bytes": int(decoded),
+        "run_bytes": int(run_bytes),
+        "decode_avoided_bytes": avoided,
+        "insitu_scan_ms": t_insitu,
+        "decode_then_scan_ms": t_decode,
+        "rle_insitu_chosen": int(snap["rle_insitu_chosen"]),
+        "rle_run_scans": int(snap["rle_run_scans"]),
+        "decode_chosen": int(snap["decode_chosen"]),
+        "identical_answers": identical,
+        "rle_route_ok": ok,
+    }
+    rows.append((
+        "store.rle_stage", t_insitu * 1e3,
+        f"insitu={t_insitu:.3f}ms decode+scan={t_decode:.3f}ms "
+        f"avoided={avoided / 1e6:.2f}MB identical={identical} "
+        f"rle_chosen={rle_chosen} decode_chosen={snap['decode_chosen']}",
+    ))
+    return ok
+
+
 def bench_store() -> List[tuple]:
     rows: List[tuple] = []
     results: Dict[str, object] = {}
@@ -171,9 +241,16 @@ def bench_store() -> List[tuple]:
         results[f"store.{qname}.sf{sf}"] = entry
         rows.append((f"store.{qname}.sf{sf}", (scans[0] if scans else 0.0) * 1e3, derived))
 
+    rle_ok = _bench_rle_stage(results, rows)
+    all_identical &= bool(results["store.rle_stage"]["identical_answers"])
+
     results["summary"] = {
         "compression_ratio": tot_raw / max(tot_enc, 1),
         "identical_answers": bool(all_identical),
+        # run-space RLE scans answered the stage without decoding
+        "rle_insitu_ok": rle_ok,
+        "rle_decode_avoided_bytes":
+            results["store.rle_stage"]["decode_avoided_bytes"],
         "insitu_over_raw_worst": worst_insitu,
         # the size-based dispatch must keep stage scans at raw-scan speed:
         # decode is cached, so tiny stages no longer pay per-atom in-situ

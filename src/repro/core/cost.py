@@ -66,6 +66,13 @@ DEVICE_RATIO_XLA = 4.0 / 7.0
 DEVICE_RATIO_PALLAS = 0.25
 # in-situ code-space compares move less memory than decoded int64 compares
 INSITU_RATIO = 0.5
+# fused membership: the in-grid binary search costs log2(|set|) compares per
+# row but replaces numpy's sort+searchsorted isin (which re-walks the column
+# per set), so its seeded marginal cost still undercuts the host probe
+MEMBER_RATIO = 0.5
+# run-space RLE scans touch one lane element per *run* and pay a final
+# np.repeat expansion; charged per row, that is far below a serial scan
+RLE_RATIO = 0.25
 # the parallel cutover was measured with a ~2-atom compare; charging the
 # crossover at cutover * PARALLEL_CAL_ATOMS of work keeps the seeded fan-out
 # threshold at the measured row count for typical predicates
@@ -93,6 +100,9 @@ _ROUTE_RATIO = {
     "insitu": INSITU_RATIO,
     "insitu_heavy": INSITU_RATIO,
     "batch_pivot": 1.0,
+    "device_member": MEMBER_RATIO,
+    "device_float": DEVICE_RATIO_XLA,
+    "insitu_rle": RLE_RATIO,
 }
 
 # route -> dispatch probe family invalidated when the route's estimates
@@ -101,9 +111,12 @@ _DISPATCH_KIND = {
     "device": "device",
     "device_batch": "device",
     "device_insitu": "device",
+    "device_member": "member",
+    "device_float": "device",
     "parallel": "parallel",
     "insitu": "insitu",
     "insitu_heavy": "insitu",
+    "insitu_rle": "rle",
     "decode": "insitu",
 }
 
@@ -245,10 +258,14 @@ class Choice:
         self.decision = decision
 
     def done(self, seconds: float, route: Optional[str] = None,
-             work: Optional[float] = None) -> None:
+             work: Optional[float] = None, observe: bool = True) -> None:
         """Report the measured wall time of the executed route.  Pass
         ``route=`` when execution fell back to a different candidate than the
-        one originally chosen (the decision records the fallback)."""
+        one originally chosen (the decision records the fallback).  Pass
+        ``observe=False`` when the note exists only for plan visibility and
+        the executed path already reports its own timing — feeding the same
+        wall time twice under different work scales would corrupt the
+        per-route slopes."""
         r = self.route if route is None else route
         w = self.work if work is None else work
         est = self.est
@@ -260,7 +277,8 @@ class Choice:
                 self.decision.est_s = est
         if self.decision is not None:
             self.decision.actual_s = seconds
-        self.model.observe(r, w, seconds, est=est)
+        if observe:
+            self.model.observe(r, w, seconds, est=est)
 
 
 class CostModel:

@@ -14,7 +14,8 @@ host but the one they were tuned on:
 Each is measured lazily, once per process, on tiny synthetic workloads
 (<100 ms total), cached under a lock, and overridable via environment for CI
 and tests (``PREDTRACE_DEVICE_CUTOVER``, ``PREDTRACE_PARALLEL_CUTOVER``,
-``PREDTRACE_INSITU_CUTOVER`` — integer row thresholds).
+``PREDTRACE_INSITU_CUTOVER``, ``PREDTRACE_MEMBER_CUTOVER``,
+``PREDTRACE_RLE_CUTOVER`` — integer row thresholds).
 
 Probes are *invalidatable*: each cached measurement is a :class:`Probe`
 stamped with its wall-clock time and a confidence that decays every time the
@@ -289,6 +290,107 @@ def insitu_scan_cutover() -> int:
 
 
 # --------------------------------------------------------------------------- #
+# fused-membership cutover (rows x set-atoms work product)
+# --------------------------------------------------------------------------- #
+
+_member_cutovers: dict = {}
+
+
+def member_scan_probe(key: str,
+                      launch: Callable[[np.ndarray, np.ndarray], np.ndarray]) -> Probe:
+    """Measured row count below which a host ``np.isin`` probe beats the
+    fused in-grid membership search, as a stamped :class:`Probe`
+    (``PREDTRACE_MEMBER_CUTOVER`` pins it).  ``launch(values, vset)`` must run
+    the backend's real fused-membership launch (slab build, set-slab upload,
+    readback included) so the crossover prices the whole path, not the kernel
+    alone."""
+    env = _env_int("PREDTRACE_MEMBER_CUTOVER")
+    if env is not None:
+        return _mk_probe("member", env, source="env")
+    with _LOCK:
+        if key in _member_cutovers:
+            return _member_cutovers[key]
+        rng = np.random.default_rng(17)
+        sizes = (1 << 16, 1 << 20)
+        vals = {n: rng.integers(-(10 ** 6), 10 ** 6, n).astype(np.int32)
+                for n in sizes}
+        vset = np.unique(rng.integers(-(10 ** 6), 10 ** 6, 512)).astype(np.int32)
+
+        def host(n: int) -> np.ndarray:
+            return np.isin(vals[n], vset)
+
+        def dev(n: int) -> np.ndarray:
+            return launch(vals[n], vset)
+
+        try:
+            rows = measured_crossover(host, dev, sizes)
+        except Exception:
+            rows = float("inf")
+        cut = NEVER if rows == float("inf") else int(
+            min(max(rows * 1.25, 1 << 12), NEVER)
+        )
+        probe = _mk_probe("member", cut)
+        _member_cutovers[key] = probe
+        return probe
+
+
+def member_scan_cutover(key: str,
+                        launch: Callable[[np.ndarray, np.ndarray], np.ndarray]) -> int:
+    """Cutover value of :func:`member_scan_probe` (compat accessor)."""
+    return member_scan_probe(key, launch).value
+
+
+# --------------------------------------------------------------------------- #
+# run-space RLE cutover (encoded-stage rows)
+# --------------------------------------------------------------------------- #
+
+_rle_cutovers: dict = {}
+
+
+def rle_scan_probe(key: str,
+                   launch: Callable[[np.ndarray, np.ndarray, int], np.ndarray]) -> Probe:
+    """Measured row count below which the host per-run compare-and-repeat
+    beats launching the kernel over the run lane, as a stamped :class:`Probe`
+    (``PREDTRACE_RLE_CUTOVER`` pins it).  ``launch(run_values, run_lengths,
+    thr)`` must run the backend's real run-space path — run-lane launch plus
+    the ``np.repeat`` expansion of the surviving runs."""
+    env = _env_int("PREDTRACE_RLE_CUTOVER")
+    if env is not None:
+        return _mk_probe("rle", env, source="env")
+    with _LOCK:
+        if key in _rle_cutovers:
+            return _rle_cutovers[key]
+        rng = np.random.default_rng(19)
+        sizes = (1 << 17, 1 << 21)
+        data = {}
+        for n in sizes:
+            runs = max(n >> 4, 1)  # ~16-row runs: the regime RLE encodes for
+            rv = rng.integers(-1000, 1000, runs).astype(np.int32)
+            rl = np.full(runs, n // runs, dtype=np.int64)
+            rl[-1] += n - int(rl.sum())
+            data[n] = (rv, rl)
+
+        def host(n: int) -> np.ndarray:
+            rv, rl = data[n]
+            return np.repeat(rv >= 0, rl)
+
+        def dev(n: int) -> np.ndarray:
+            rv, rl = data[n]
+            return launch(rv, rl, 0)
+
+        try:
+            rows = measured_crossover(host, dev, sizes)
+        except Exception:
+            rows = float("inf")
+        cut = NEVER if rows == float("inf") else int(
+            min(max(rows * 1.25, 1 << 12), NEVER)
+        )
+        probe = _mk_probe("rle", cut)
+        _rle_cutovers[key] = probe
+        return probe
+
+
+# --------------------------------------------------------------------------- #
 # host scan cost baseline + probe invalidation
 # --------------------------------------------------------------------------- #
 
@@ -319,7 +421,8 @@ def host_row_cost() -> float:
 def note_disagreement(kind: str) -> int:
     """The cost model observed actuals persistently disagreeing (>3x) with
     estimates seeded from this probe family (``"device"`` / ``"parallel"`` /
-    ``"insitu"``): drop the cached probe so the next consult re-measures,
+    ``"insitu"`` / ``"member"`` / ``"rle"``): drop the cached probe so the
+    next consult re-measures,
     and decay the family's confidence.  Returns the disagreement count."""
     with _LOCK:
         n = _disagreements.get(kind, 0) + 1
@@ -339,6 +442,10 @@ def invalidate(kind: Optional[str] = None) -> None:
             _parallel_cutovers.clear()
         if kind in (None, "insitu"):
             _insitu_cutover = None
+        if kind in (None, "member"):
+            _member_cutovers.clear()
+        if kind in (None, "rle"):
+            _rle_cutovers.clear()
         if kind is None:
             _host_row_cost = None
 
@@ -354,6 +461,8 @@ def probe_info() -> Dict[str, object]:
                          for k, p in _parallel_cutovers.items()},
             "insitu": (None if _insitu_cutover is None
                        else _insitu_cutover.as_dict()),
+            "member": {k: p.as_dict() for k, p in _member_cutovers.items()},
+            "rle": {k: p.as_dict() for k, p in _rle_cutovers.items()},
             "disagreements": dict(_disagreements),
             "host_row_cost_s": _host_row_cost,
         }
@@ -368,5 +477,7 @@ def reset_for_tests() -> None:
         _device_cutovers.clear()
         _parallel_cutovers.clear()
         _insitu_cutover = None
+        _member_cutovers.clear()
+        _rle_cutovers.clear()
         _host_row_cost = None
         _disagreements.clear()

@@ -227,7 +227,7 @@ class PartitionExecutor:
 
     def _fanout_scan(self, pred: Expr, table: PartitionedTable,
                      binding: Dict[str, object], plan) -> np.ndarray:
-        from .cost import prog_atoms
+        from .cost import active_recorder, prog_atoms
 
         prog, alive = plan
         n = table.nrows
@@ -258,7 +258,25 @@ class PartitionExecutor:
         # already computed), so surviving partitions are never sliced and
         # the per-partition jit scans disappear into one launch.  The carry
         # verdict is the backend's cost-model compare (fused_carry_ok).
-        if carry is not None and carry(prog, table, binding, total):
+        carried = carry is not None and carry(prog, table, binding, total)
+        refused = None
+        if carry is not None and not carried:
+            # the device carry was considered and refused by the backend's
+            # own cost compare — surface that exactly like the store's
+            # ranked-walk fallback: the decision's ``fallback_from`` names
+            # the refused route once ``done(route=...)`` reports what ran
+            self.engine.stats.bump(carry_refused=1)
+            if active_recorder() is not None:
+                refused = cm.note(
+                    f"scan:{getattr(table, 'name', None) or '?'}",
+                    "device", float(total) * A,
+                    meta={"rows": int(n), "atoms": int(A),
+                          "rows_alive": int(total), "carry": False},
+                    alternatives=[("serial", float(n) * A),
+                                  ("pruned", float(total + pr) * A),
+                                  ("parallel", float(total) * A,
+                                   self._parallel_seed())])
+        if carried:
             ns = int(np.count_nonzero(alive))
             self.engine.record_prune(ns, len(alive) - ns)
             ch = cm.note(f"scan:{getattr(table, 'name', None) or '?'}",
@@ -276,18 +294,30 @@ class PartitionExecutor:
                        cm.estimate("pruned", float(total + pr) * A))):
             # small / contiguous work: the engine's serial pruned scan picks
             # the cheapest shape (slice, gather, or full scan)
-            return self.engine._scan_pruned(prog, table, binding, plan)
+            t0 = time.perf_counter()
+            mask = self.engine._scan_pruned(prog, table, binding, plan)
+            if refused is not None:
+                # visibility-only: _scan_pruned records and observes its own
+                # decision for the same wall time
+                refused.done(time.perf_counter() - t0, route="pruned",
+                             work=float(total + pr) * A, observe=False)
+            return mask
         ns = int(np.count_nonzero(alive))
         self.engine.record_prune(ns, len(alive) - ns)
-        ch = cm.note(f"scan:{getattr(table, 'name', None) or '?'}",
-                     "parallel", float(total) * A, meta={
-                         "rows": int(n), "atoms": int(A),
-                         "rows_alive": int(total), "alive": ns},
-                     alternatives=[("serial", float(n) * A),
-                                   ("pruned", float(total + pr) * A)])
+        if refused is not None:
+            ch = refused
+        else:
+            ch = cm.note(f"scan:{getattr(table, 'name', None) or '?'}",
+                         "parallel", float(total) * A, meta={
+                             "rows": int(n), "atoms": int(A),
+                             "rows_alive": int(total), "alive": ns},
+                         alternatives=[("serial", float(n) * A),
+                                       ("pruned", float(total + pr) * A)])
         t0 = time.perf_counter()
         mask = self.fanout_bounds(prog, table, binding, bounds, pool)
-        ch.done(time.perf_counter() - t0)
+        ch.done(time.perf_counter() - t0,
+                route="parallel" if refused is not None else None,
+                work=float(total) * A if refused is not None else None)
         return mask
 
     def fanout_bounds(self, prog, table: Table, binding: Dict[str, object],

@@ -131,6 +131,7 @@ def _eval_pred(pred: Expr, table: Table, binding: Dict[str, object],
     # (first atoms are usually keys), then verifies tuple consistency on the
     # few surviving candidates.
     from .expr import cols_of as _cols_of
+    from .scan import _sorted_unique
 
     for sid, plist in tuple_groups.items():
         from .executor import composite_codes
@@ -149,7 +150,10 @@ def _eval_pred(pred: Expr, table: Table, binding: Dict[str, object],
         for lhs, sel_vals in atoms:
             env = {c: table.cols[c][idx] for c in _cols_of(lhs)}
             v = np.asarray(eval_np(lhs, env, {}, n=len(idx)))
-            keep = np.isin(v, np.unique(sel_vals))
+            # sorted-unique is hoisted out of the per-partition loop: the
+            # stage selection array is the same object every call, so the
+            # id-keyed cache sorts it once per predicate, not once per part
+            keep = np.isin(v, _sorted_unique(sel_vals))
             idx = idx[keep]
             lhs_vals = [lv[keep] for lv in lhs_vals]
             lhs_vals.append(v[keep])

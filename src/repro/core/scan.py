@@ -22,9 +22,12 @@ Atom classes (a conjunction is split at compile time):
 Backends are pluggable:
 
 * :class:`NumpyBackend`  — vectorized NumPy, the oracle and host fast path.
-* :class:`PallasBackend` — routes integer comparison atoms through the fused
-  ``kernels/pred_filter`` Pallas scan and membership atoms through the
-  ``kernels/membership`` probe (interpret mode on CPU; compiled on TPU).
+* :class:`PallasBackend` — routes the whole atom program through the fused
+  ``kernels/pred_filter`` batched scan: int32 comparison atoms directly,
+  float32 comparisons via a monotone sign-folded int32 key lane (exact
+  NaN/±inf semantics by threshold translation), and ``IN`` atoms in-grid
+  via per-lane binary search over device-resident sorted set segments
+  (interpret mode on CPU; compiled on TPU).
 * :meth:`ScanEngine.jit_scan` — a structure-cached ``jax.jit`` of
   ``eval_jnp`` used by the sharded scanner in ``core/distributed.py``.
 
@@ -189,6 +192,33 @@ class LRUCache:
                     "evictions": self.evictions}
 
 
+# membership-set sort cache: zone-restrict overlap checks and the tuple-
+# membership evaluator consult the same value sets once per partition /
+# per atom; the sort+unique is hoisted here, keyed by array identity (the
+# strong ref in the entry keeps the id stable while cached)
+_SORTED_SETS: LRUCache = LRUCache(128)
+
+
+def _sorted_unique(vals: np.ndarray) -> np.ndarray:
+    """NaN-free sorted unique of a membership set, cached by identity so
+    repeated consults (per partition, per atom, per scan) sort once."""
+    k = id(vals)
+    ent = _SORTED_SETS.get(k)
+    if ent is not None and ent[0] is vals:
+        return ent[1]
+    u = np.unique(vals)
+    if u.dtype.kind == "f":
+        u = u[~np.isnan(u)]
+    _SORTED_SETS[k] = (vals, u)
+    return u
+
+
+def sorted_set_counters() -> Dict[str, int]:
+    """Hit/miss counters of the membership-set sort cache — the proof that
+    the per-predicate hoist reuses sorted sets instead of re-sorting."""
+    return _SORTED_SETS.counters()
+
+
 # --------------------------------------------------------------------------- #
 # compiled representation
 # --------------------------------------------------------------------------- #
@@ -351,9 +381,7 @@ def _set_overlap(vals: np.ndarray, lo: np.ndarray, hi: np.ndarray) -> np.ndarray
     """Per-partition: does any member of ``vals`` fall inside ``[lo, hi]``?
     NaN members never match (``np.isin`` semantics); NaN bounds (all-null
     partitions) produce empty windows, i.e. no overlap."""
-    u = np.unique(vals)
-    if u.dtype.kind == "f":
-        u = u[~np.isnan(u)]
+    u = _sorted_unique(vals)
     if u.size == 0:
         return np.zeros(len(lo), dtype=bool)
     with np.errstate(invalid="ignore"):
@@ -603,8 +631,115 @@ def _lane_thr(op: int, t) -> Optional[Tuple[int, int]]:
     return (code, ti)
 
 
+# --------------------------------------------------------------------------- #
+# float32 key lane: order-preserving int32 keys
+# --------------------------------------------------------------------------- #
+
+_KEY_POS_INF = int(np.float32(np.inf).view(np.int32))   # key(+inf)
+_KEY_NEG_INF = -_KEY_POS_INF - 1                        # key(-inf)
+# -0.0 canonicalizes to +0.0 before the sign fold, so key -1 (the would-be
+# image of -0.0) has no pre-image: a guaranteed-empty equality probe for
+# NaN thresholds and values float32 can't represent
+_KEY_IMPOSSIBLE = -1
+
+
+def _f32_key(arr: np.ndarray) -> np.ndarray:
+    """Total-order int32 keys for a float32 lane: canonicalize -0.0, then
+    fold the sign bit so integer key order equals IEEE numeric order.  NaN
+    lanes fold *outside* ``[key(-inf), key(+inf)]`` (above it for +NaN,
+    below for -NaN), which the two-sided threshold intervals exploit to
+    exclude them exactly as numpy comparisons do."""
+    v = np.where(arr == 0.0, np.float32(0.0), arr)
+    b = v.view(np.int32)
+    return np.where(b < 0, b ^ np.int32(0x7FFFFFFF), b).astype(np.int32)
+
+
+def _f32_key_scalar(f) -> int:
+    f = np.float32(f)
+    if f == 0.0:
+        f = np.float32(0.0)
+    b = int(f.view(np.int32))
+    return (b ^ 0x7FFFFFFF) if b < 0 else b
+
+
+def _f32_atoms(op: int, v) -> Optional[Tuple[Tuple[int, int], ...]]:
+    """Key-space expansion of ``f32col <op> v`` whose static structure
+    depends on the *op only* (so batched bindings share one kernel trace):
+    ``==`` / ``!=`` stay one key atom; order compares become a two-sided
+    key interval whose outer bound also excludes NaN lanes.  The
+    comparison space mirrors numpy's NEP-50 promotion exactly: weak python
+    scalars (and np.float32/float16/bool_) cast onto the float32 lattice
+    *before* comparing, while strong np.float64/np.integer scalars compare
+    in float64 and snap to the enclosing key.  NaN thresholds become
+    impossible / tautological forms.  None when ``v`` leaves the scalar
+    fragment (the host oracle then reproduces numpy's behavior, including
+    its OverflowError on unconvertible ints)."""
+    if v is None or _is_setlike(v):
+        return None
+    if isinstance(v, np.longdouble):
+        return None
+    if isinstance(v, (np.floating, np.integer, np.bool_)):
+        # strong numpy scalars: float64 / integers promote the comparison
+        # to float64; float32 / float16 / bool_ stay on the f32 lattice
+        mode64 = isinstance(v, (np.float64, np.integer))
+        t = float(v)
+    elif isinstance(v, (bool, int, float)):
+        mode64 = False  # weak python scalar: casts to the column's float32
+        try:
+            t = float(v)
+        except OverflowError:
+            return None  # numpy raises on such ints too
+    else:
+        return None
+    if t != t:  # NaN: False under every op but != (which is all-True)
+        if op == EQ:
+            return ((EQ, _KEY_IMPOSSIBLE),)
+        if op == _NE:
+            return ((_NE, _KEY_IMPOSSIBLE),)
+        return ((_GE, 0), (_LE, -1))  # empty interval, same static shape
+    with np.errstate(over="ignore"):
+        f = np.float32(t)
+    ff = float(f)
+    # float32-space compares use f itself as the (exact) threshold; the
+    # float64 mode must instead snap non-representable thresholds to the
+    # enclosing key — comparing ff to t in *python float64* on purpose
+    exact = ff == t or not mode64
+    k = _f32_key_scalar(f)
+    if op == EQ:
+        return ((EQ, k if exact else _KEY_IMPOSSIBLE),)
+    if op == _NE:
+        return ((_NE, k if exact else _KEY_IMPOSSIBLE),)
+    if exact:
+        # k-1 / k+1 never leave int32: real keys stop at key(±inf)
+        hi = k if op == _LE else k - 1   # <=t : key<=k ; <t : key<=k-1
+        lo = k if op == _GE else k + 1   # >=t : key>=k ; >t : key>=k+1
+    else:
+        # f = float32(t) rounded; which side f landed on decides the snap
+        hi = k - 1 if ff > t else k      # col <(=) t  <=>  key <= hi
+        lo = k + 1 if ff < t else k      # col >(=) t  <=>  key >= lo
+    if op in (_LT, _LE):
+        return ((_GE, _KEY_NEG_INF), (_LE, hi))
+    return ((_GE, lo), (_LE, _KEY_POS_INF))
+
+
+class _SetOps:
+    """Launch operands for fused membership: the flat sorted int32 key slab,
+    per-(binding, set-atom) segment offsets/lengths ``[K, M]``, the slab row
+    index of each set atom's column, and the static binary-search depth."""
+
+    __slots__ = ("set_cols", "slab", "off", "len_", "iters")
+
+    def __init__(self, set_cols: Tuple[int, ...], slab: np.ndarray,
+                 off: np.ndarray, len_: np.ndarray, iters: int):
+        self.set_cols = set_cols
+        self.slab = slab
+        self.off = off
+        self.len_ = len_
+        self.iters = iters
+
+
 def _skipped_blocks(static_atoms, lo: np.ndarray, hi: np.ndarray,
-                    thr: np.ndarray) -> int:
+                    thr: np.ndarray, set_ops: Optional[_SetOps] = None) -> int:
     """Host-side mirror of the kernel's in-grid zone check (stats only):
     grid blocks no binding can match, which the launch early-outs."""
     alive = np.ones((thr.shape[0], lo.shape[1]), dtype=bool)
@@ -624,7 +759,54 @@ def _skipped_blocks(static_atoms, lo: np.ndarray, hi: np.ndarray,
         else:
             a = h >= t
         alive &= a
+    if set_ops is not None:
+        # set atom m's bounds ride in lane rows A..A+M; a block stays alive
+        # for binding k only if some set member falls inside [lo, hi]
+        A = len(static_atoms)
+        slab = set_ops.slab
+        for m in range(len(set_ops.set_cols)):
+            l, h = lo[A + m], hi[A + m]
+            for k in range(thr.shape[0]):
+                o = int(set_ops.off[k, m])
+                ln = int(set_ops.len_[k, m])
+                if ln == 0:
+                    alive[k] = False
+                    continue
+                seg = slab[o:o + ln]
+                i = np.searchsorted(seg, l, side="left")
+                alive[k] &= (i < ln) & (seg[np.minimum(i, ln - 1)] <= h)
     return int((~alive.any(axis=0)).sum())
+
+
+def _prep_set_raw(arr: np.ndarray, flavor: str) -> Optional[np.ndarray]:
+    """Sorted unique int32 keys whose fused membership matches
+    ``np.isin(col, arr)`` exactly for a column of the given flavor.
+    Entries no column value can ever equal are dropped (out-of-range ints,
+    values float32 can't represent, NaN — ``isin`` never matches NaN);
+    None when the set itself leaves the fragment."""
+    if arr.ndim != 1 or arr.dtype.kind not in "iufb":
+        return None
+    if flavor == "int":
+        if arr.dtype.kind == "f":
+            ok = np.isfinite(arr) & (np.floor(arr) == arr)
+            a = arr[ok]
+            keys = a[(a >= INT32_MIN) & (a <= INT32_MAX)].astype(np.int64)
+        elif arr.dtype.kind == "u":
+            # range-filter in unsigned space before any cast can wrap
+            au = arr.astype(np.uint64)
+            keys = au[au <= np.uint64(INT32_MAX)].astype(np.int64)
+        else:
+            a64 = arr.astype(np.int64)
+            keys = a64[(a64 >= INT32_MIN) & (a64 <= INT32_MAX)]
+        return np.unique(keys.astype(np.int32))
+    # f32 flavor: numpy's isin compares in float64, so only set entries a
+    # float32 lane value can equal — i.e. exactly float32-representable
+    # ones — can ever match; NaN drops out via NaN != NaN
+    a64 = arr.astype(np.float64)
+    with np.errstate(over="ignore"):
+        f32 = a64.astype(np.float32)
+    keep = f32.astype(np.float64) == a64
+    return np.unique(_f32_key(f32[keep]))
 
 
 class _KernelSlab:
@@ -647,10 +829,14 @@ class PallasBackend(NumpyBackend):
     Comparison atoms in the int32 fragment run through the fused
     ``kernels/pred_filter`` batched kernel over a device-resident columnar
     slab (uploaded once per table/column-set, with per-block zone bounds
-    fused into the launch); ``IN`` atoms run on the ``membership`` probe.
-    Atoms outside the fragment (float columns, non-integral thresholds,
-    residuals) fall back to the NumPy oracle — correctness never depends on
-    the kernel fragment.
+    fused into the launch).  float32 comparisons join the same launch via
+    an order-preserving sign-folded int32 key lane with thresholds
+    translated exactly (NaN / ±inf / -0.0 semantics match numpy
+    bit-for-bit), and ``IN`` atoms evaluate *in-grid* by per-lane binary
+    search over sorted set segments cached on device next to the slab —
+    one launch carries the whole atom program.  Atoms outside the fragment
+    (float64 columns, unbound params, residuals) fall back to the NumPy
+    oracle — correctness never depends on the kernel fragment.
 
     ``interpret=None`` (default) resolves the execution mode per host:
     compiled Pallas on TPU, the jitted XLA graph of the same fused
@@ -669,6 +855,11 @@ class PallasBackend(NumpyBackend):
     # kernel slabs hold full-table copies — keep the cap small
     SLAB_CACHE = 32
     COL_OK_CACHE = 4096
+    SET_CACHE = 64
+    # largest total key count one launch's set slab may carry: past this the
+    # linear host probe beats the deepening binary search anyway, and device
+    # set memory stays bounded
+    SET_SLAB_LIMIT = 1 << 16
 
     # the slab caches make concurrent scans racy; the parallel partition
     # executor falls back to serial per-partition scans on this backend
@@ -705,10 +896,20 @@ class PallasBackend(NumpyBackend):
         self._cost = None  # CostModel, attached by the owning engine
         self._device_confidence = 1.0
         self._batch_confidence = 1.0
-        self._bench_slabs: Dict = {}  # cutover-measurement slabs (2 tiny)
+        # prepared membership sets (sorted int32 key segments) by value
+        # identity — the launch reuses them across bindings and scans
+        self._sets: LRUCache = LRUCache(self.SET_CACHE)
+        # member / rle cutovers follow the batch pattern: an explicit
+        # device_cutover forces them too (the testing configuration)
+        self._member_cutover = device_cutover
+        self._member_confidence = 1.0
+        self._rle_cutover = device_cutover
+        self._rle_confidence = 1.0
+        self._bench_slabs: Dict = {}  # cutover-measurement slabs (tiny)
 
     def caches(self) -> Dict[str, LRUCache]:
-        return {"slabs": self._slabs, "col_ok": self._col_ok}
+        return {"slabs": self._slabs, "col_ok": self._col_ok,
+                "sets": self._sets}
 
     def attach_stats(self, stats) -> None:
         """Called by the owning ScanEngine so device launches land in its
@@ -752,6 +953,50 @@ class PallasBackend(NumpyBackend):
             self._batch_cutover = probe.value
             self._batch_confidence = probe.confidence
         return self._batch_cutover
+
+    def member_cutover_value(self) -> int:
+        """rows-work product below which the host ``np.isin`` probe beats
+        the fused in-grid membership search."""
+        if self._forced:
+            return 0
+        if self._member_cutover is None:
+            from .dispatch import member_scan_probe
+
+            probe = member_scan_probe(
+                f"member:{self.mode}:{self.block_rows}", self._bench_member)
+            self._member_cutover = probe.value
+            self._member_confidence = probe.confidence
+        return self._member_cutover
+
+    def rle_cutover_value(self) -> int:
+        """rows-work product below which the host run-space evaluate-and-
+        expand beats routing the run values through a device launch."""
+        if self._forced:
+            return 0
+        if self._rle_cutover is None:
+            from .dispatch import rle_scan_probe
+
+            probe = rle_scan_probe(
+                f"rle:{self.mode}:{self.block_rows}", self._bench_rle)
+            self._rle_cutover = probe.value
+            self._rle_confidence = probe.confidence
+        return self._rle_cutover
+
+    def _member_seed(self) -> Dict[str, float]:
+        """Cost-model seed kwargs for the fused-membership route."""
+        from .cost import MEMBER_RATIO
+
+        return {"cutover": float(self.member_cutover_value()),
+                "ratio": MEMBER_RATIO,
+                "confidence": self._member_confidence}
+
+    def _rle_seed(self) -> Dict[str, float]:
+        """Cost-model seed kwargs for the run-space rle route."""
+        from .cost import RLE_RATIO
+
+        return {"cutover": float(self.rle_cutover_value()),
+                "ratio": RLE_RATIO,
+                "confidence": self._rle_confidence}
 
     def _device_ratio(self) -> float:
         """Seeded device marginal cost relative to the serial host scan:
@@ -798,6 +1043,38 @@ class PallasBackend(NumpyBackend):
         atoms = tuple((j, codes[j % 4]) for j in range(thr.shape[1]))
         return self._launch(entry, atoms, thr, count_stats=False)
 
+    def _bench_member(self, vals: np.ndarray, vset: np.ndarray) -> np.ndarray:
+        """Measurement probe for ``dispatch.member_scan_probe``: a real
+        fused-membership launch over a synthetic column (slab build
+        amortized, as in warm real scans)."""
+        from ..kernels.pred_filter import search_iters
+
+        key = ("member", id(vals), vals.shape)
+        entry = self._bench_slabs.get(key)
+        if entry is None:
+            entry = self._build_entry(vals[None, :].astype(np.int32))
+            self._bench_slabs[key] = entry
+        slab = np.unique(vset.astype(np.int32))
+        ops = _SetOps((0,), slab, np.zeros((1, 1), np.int32),
+                      np.full((1, 1), slab.size, np.int32),
+                      search_iters(int(slab.size)))
+        thr = np.full((1, 1), INT32_MIN, dtype=np.int32)
+        return self._launch(entry, ((0, _GE),), thr, count_stats=False,
+                            set_ops=ops)[0]
+
+    def _bench_rle(self, rv: np.ndarray, rl: np.ndarray,
+                   thr: int) -> np.ndarray:
+        """Measurement probe for ``dispatch.rle_scan_probe``: evaluate in
+        run space on device, expand survivors on the host."""
+        key = ("rle", id(rv), rv.shape)
+        entry = self._bench_slabs.get(key)
+        if entry is None:
+            entry = self._build_entry(rv[None, :].astype(np.int32))
+            self._bench_slabs[key] = entry
+        t = np.asarray([[thr]], dtype=np.int32)
+        run_mask = self._launch(entry, ((0, _GE),), t, count_stats=False)[0]
+        return np.repeat(run_mask, rl)
+
     # ------------------------------------------------------------------ #
     # table scans
     # ------------------------------------------------------------------ #
@@ -806,8 +1083,22 @@ class PallasBackend(NumpyBackend):
         n = table.nrows
         mask = np.ones(n, dtype=bool)
         kernel_cmp, fallback_cmp = self._split_cmp(prog, table, binding)
+        if n:
+            kernel_isin, fallback_isin = self._split_isin(prog, table,
+                                                          binding)
+        else:
+            kernel_isin, fallback_isin = [], list(prog.isin_atoms)
         ch = None
-        if kernel_cmp and n:
+        if (kernel_cmp or kernel_isin) and n:
+            # route name tells explain() what the launch carries: fused
+            # membership dominates the cost shape when present, the float
+            # key lane otherwise, plain int32 compares else
+            route = ("device_member" if kernel_isin
+                     else "device_float" if any(
+                         self._f32_col(table, a.col) for a in kernel_cmp)
+                     else "device")
+            seed = (self._member_seed() if route == "device_member"
+                    else self._device_seed())
             if self._cost is not None and not self._forced:
                 # cost-model consult, recorded for explain(): the fused
                 # launch vs. keeping every atom on the numpy path
@@ -817,26 +1108,31 @@ class PallasBackend(NumpyBackend):
                 ch = self._cost.choose(
                     f"scan:{getattr(table, 'name', None) or '?'}",
                     [("serial", float(n) * A),
-                     ("device", float(n) * len(kernel_cmp),
-                      self._device_seed())],
+                     (route, float(n) * (len(kernel_cmp) + len(kernel_isin)),
+                      seed)],
                     meta={"rows": int(n), "atoms": int(A),
                           "kernel_atoms": len(kernel_cmp),
+                          "kernel_sets": len(kernel_isin),
                           "backend": self.mode},
                 )
-                use_dev = ch.route == "device"
+                use_dev = ch.route == route
             else:
-                use_dev = self._use_device(n, len(kernel_cmp), 1)
+                use_dev = self._use_device(
+                    n, len(kernel_cmp) + len(kernel_isin), 1)
             if not use_dev:
                 # below the measured crossover the numpy path wins — keep it
                 fallback_cmp = kernel_cmp + fallback_cmp
                 kernel_cmp = []
+                fallback_isin = [a for a, _ in kernel_isin] + fallback_isin
+                kernel_isin = []
         t0 = time.perf_counter() if ch is not None else 0.0
-        if kernel_cmp and n:
-            mask &= self._kernel_scan(kernel_cmp, table, binding)
+        if (kernel_cmp or kernel_isin) and n:
+            mask &= self._kernel_scan(kernel_cmp, table, binding,
+                                      isin=kernel_isin)
         for a in fallback_cmp:
             mask &= self._cmp_mask(a, table, binding, n)
-        for a in prog.isin_atoms:
-            mask &= self._probe_mask(a, table, binding, n)
+        for a in fallback_isin:
+            mask &= self._isin_mask(a, table, binding, n)
         for r in (prog.residual_static, prog.residual_dynamic):
             if r is not None:
                 mask &= np.asarray(eval_np(r, table.cols, binding, n=n), bool)
@@ -850,43 +1146,136 @@ class PallasBackend(NumpyBackend):
         """One fused launch answering every binding of a coalesced
         ``query_batch``: thresholds become a ``[B, A]`` runtime operand, each
         column block is read once for all B predicates, and in-grid zone
-        pruning skips blocks no binding can match.  Returns None when the
-        program leaves the kernel fragment or the batch is below the
-        measured cutover (callers keep the host batch path)."""
-        if (prog.isin_atoms or prog.residual_static is not None
-                or prog.residual_dynamic is not None or not prog.cmp_atoms
-                or not bindings):
+        pruning skips blocks no binding can match.  Membership atoms ride
+        the same launch as ragged per-binding set segments; float32 atoms
+        expand into key-space intervals with op-only static structure.
+        Returns None when the program leaves the kernel fragment or the
+        batch is below the measured cutover (callers keep the host batch
+        path)."""
+        if (prog.residual_static is not None
+                or prog.residual_dynamic is not None
+                or not (prog.cmp_atoms or prog.isin_atoms) or not bindings):
             return None
         atoms = prog.cmp_atoms
         n = table.nrows
-        if n and not self._use_device(n, len(atoms), len(bindings)):
+        if n and not self._use_device(n, len(atoms) + len(prog.isin_atoms),
+                                      len(bindings)):
             return None
-        thr = np.empty((len(bindings), len(atoms)), dtype=np.int32)
-        for j, a in enumerate(atoms):
-            if a.kind == "col" or not self._int32_col(table, a.col):
+        B = len(bindings)
+        cols = tuple(sorted({a.col for a in atoms}
+                            | {a.col for a in prog.isin_atoms}))
+        order = {c: i for i, c in enumerate(cols)}
+        static: List[Tuple[int, int]] = []
+        thr_cols: List[np.ndarray] = []
+        for a in atoms:
+            if a.kind == "col":
                 return None
+            flavor = self._col_flavor(table, a.col)
+            if flavor is None:
+                return None
+            if flavor == "f32":
+                # canonical expansions share static structure across B:
+                # one key atom for ==/!=, a two-sided interval otherwise
+                plans = []
+                for b in bindings:
+                    v = a.rhs if a.kind == "lit" else _bind(b, a.rhs)
+                    p = _f32_atoms(a.op, v)
+                    if p is None:
+                        return None
+                    plans.append(p)
+                for j in range(len(plans[0])):
+                    static.append((order[a.col], plans[0][j][0]))
+                    thr_cols.append(np.asarray([p[j][1] for p in plans],
+                                               dtype=np.int32))
+                continue
             if a.kind == "lit":
                 t = self._kernel_value(a.rhs)
                 if t is None:
                     return None
-                thr[:, j] = t
+                col_thr = np.full(B, t, dtype=np.int32)
             else:
+                col_thr = np.empty(B, dtype=np.int32)
                 for k, b in enumerate(bindings):
                     t = self._kernel_value(_bind(b, a.rhs))
                     if t is None:
                         return None
-                    thr[k, j] = t
+                    col_thr[k] = t
+            static.append((order[a.col], a.op))
+            thr_cols.append(col_thr)
+        set_ops = None
+        if prog.isin_atoms:
+            set_ops = self._batch_set_operands(prog, table, bindings, order)
+            if set_ops is None:
+                return None
         if n == 0:
             return [np.zeros(0, dtype=bool) for _ in bindings]
-        cols = tuple(sorted({a.col for a in atoms}))
-        order = {c: i for i, c in enumerate(cols)}
+        if not static:
+            # pure-membership batch: the kernel wants >= 1 cmp atom, so
+            # inject the tautology lane >= INT32_MIN on a set column
+            static.append((set_ops.set_cols[0], _GE))
+            thr_cols.append(np.full(B, INT32_MIN, dtype=np.int32))
         entry = self._slab_entry(table, cols)
-        static = tuple((order[a.col], a.op) for a in atoms)
-        masks = self._launch(entry, static, thr)
+        thr = np.stack(thr_cols, axis=1)
+        masks = self._launch(entry, tuple(static), thr, set_ops=set_ops)
         if self._stats is not None:
-            self._stats.bump(device_batch_scans=1,
-                             device_batch_rows=len(bindings))
+            bumps = {"device_batch_scans": 1, "device_batch_rows": B}
+            if prog.isin_atoms:
+                bumps["member_fused_scans"] = 1
+                bumps["member_fused_sets"] = len(prog.isin_atoms) * B
+            if any(self._f32_col(table, a.col) for a in atoms):
+                bumps["float_lane_scans"] = 1
+            self._stats.bump(**bumps)
         return list(masks)
+
+    def _batch_set_operands(self, prog: AtomProgram, table: Table,
+                            bindings: Sequence[Dict[str, object]],
+                            order: Dict[str, int]) -> Optional[_SetOps]:
+        """Ragged ``[B, M]`` segment table for a coalesced batch: per-binding
+        sets concatenate into one slab, lit sets share one segment across
+        all bindings.  None when any set leaves the fragment, a param is
+        unbound, or the combined slab blows the launch budget."""
+        from ..kernels.pred_filter import search_iters
+
+        B = len(bindings)
+        M = len(prog.isin_atoms)
+        col_idxs: List[int] = []
+        segs: List[np.ndarray] = []
+        off = np.zeros((B, M), dtype=np.int32)
+        ln = np.zeros((B, M), dtype=np.int32)
+        pos = 0
+        max_len = 1
+        for m, a in enumerate(prog.isin_atoms):
+            flavor = (self._col_flavor(table, a.col)
+                      if a.kind != "col" else None)
+            if flavor is None:
+                return None
+            col_idxs.append(order[a.col])
+            if a.kind == "lit":
+                keys = self._prepared_set(a.rhs, flavor)
+                if keys is None:
+                    return None
+                segs.append(keys)
+                off[:, m] = pos
+                ln[:, m] = keys.size
+                pos += keys.size
+                max_len = max(max_len, int(keys.size))
+            else:
+                for k, b in enumerate(bindings):
+                    if a.rhs not in b:
+                        return None  # unbound: the host path raises uniformly
+                    keys = self._prepared_set(b[a.rhs], flavor)
+                    if keys is None:
+                        return None
+                    segs.append(keys)
+                    off[k, m] = pos
+                    ln[k, m] = keys.size
+                    pos += keys.size
+                    max_len = max(max_len, int(keys.size))
+        if pos > self.SET_SLAB_LIMIT:
+            return None
+        slab = (np.concatenate(segs).astype(np.int32) if pos
+                else np.zeros(1, dtype=np.int32))
+        return _SetOps(tuple(col_idxs), slab, off, ln, search_iters(max_len))
 
     # ------------------------------------------------------------------ #
     # encoded (StoredTable) scans — in situ, on device, no decode
@@ -896,40 +1285,110 @@ class PallasBackend(NumpyBackend):
                     force: bool = False) -> Optional[np.ndarray]:
         """Device mask over an encoded ``core.store.StoredTable``: encoded
         columns upload once as int32 *code* slabs (dict codes, FoR frame
-        offsets, unpacked bits) and thresholds translate into code space, so
-        the fused kernel scans in situ.  None when any atom falls outside
-        the encoded-int32 fragment or below the cutover — the caller keeps
-        the host in-situ / decode paths.  ``force=True`` skips the cutover
-        consult (the store's cost-model dispatch already approved the device
-        route); viability checks still apply."""
+        offsets, unpacked bits, delta/scaled value lanes) and thresholds
+        translate into code space, so the fused kernel scans in situ.  RLE
+        columns never flatten: their atoms evaluate directly on the run
+        *values* (an n_runs-length lane) and only surviving runs expand —
+        touched work is O(runs), not O(rows), and the column never decodes.
+        None when any atom falls outside the encoded-int32 fragment or
+        below the cutover — the caller keeps the host in-situ / decode
+        paths.  ``force=True`` skips the cutover consult (the store's
+        cost-model dispatch already approved the device route); viability
+        checks still apply."""
         if (prog.isin_atoms or prog.residual_static is not None
                 or prog.residual_dynamic is not None or not prog.cmp_atoms):
             return None
         n = st.nrows
         if not force and not self._use_device(n, len(prog.cmp_atoms), 1):
             return None
-        trans = []
+        trans = []      # flat int32 code lanes -> one fused launch
+        run_trans = []  # rle columns -> run-space atoms, expanded after
         for a in prog.cmp_atoms:
             if a.kind == "col":
                 return None
             enc = st.enc.get(a.col)
-            if enc is None or not self._stored_lane_ok(enc):
+            if enc is None:
                 return None
             v = a.rhs if a.kind == "lit" else binding.get(a.rhs, _UNBOUND)
             if v is _UNBOUND:
                 return None  # unbound param: the fallback raises uniformly
+            if getattr(enc, "kind", None) == "rle" and self._rle_lane_ok(enc):
+                ot = self._rle_thr(a.op, v)
+                if ot is None:
+                    return None
+                run_trans.append((a.col, ot[0], ot[1]))
+                continue
+            if not self._stored_lane_ok(enc):
+                return None
             ot = self._stored_thr(enc, a.op, v)
             if ot is None:
                 return None
             trans.append((a.col, ot[0], ot[1]))
         if n == 0:
             return np.zeros(0, dtype=bool)
-        cols = tuple(sorted({c for c, _, _ in trans}))
-        order = {c: i for i, c in enumerate(cols)}
-        static = tuple((order[c], op) for c, op, _ in trans)
-        thr = np.asarray([[t for _, _, t in trans]], dtype=np.int32)
-        entry = self._stored_entry(st, cols)
-        return self._launch(entry, static, thr)[0]
+        mask: Optional[np.ndarray] = None
+        if run_trans:
+            mask = self._rle_scan(st, run_trans)
+        if trans:
+            cols = tuple(sorted({c for c, _, _ in trans}))
+            order = {c: i for i, c in enumerate(cols)}
+            static = tuple((order[c], op) for c, op, _ in trans)
+            thr = np.asarray([[t for _, _, t in trans]], dtype=np.int32)
+            entry = self._stored_entry(st, cols)
+            flat = self._launch(entry, static, thr)[0]
+            mask = flat if mask is None else (mask & flat)
+        return mask
+
+    def _rle_lane_ok(self, enc) -> bool:
+        """Can this RLE column evaluate in run space?  The run *values*
+        must fit the int32 lanes (run lengths only drive the expansion)."""
+        ck = ("rle", id(enc))
+        entry = self._col_ok.get(ck)
+        if entry is not None and entry[0]() is enc:
+            return entry[1]
+        rv = enc.run_values
+        ok = rv.dtype.kind in "iu" and (
+            rv.size == 0
+            or (int(rv.min()) >= INT32_MIN and int(rv.max()) <= INT32_MAX))
+        with self._lock:
+            self._col_ok[ck] = (
+                weakref.ref(enc, lambda _, k=ck, d=self._col_ok: d.pop(k, None)),
+                ok,
+            )
+        return ok
+
+    @staticmethod
+    def _rle_thr(op: int, v) -> Optional[Tuple[int, int]]:
+        """Run-space atom for ``col <op> v``: runs carry the decoded values
+        themselves, so the flat-lane threshold shift applies unchanged."""
+        if v is None or _is_setlike(v):
+            return None
+        if isinstance(v, np.generic):
+            v = v.item()
+        if not isinstance(v, (bool, int, float)):
+            return None
+        return _lane_thr(op, v)
+
+    def _rle_scan(self, st, run_trans) -> np.ndarray:
+        """Evaluate rle atoms on their run-value lanes (one launch per
+        column) and expand only the surviving runs on the host."""
+        mask = np.ones(st.nrows, dtype=bool)
+        by_col: Dict[str, List[Tuple[int, int]]] = {}
+        for c, op, t in run_trans:
+            by_col.setdefault(c, []).append((op, t))
+        for c, atoms in by_col.items():
+            enc = st.enc[c]
+            if enc.run_values.size == 0:
+                continue
+            entry = self._stored_entry(st, (("runs", c),))
+            static = tuple((0, op) for op, _ in atoms)
+            thr = np.asarray([[t for _, t in atoms]], dtype=np.int32)
+            run_mask = self._launch(entry, static, thr)[0]
+            if self._stats is not None:
+                self._stats.bump(rle_run_scans=1,
+                                 rle_rows_expanded=int(st.nrows))
+            mask &= np.repeat(run_mask, enc.run_lengths)
+        return mask
 
     def _stored_lane_ok(self, enc) -> bool:
         """Can this encoding scan as an int32 code lane?  Cached per
@@ -954,7 +1413,29 @@ class PallasBackend(NumpyBackend):
             )
         elif kind == "bitpack":
             ok = True
-        else:  # rle / delta / scaled: no flat int32 lane
+        elif kind == "delta":
+            # delta lanes materialize into the slab cache once; viable when
+            # the (sorted) column's span fits int32 — min is the first
+            # anchor, max the last value of the last block
+            try:
+                if enc.n == 0:
+                    ok = True
+                elif np.dtype(enc.dtype).kind not in "iu":
+                    ok = False
+                else:
+                    lo = int(enc.anchors[0])
+                    hi = int(enc._block_vals(len(enc.anchors) - 1)[-1])
+                    ok = lo >= INT32_MIN and hi <= INT32_MAX
+            except Exception:
+                ok = False
+        elif kind == "scaled":
+            # scaled columns scan on the *inner* integer lane; thresholds
+            # translate through the verified-boundary walk (_scaled_thr),
+            # which assumes the inner decode yields the integers k itself —
+            # so only integer-decoding inner kinds qualify
+            ok = (enc.inner.kind in ("plain", "for", "bitpack", "delta")
+                  and self._stored_lane_ok(enc.inner))
+        else:  # rle: run-space path (scan_stored), no flat row lane
             ok = False
         with self._lock:
             self._col_ok[ck] = (
@@ -972,7 +1453,19 @@ class PallasBackend(NumpyBackend):
             return enc.codes.astype(np.int32)
         if kind == "for":
             return enc.packed.astype(np.int32)
-        return enc.decode().astype(np.int32)  # bitpack: 0/1 lanes
+        if kind == "scaled":
+            return PallasBackend._stored_lane(enc.inner)
+        # bitpack (0/1 lanes) and delta (cached cumsum) materialize values
+        return enc.decode().astype(np.int32)
+
+    @staticmethod
+    def _stored_lane_for(st, c) -> np.ndarray:
+        """Lane for one stored-slab column spec: a plain column name uploads
+        its int32 code lane; ``("runs", col)`` uploads the rle run *values*
+        — a lane of length n_runs, not n_rows."""
+        if isinstance(c, tuple):
+            return st.enc[c[1]].run_values.astype(np.int32)
+        return PallasBackend._stored_lane(st.enc[c])
 
     @staticmethod
     def _stored_thr(enc, op: int, v) -> Optional[Tuple[int, int]]:
@@ -982,6 +1475,7 @@ class PallasBackend(NumpyBackend):
         atom can't be answered in code space exactly."""
         if v is None or _is_setlike(v):
             return None
+        v_orig = v  # scaled columns verify in numpy's own promotion space
         if isinstance(v, np.generic):
             v = v.item()
         if not isinstance(v, (bool, int, float)):
@@ -1017,8 +1511,88 @@ class PallasBackend(NumpyBackend):
                 return _TRUE_ATOM if op == _NE else _FALSE_ATOM
             t = (int(v) if isinstance(v, (bool, int)) else float(v)) - enc.base
             return _lane_thr(op, t)
-        if kind in ("plain", "bitpack"):
+        if kind in ("plain", "bitpack", "delta"):
+            # delta lanes carry the materialized values themselves
             return _lane_thr(op, v)
+        if kind == "scaled":
+            return PallasBackend._scaled_thr(enc, op, v_orig)
+        return None
+
+    @staticmethod
+    def _scaled_bound(enc, v, strict: bool) -> Optional[int]:
+        """Smallest inner value ``k`` whose decode satisfies ``>= v``
+        (``> v`` when strict), verified against the *actual* decode chain
+        ``dtype(float64(k) / scale)``.  The chain double-rounds (float64
+        divide, then the dtype cast), so a purely rational translation of
+        the threshold is unsound; instead the exact-rational seed
+        ``ceil(v * scale)`` is walked to the verified crossing — g is
+        monotone non-decreasing, so a local crossing is the global one.
+        The comparison keeps ``v``'s original scalar type so numpy's own
+        promotion rules decide the comparison space, exactly as the
+        decoded oracle would (NEP-50: weak python floats compare on the
+        dtype's lattice, strong float64 scalars in float64).  None when
+        the bounded walk doesn't converge (host fallback)."""
+        ty = np.dtype(enc.dtype).type
+        scale = enc.scale
+
+        def ok(k: int) -> bool:
+            g = ty(np.float64(k) / scale)  # the decoded dtype scalar itself
+            return bool(g > v) if strict else bool(g >= v)
+
+        try:
+            p, q = float(v).as_integer_ratio()
+            b = -((-p * scale) // q)  # exact ceil(v * scale)
+            for _ in range(256):
+                if ok(b):
+                    if not ok(b - 1):
+                        return int(b)
+                    b -= 1
+                else:
+                    b += 1
+        except (TypeError, ValueError, OverflowError):
+            return None
+        return None
+
+    @staticmethod
+    def _scaled_thr(enc, op: int, v) -> Optional[Tuple[int, int]]:
+        """``col <op> v`` over a scaled column, rewritten onto the inner
+        integer encoding's code space through the verified boundary
+        B = min{k : decode(k) >= v} (and its strict twin U).  Equality only
+        stays in code space when the decode plateau at ``v`` is a single
+        inner value; wider plateaus defer to the host oracle."""
+        if v != v:  # NaN
+            return _TRUE_ATOM if op == _NE else _FALSE_ATOM
+        try:
+            fv = float(v)
+        except (TypeError, ValueError, OverflowError):
+            return None
+        if fv in (float("inf"), float("-inf")):
+            return _lane_thr(op, fv)  # decoded values are always finite
+        B = PallasBackend._scaled_bound(enc, v, strict=False)
+        if B is None:
+            return None
+        if op == _GE:
+            return PallasBackend._stored_thr(enc.inner, _GE, B)
+        if op == _LT:
+            return PallasBackend._stored_thr(enc.inner, _LT, B)
+        U = PallasBackend._scaled_bound(enc, v, strict=True)
+        if U is None:
+            return None
+        if op == _GT:
+            return PallasBackend._stored_thr(enc.inner, _GE, U)
+        if op == _LE:
+            return PallasBackend._stored_thr(enc.inner, _LT, U)
+        if op == EQ:
+            if U == B:
+                return _FALSE_ATOM
+            if U == B + 1:
+                return PallasBackend._stored_thr(enc.inner, EQ, B)
+            return None
+        # _NE
+        if U == B:
+            return _TRUE_ATOM
+        if U == B + 1:
+            return PallasBackend._stored_thr(enc.inner, _NE, B)
         return None
 
     # ------------------------------------------------------------------ #
@@ -1062,20 +1636,86 @@ class PallasBackend(NumpyBackend):
             return None
         return i
 
+    def _f32_col(self, table: Table, col: str) -> bool:
+        """Is a column a float32 lane for the key-space kernel path?
+        (float64 columns stay on the host oracle — no exact int64 key lane
+        exists in the int32 kernel fragment)."""
+        ck = (id(table), col, "f32")
+        entry = self._col_ok.get(ck)
+        if entry is not None and entry[0]() is table:
+            return entry[1]
+        arr = table.cols.get(col)
+        ok = arr is not None and arr.dtype == np.float32
+        with self._lock:
+            self._col_ok[ck] = (
+                weakref.ref(table,
+                            lambda _, k=ck, d=self._col_ok: d.pop(k, None)),
+                ok,
+            )
+        return ok
+
+    def _col_flavor(self, table: Table, col: str) -> Optional[str]:
+        """Kernel lane flavor of a column: ``"int"`` (raw int32 lane),
+        ``"f32"`` (sign-folded key lane), or None (out of fragment)."""
+        if self._int32_col(table, col):
+            return "int"
+        if self._f32_col(table, col):
+            return "f32"
+        return None
+
     def _split_cmp(self, prog, table, binding):
         kernel, fallback = [], []
         for a in prog.cmp_atoms:
-            v = None
+            v = _UNBOUND
             if a.kind == "lit":
                 v = a.rhs
             elif a.kind == "param" and a.rhs in binding:
                 v = binding[a.rhs]
-            ok = (
-                a.kind != "col"
-                and self._kernel_value(v) is not None
-                and self._int32_col(table, a.col)
-            )
+            ok = False
+            if a.kind != "col" and v is not _UNBOUND:
+                flavor = self._col_flavor(table, a.col)
+                if flavor == "int":
+                    ok = self._kernel_value(v) is not None
+                elif flavor == "f32":
+                    ok = _f32_atoms(a.op, v) is not None
             (kernel if ok else fallback).append(a)
+        return kernel, fallback
+
+    def _prepared_set(self, vals, flavor: str) -> Optional[np.ndarray]:
+        """Sorted int32 key segment for one membership set, cached by value
+        identity (the strong ref in the entry keeps ids stable).  None when
+        the set can't be keyed for this column flavor."""
+        ck = ("set", id(vals), flavor)
+        ent = self._sets.get(ck)
+        if ent is not None and ent[0] is vals:
+            return ent[1]
+        keys = _prep_set_raw(np.asarray(vals), flavor)
+        with self._lock:
+            self._sets[ck] = (vals, keys)
+        return keys
+
+    def _split_isin(self, prog, table, binding):
+        """Partition membership atoms into fused-kernel candidates
+        ``[(atom, keys)]`` and host-fallback atoms, under the launch's set
+        slab budget."""
+        kernel, fallback = [], []
+        budget = self.SET_SLAB_LIMIT
+        for a in prog.isin_atoms:
+            flavor = (self._col_flavor(table, a.col)
+                      if a.kind != "col" else None)
+            vals = None
+            if flavor is not None:
+                if a.kind == "lit":
+                    vals = a.rhs
+                elif a.rhs in binding:
+                    vals = binding[a.rhs]
+            keys = (self._prepared_set(vals, flavor)
+                    if vals is not None else None)
+            if keys is None or keys.size > budget:
+                fallback.append(a)
+            else:
+                budget -= int(keys.size)
+                kernel.append((a, keys))
         return kernel, fallback
 
     def _build_entry(self, slab: np.ndarray) -> _KernelSlab:
@@ -1092,13 +1732,20 @@ class PallasBackend(NumpyBackend):
                               tuple(range(padded.shape[0])))
         return _KernelSlab(jnp.asarray(padded), lo, hi, n)
 
+    def _table_lane(self, table: Table, c: str) -> np.ndarray:
+        """int32 kernel lane for one column: raw values for int columns,
+        sign-folded total-order keys for float32 columns."""
+        arr = np.asarray(table.cols[c])
+        if arr.dtype == np.float32:
+            return _f32_key(arr)
+        return arr.astype(np.int32)
+
     def _slab_entry(self, table: Table, cols: Tuple[str, ...]) -> _KernelSlab:
         tk = id(table)
         entry = self._slabs.get(tk)
         if entry is not None and entry[0]() is table and cols in entry[1]:
             return entry[1][cols]
-        slab = np.stack([np.asarray(table.cols[c]).astype(np.int32)
-                         for c in cols])
+        slab = np.stack([self._table_lane(table, c) for c in cols])
         built = self._build_entry(slab)
         with self._lock:
             entry = self._slabs.get(tk)
@@ -1118,7 +1765,7 @@ class PallasBackend(NumpyBackend):
         entry = self._slabs.get(tk)
         if entry is not None and entry[0]() is st and cols in entry[1]:
             return entry[1][cols]
-        slab = np.stack([self._stored_lane(st.enc[c]) for c in cols])
+        slab = np.stack([self._stored_lane_for(st, c) for c in cols])
         built = self._build_entry(slab)
         with self._lock:
             entry = self._slabs.get(tk)
@@ -1132,10 +1779,13 @@ class PallasBackend(NumpyBackend):
         return built
 
     def _launch(self, entry: _KernelSlab, static_atoms: Tuple[Tuple[int, int], ...],
-                thr: np.ndarray, count_stats: bool = True) -> np.ndarray:
+                thr: np.ndarray, count_stats: bool = True,
+                set_ops: Optional[_SetOps] = None) -> np.ndarray:
         """Run one fused launch: ``[K, A]`` thresholds against the cached
-        slab, in-grid zone pruning from the cached block bounds.  Returns
-        ``[K, n]`` boolean masks (padding and K-rounding sliced away)."""
+        slab, in-grid zone pruning from the cached block bounds, plus —
+        when ``set_ops`` is given — ragged per-binding membership segments
+        searched in-grid.  Returns ``[K, n]`` boolean masks (padding and
+        K-rounding sliced away)."""
         import jax.numpy as jnp
 
         from ..kernels.pred_filter import pred_filter_batch
@@ -1148,15 +1798,28 @@ class PallasBackend(NumpyBackend):
         thr_pad = thr if Kp == K else np.vstack(
             [thr, np.repeat(thr[-1:], Kp - K, axis=0)])
         rows = [ci for ci, _ in static_atoms]
+        if set_ops is not None:
+            # set atom m's zone bounds ride in lane rows A..A+M
+            rows = rows + list(set_ops.set_cols)
         lo, hi = entry.lo[rows], entry.hi[rows]
+        kw = {}
+        if set_ops is not None:
+            off, ln = set_ops.off, set_ops.len_
+            if Kp != K:
+                off = np.vstack([off, np.repeat(off[-1:], Kp - K, axis=0)])
+                ln = np.vstack([ln, np.repeat(ln[-1:], Kp - K, axis=0)])
+            kw = dict(set_cols=set_ops.set_cols,
+                      set_slab=jnp.asarray(set_ops.slab),
+                      set_off=jnp.asarray(off), set_len=jnp.asarray(ln),
+                      iters=set_ops.iters)
         if self.mode == "pallas":
             out = pred_filter_batch(
                 entry.dev, jnp.asarray(thr_pad), static_atoms,
                 jnp.asarray(lo), jnp.asarray(hi),
-                block_rows=self.block_rows, interpret=self.interpret)
+                block_rows=self.block_rows, interpret=self.interpret, **kw)
         else:
             out = pred_filter_batch_xla(entry.dev, jnp.asarray(thr_pad),
-                                        static_atoms)
+                                        static_atoms, **kw)
         mask = np.asarray(out)[:K, :entry.n]
         if mask.dtype != np.bool_:
             mask = mask != 0
@@ -1164,38 +1827,71 @@ class PallasBackend(NumpyBackend):
             self._stats.bump(
                 device_scans=1,
                 device_rows=K * entry.n,
-                device_blocks_pruned=_skipped_blocks(static_atoms, lo, hi, thr),
+                device_blocks_pruned=_skipped_blocks(static_atoms, lo, hi,
+                                                     thr, set_ops=set_ops),
             )
         return mask
 
-    def _kernel_scan(self, atoms: List[CmpAtom], table: Table, binding):
-        cols = tuple(sorted({a.col for a in atoms}))
+    @staticmethod
+    def _set_operands(col_idxs: List[int],
+                      key_sets: List[np.ndarray]) -> _SetOps:
+        """Pack per-atom sorted key sets into the single-binding launch's
+        flat slab + ``[1, M]`` segment table (the batch path builds its own
+        ragged ``[B, M]`` in ``_batch_set_operands``)."""
+        from ..kernels.pred_filter import search_iters
+
+        off = np.zeros((1, len(key_sets)), dtype=np.int32)
+        ln = np.zeros((1, len(key_sets)), dtype=np.int32)
+        pos = 0
+        for m, ks in enumerate(key_sets):
+            off[0, m] = pos
+            ln[0, m] = ks.size
+            pos += int(ks.size)
+        slab = (np.concatenate(key_sets).astype(np.int32) if pos
+                else np.zeros(1, dtype=np.int32))
+        iters = search_iters(max((int(ks.size) for ks in key_sets),
+                                 default=1))
+        return _SetOps(tuple(col_idxs), slab, off, ln, iters)
+
+    def _kernel_scan(self, atoms: List[CmpAtom], table: Table, binding,
+                     isin: Sequence = ()):
+        cols = tuple(sorted({a.col for a in atoms}
+                            | {a.col for a, _ in isin}))
         order = {c: i for i, c in enumerate(cols)}
         entry = self._slab_entry(table, cols)
-        static = tuple((order[a.col], a.op) for a in atoms)
-        thr = np.asarray(
-            [[int(a.rhs if a.kind == "lit" else binding[a.rhs]) for a in atoms]],
-            dtype=np.int32,
-        )
-        return self._launch(entry, static, thr)[0]
-
-    def _probe_mask(self, a: IsInAtom, table: Table, binding, n) -> np.ndarray:
-        vals = a.rhs if a.kind == "lit" else _bind(binding, a.rhs)
-        if self.mode != "pallas":
-            # auto mode on non-TPU hosts: the vectorized host membership is
-            # the production path (the probe kernel validates on TPU)
-            return self._isin_mask(a, table, binding, n)
-        arr = np.asarray(vals)
-        if (
-            arr.size == 0 or n == 0
-            or arr.dtype.kind not in "iu"
-            or np.abs(arr).max(initial=0) >= 2**31
-            or not self._int32_col(table, a.col)
-        ):
-            return self._isin_mask(a, table, binding, n)
-        from ..kernels.membership import probe
-
-        return probe(table.cols[a.col], arr, interpret=self.interpret)
+        static: List[Tuple[int, int]] = []
+        thr: List[int] = []
+        n_f32 = 0
+        for a in atoms:
+            v = a.rhs if a.kind == "lit" else binding[a.rhs]
+            if self._f32_col(table, a.col):
+                n_f32 += 1
+                for op, k in _f32_atoms(a.op, v):
+                    static.append((order[a.col], op))
+                    thr.append(k)
+            else:
+                static.append((order[a.col], a.op))
+                thr.append(int(v))
+        set_ops = (self._set_operands([order[a.col] for a, _ in isin],
+                                      [keys for _, keys in isin])
+                   if isin else None)
+        if not static:
+            # pure-membership launch: the kernel wants >= 1 cmp atom, so
+            # inject the tautology lane >= INT32_MIN on a set column
+            static.append((set_ops.set_cols[0], _GE))
+            thr.append(INT32_MIN)
+        if self._stats is not None:
+            bumps: Dict[str, int] = {}
+            if isin:
+                bumps["member_fused_scans"] = 1
+                bumps["member_fused_sets"] = len(isin)
+            if n_f32:
+                bumps["float_lane_scans"] = 1
+            if bumps:
+                self._stats.bump(**bumps)
+        return self._launch(entry, tuple(static),
+                            np.asarray([thr], dtype=np.int32),
+                            set_ops=set_ops)[0]
 
     # ------------------------------------------------------------------ #
     def fused_carry_ok(self, prog: AtomProgram, table: Table,
@@ -1267,6 +1963,22 @@ class ScanStats:
     # bindings) and the bindings they covered
     device_batch_scans: int = 0
     device_batch_rows: int = 0
+    # fused membership: launches that carried IN atoms in-grid, and the set
+    # segments they bound; float_lane_scans counts launches with at least
+    # one float32 key-lane expansion
+    member_fused_scans: int = 0
+    member_fused_sets: int = 0
+    float_lane_scans: int = 0
+    # run-space rle scans on encoded stores: per-column run launches and the
+    # rows the host expansion produced without ever decoding the column
+    rle_run_scans: int = 0
+    rle_rows_expanded: int = 0
+    # store dispatch picked the run-space rle route for a stage
+    rle_insitu_chosen: int = 0
+    # partitioned scans where the fused-carry cost compare refused the
+    # device and the host path ran instead (stamped as fallback_from on the
+    # recorded decision under explain())
+    carry_refused: int = 0
     # per-stage scan-path choice on encoded stores (core/store.py dispatch):
     # device in-situ kernel / host in-situ compare / decode-then-scan
     device_chosen: int = 0

@@ -1171,12 +1171,27 @@ class IntermediateStore:
         # device carrier: encoded columns scan in situ on device as int32
         # code slabs with code-space thresholds (no decode, zone pruning
         # in-grid); only programs fully inside the encoded-int32 fragment
-        # qualify, so answers stay bit-identical to the host paths
+        # qualify, so answers stay bit-identical to the host paths.  When
+        # the predicate touches rle columns the same carrier evaluates
+        # those atoms in *run space* (O(runs) touched, one expansion), so
+        # the candidate is offered with run-aware work and its own seeded
+        # slope (``insitu_rle``) instead of the flat rows x atoms product
         dev = getattr(engine.backend, "scan_stored", None)
         if dev is not None:
-            seed_fn = getattr(engine.backend, "_device_seed", None)
-            cands.append(("device_insitu", w_full,
-                          seed_fn() if seed_fn is not None else {}))
+            rle_cols = {a.col for a in prog.cmp_atoms
+                        if a.col in st.enc and st.enc[a.col].kind == "rle"}
+            if rle_cols and not prog.isin_atoms:
+                seed_fn = getattr(engine.backend, "_rle_seed", None)
+                w_rle = float(sum(
+                    int(st.enc[a.col].run_values.size)
+                    if a.col in rle_cols else n
+                    for a in prog.cmp_atoms) + n)
+                cands.append(("insitu_rle", w_rle,
+                              seed_fn() if seed_fn is not None else {}))
+            else:
+                seed_fn = getattr(engine.backend, "_device_seed", None)
+                cands.append(("device_insitu", w_full,
+                              seed_fn() if seed_fn is not None else {}))
         cands.append(("decode", w_full))
         # a cached decoded view makes the decode cost sunk — the in-situ
         # path can no longer win, so it isn't offered as a candidate
@@ -1196,12 +1211,17 @@ class IntermediateStore:
                 mask = self.backend.scan_ranges(prog, st, binding, idx)
                 engine.stats.bump(scans=1, insitu_scans=1, prune_calls=1)
                 engine.record_prune(ns, P - ns)
-            elif route == "device_insitu":
+            elif route in ("device_insitu", "insitu_rle"):
                 mask = dev(prog, st, binding, force=True)
                 if mask is None:
                     continue
                 self._note_unpruned(engine, alive, P)
-                engine.stats.bump(scans=1, insitu_scans=1, device_chosen=1)
+                if route == "insitu_rle":
+                    engine.stats.bump(scans=1, insitu_scans=1,
+                                      rle_insitu_chosen=1)
+                else:
+                    engine.stats.bump(scans=1, insitu_scans=1,
+                                      device_chosen=1)
             elif route == "decode":
                 mask = engine.backend.scan(prog, st.to_table(), binding)
                 self._note_unpruned(engine, alive, P)

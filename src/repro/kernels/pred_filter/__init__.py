@@ -1,3 +1,9 @@
 from .ops import compile_conjunction, scan_mask
-from .pred_filter import OPS, block_bounds, pred_filter, pred_filter_batch
+from .pred_filter import (
+    OPS,
+    block_bounds,
+    pred_filter,
+    pred_filter_batch,
+    search_iters,
+)
 from .ref import pred_filter_batch_ref, pred_filter_batch_xla, pred_filter_ref

@@ -29,6 +29,20 @@ The zone bounds must genuinely bound each block's column values (build them
 with :func:`block_bounds`); pruning is then conservative by construction and
 the batched kernel is bit-identical to the zone-free reference.
 
+Membership atoms (``col IN set``) are fused into the same launch: the sorted
+per-binding value sets are concatenated into one device-resident slab
+(``set_slab``), addressed raggedly by per-``(binding, set-atom)``
+offset/length operands, and each lane runs a fixed-iteration lower-bound
+binary search over its binding's segment (:func:`_segment_member`).  The set
+slab rides the whole grid in VMEM exactly like ``kernels/membership``'s
+V-set; zone pruning extends to set atoms by searching each block's ``lo``
+bound into the segment and checking the landed element against ``hi``.
+
+Float32 columns need no kernel changes: the backend folds their bits into a
+monotone int32 total-order key (sign-fold, ``-0`` canonicalized to ``+0``)
+and translates thresholds into key-space range atoms, so float compares —
+including exact NaN/±inf semantics — ride the int32 lanes below.
+
 Atom ops: 0:== 1:!= 2:< 3:<= 4:> 5:>=
 """
 
@@ -120,6 +134,53 @@ def pred_filter(
 # --------------------------------------------------------------------------- #
 
 
+def search_iters(max_len: int) -> int:
+    """Static iteration count for :func:`_segment_member` — enough halvings
+    to collapse any segment of at most ``max_len`` elements."""
+    return max(1, int(max_len).bit_length())
+
+
+def _lower_bound(slab, keys, seg_lo, seg_hi, iters: int):
+    """Vectorized lower bound of ``keys`` inside per-row segments of a flat
+    sorted ``slab``.
+
+    ``keys`` is ``[K, X]``; ``seg_lo``/``seg_hi`` are ``[K, 1]`` segment
+    bounds (``slab[seg_lo:seg_hi]`` sorted ascending).  Runs a fixed
+    ``iters`` halvings so the loop is static (kernel-friendly); gathers are
+    clamped so empty segments and segments ending at ``len(slab)`` stay in
+    bounds."""
+    cap = slab.shape[0] - 1
+    lo = jnp.broadcast_to(seg_lo, keys.shape).astype(jnp.int32)
+    hi = jnp.broadcast_to(seg_hi, keys.shape).astype(jnp.int32)
+    for _ in range(iters):
+        go = lo < hi
+        mid = (lo + hi) // 2
+        v = slab[jnp.minimum(mid, cap)]
+        below = jnp.logical_and(go, v < keys)
+        lo = jnp.where(below, mid + 1, lo)
+        hi = jnp.where(jnp.logical_and(go, jnp.logical_not(below)), mid, hi)
+    return lo
+
+
+def _segment_member(slab, keys, seg_lo, seg_hi, iters: int):
+    """``keys[k, x] in slab[seg_lo[k]:seg_hi[k]]`` — ``[K, X]`` bool."""
+    cap = slab.shape[0] - 1
+    pos = _lower_bound(slab, keys, seg_lo, seg_hi, iters)
+    hit = slab[jnp.minimum(pos, cap)] == keys
+    return jnp.logical_and(pos < seg_hi, hit)
+
+
+def _set_zone_alive(slab, blk_lo, blk_hi, seg_lo, seg_hi, iters: int):
+    """Can any element of each binding's set fall inside ``[blk_lo,
+    blk_hi]``?  Lower-bound the block's ``lo`` into the segment and check the
+    landed element against ``hi`` — exact, like the cmp-atom zone check."""
+    cap = slab.shape[0] - 1
+    keys = jnp.broadcast_to(blk_lo, seg_lo.shape).astype(jnp.int32)
+    pos = _lower_bound(slab, keys, seg_lo, seg_hi, iters)
+    inside = slab[jnp.minimum(pos, cap)] <= blk_hi
+    return jnp.logical_and(pos < seg_hi, inside)
+
+
 def _kernel_batch(cols_ref, thr_ref, lo_ref, hi_ref, out_ref, *,
                   atoms: Tuple[Tuple[int, int], ...]):
     """One grid step = one row block x all K bindings.
@@ -151,21 +212,101 @@ def _kernel_batch(cols_ref, thr_ref, lo_ref, hi_ref, out_ref, *,
         out_ref[...] = jnp.zeros_like(out_ref)
 
 
-@functools.partial(jax.jit, static_argnames=("atoms", "block_rows", "interpret"))
+def _kernel_batch_sets(cols_ref, thr_ref, lo_ref, hi_ref, set_slab_ref,
+                       set_off_ref, set_len_ref, out_ref, *,
+                       atoms: Tuple[Tuple[int, int], ...],
+                       set_cols: Tuple[int, ...], iters: int):
+    """Set-carrying variant of :func:`_kernel_batch`.
+
+    The zone-bound operands carry ``A + M`` rows: the first ``A`` belong to
+    the cmp atoms, the trailing ``M`` to the set atoms' columns.  Set atoms
+    participate in the in-grid prune (a block dies for a binding whose set
+    has no element inside the block's bounds) and, for surviving blocks,
+    each lane lower-bound-searches its binding's sorted segment of the
+    VMEM-resident set slab."""
+    K = thr_ref.shape[0]
+    A = len(atoms)
+    slab = set_slab_ref[...]
+    alive = jnp.ones((K,), jnp.bool_)
+    for j, (_, op) in enumerate(atoms):
+        alive = jnp.logical_and(
+            alive, _zone_alive(op, lo_ref[j, 0], hi_ref[j, 0], thr_ref[:, j])
+        )
+    for m in range(len(set_cols)):
+        seg_lo = set_off_ref[:, m][:, None]
+        seg_hi = seg_lo + set_len_ref[:, m][:, None]
+        alive = jnp.logical_and(
+            alive,
+            _set_zone_alive(slab, lo_ref[A + m, 0], hi_ref[A + m, 0],
+                            seg_lo, seg_hi, iters)[:, 0],
+        )
+    any_alive = jnp.any(alive)
+
+    @pl.when(any_alive)
+    def _eval():
+        acc = jnp.ones((K, cols_ref.shape[1]), jnp.bool_)
+        for j, (ci, op) in enumerate(atoms):
+            col = cols_ref[ci, :]
+            acc = jnp.logical_and(
+                acc, _apply_op(op, col[None, :], thr_ref[:, j][:, None])
+            )
+        for m, ci in enumerate(set_cols):
+            col = cols_ref[ci, :]
+            seg_lo = set_off_ref[:, m][:, None]
+            seg_hi = seg_lo + set_len_ref[:, m][:, None]
+            acc = jnp.logical_and(
+                acc,
+                _segment_member(slab, jnp.broadcast_to(col[None, :], acc.shape),
+                                seg_lo, seg_hi, iters),
+            )
+        out_ref[...] = jnp.logical_and(acc, alive[:, None]).astype(jnp.int32)
+
+    @pl.when(jnp.logical_not(any_alive))
+    def _skip():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("atoms", "block_rows", "interpret", "set_cols", "iters"))
 def pred_filter_batch(
     cols: jax.Array,  # [C, N] int32 columnar slab, N % block_rows == 0
     thresholds: jax.Array,  # [K, A] int32 — K bindings x A atoms
     atoms: Tuple[Tuple[int, int], ...],  # static (col_idx, op_code) per atom
-    blk_lo: jax.Array,  # [A, G] int32 per-(atom, block) lower bounds
-    blk_hi: jax.Array,  # [A, G] int32 per-(atom, block) upper bounds
+    blk_lo: jax.Array,  # [A(+M), G] int32 per-(atom, block) lower bounds
+    blk_hi: jax.Array,  # [A(+M), G] int32 per-(atom, block) upper bounds
     block_rows: int = BLOCK_ROWS,
     interpret: bool = True,
+    set_cols: Tuple[int, ...] = (),  # static col idx per membership atom
+    set_slab: jax.Array = None,  # [S] int32 concatenated sorted sets
+    set_off: jax.Array = None,  # [K, M] int32 segment offsets into set_slab
+    set_len: jax.Array = None,  # [K, M] int32 segment lengths
+    iters: int = 1,  # static search depth: search_iters(max set len)
 ) -> jax.Array:  # [K, N] int32 masks
     C, N = cols.shape
     K, A = thresholds.shape
+    M = len(set_cols)
     assert N % block_rows == 0, f"pad N={N} to a multiple of {block_rows}"
-    assert A == len(atoms) and blk_lo.shape == blk_hi.shape == (A, N // block_rows)
-    kern = functools.partial(_kernel_batch, atoms=atoms)
+    assert A == len(atoms) and blk_lo.shape == blk_hi.shape == (A + M, N // block_rows)
+    if not set_cols:
+        kern = functools.partial(_kernel_batch, atoms=atoms)
+        return pl.pallas_call(
+            kern,
+            out_shape=jax.ShapeDtypeStruct((K, N), jnp.int32),
+            grid=(N // block_rows,),
+            in_specs=[
+                pl.BlockSpec((C, block_rows), lambda i: (0, i)),  # column slab
+                pl.BlockSpec((K, A), lambda i: (0, 0)),  # thresholds (all bindings)
+                pl.BlockSpec((A, 1), lambda i: (0, i)),  # this block's lo bounds
+                pl.BlockSpec((A, 1), lambda i: (0, i)),  # this block's hi bounds
+            ],
+            out_specs=pl.BlockSpec((K, block_rows), lambda i: (0, i)),
+            interpret=interpret,
+        )(cols, thresholds, blk_lo, blk_hi)
+    (S,) = set_slab.shape
+    assert set_off.shape == set_len.shape == (K, M)
+    kern = functools.partial(_kernel_batch_sets, atoms=atoms,
+                             set_cols=set_cols, iters=iters)
     return pl.pallas_call(
         kern,
         out_shape=jax.ShapeDtypeStruct((K, N), jnp.int32),
@@ -173,12 +314,15 @@ def pred_filter_batch(
         in_specs=[
             pl.BlockSpec((C, block_rows), lambda i: (0, i)),  # column slab
             pl.BlockSpec((K, A), lambda i: (0, 0)),  # thresholds (all bindings)
-            pl.BlockSpec((A, 1), lambda i: (0, i)),  # this block's lo bounds
-            pl.BlockSpec((A, 1), lambda i: (0, i)),  # this block's hi bounds
+            pl.BlockSpec((A + M, 1), lambda i: (0, i)),  # block lo bounds
+            pl.BlockSpec((A + M, 1), lambda i: (0, i)),  # block hi bounds
+            pl.BlockSpec((S,), lambda i: (0,)),  # whole set slab in VMEM
+            pl.BlockSpec((K, M), lambda i: (0, 0)),  # segment offsets
+            pl.BlockSpec((K, M), lambda i: (0, 0)),  # segment lengths
         ],
         out_specs=pl.BlockSpec((K, block_rows), lambda i: (0, i)),
         interpret=interpret,
-    )(cols, thresholds, blk_lo, blk_hi)
+    )(cols, thresholds, blk_lo, blk_hi, set_slab, set_off, set_len)
 
 
 def block_bounds(slab: np.ndarray, block_rows: int,

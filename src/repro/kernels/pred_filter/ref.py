@@ -15,9 +15,25 @@ from typing import Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+from .pred_filter import _segment_member
+
 
 def _cmp(col, t, op: int):
     return [col == t, col != t, col < t, col <= t, col > t, col >= t][op]
+
+
+def _member_acc(acc, cols, set_cols, set_slab, set_off, set_len, iters):
+    """AND per-binding ragged-set membership into a ``[K, N]`` bool acc."""
+    for m, ci in enumerate(set_cols):
+        seg_lo = set_off[:, m][:, None]
+        seg_hi = seg_lo + set_len[:, m][:, None]
+        acc = jnp.logical_and(
+            acc,
+            _segment_member(set_slab,
+                            jnp.broadcast_to(cols[ci][None, :], acc.shape),
+                            seg_lo, seg_hi, iters),
+        )
+    return acc
 
 
 def pred_filter_ref(cols, thresholds, atoms: Tuple[Tuple[int, int], ...]):
@@ -27,17 +43,24 @@ def pred_filter_ref(cols, thresholds, atoms: Tuple[Tuple[int, int], ...]):
     return acc.astype(jnp.int32)
 
 
-def pred_filter_batch_ref(cols, thresholds, atoms: Tuple[Tuple[int, int], ...]):
+def pred_filter_batch_ref(cols, thresholds, atoms: Tuple[Tuple[int, int], ...],
+                          set_cols: Tuple[int, ...] = (), set_slab=None,
+                          set_off=None, set_len=None, iters: int = 1):
     """Batched oracle: cols [C, N], thresholds [K, A] -> [K, N] int32 masks."""
     acc = jnp.ones((thresholds.shape[0], cols.shape[1]), jnp.bool_)
     for j, (ci, op) in enumerate(atoms):
         acc = jnp.logical_and(
             acc, _cmp(cols[ci][None, :], thresholds[:, j][:, None], op)
         )
+    if set_cols:
+        acc = _member_acc(acc, cols, set_cols, set_slab, set_off, set_len,
+                          iters)
     return acc.astype(jnp.int32)
 
 
-def _batch_bool(cols, thresholds, atoms: Tuple[Tuple[int, int], ...]):
+def _batch_bool(cols, thresholds, atoms: Tuple[Tuple[int, int], ...],
+                set_cols: Tuple[int, ...] = (), set_slab=None, set_off=None,
+                set_len=None, iters: int = 1):
     # bool output, not the kernel's int32: the mask readback is 1/4 the
     # bytes, which decides the CPU crossover vs. numpy
     ci, op = atoms[0]
@@ -46,9 +69,15 @@ def _batch_bool(cols, thresholds, atoms: Tuple[Tuple[int, int], ...]):
         acc = jnp.logical_and(
             acc, _cmp(cols[ci][None, :], thresholds[:, j][:, None], op)
         )
+    if set_cols:
+        acc = _member_acc(acc, cols, set_cols, set_slab, set_off, set_len,
+                          iters)
     return acc
 
 
 # jitted fused-scan graph — the CPU/GPU production path behind PallasBackend's
-# auto mode; cached per static atom structure, thresholds stay a runtime operand
-pred_filter_batch_xla = jax.jit(_batch_bool, static_argnames=("atoms",))
+# auto mode; cached per static atom structure, thresholds stay a runtime
+# operand; set segments ride as runtime operands too (the slab length and the
+# static search depth decide the specialization)
+pred_filter_batch_xla = jax.jit(
+    _batch_bool, static_argnames=("atoms", "set_cols", "iters"))

@@ -352,3 +352,290 @@ def test_fused_carry_respects_pruning_on_host():
     prog = eng.compile(Col("a") >= Param("p"))
     assert not be.fused_carry_ok(prog, pt, {"p": 9_990}, surviving_rows=n // 16)
     assert be.fused_carry_ok(prog, pt, {"p": 0}, surviving_rows=n)
+
+
+def test_fused_carry_refusal_counted_and_stamped():
+    """A carry refusal bumps ``carry_refused`` and — under a recorder —
+    records the refused device route as ``fallback_from``, exactly like the
+    store's ranked-walk fallback."""
+    from repro.core.cost import PlanRecorder
+    from repro.core.distributed import PartitionExecutor
+
+    rng = np.random.default_rng(32)
+    n = 1 << 16
+    t = Table({"a": np.sort(rng.integers(0, 1000, n)).astype(np.int64)}, {}, "t")
+    pt = partition_table(t, part_rows=4096)
+    eng = ScanEngine(backend="pallas", device_cutover=0)
+    ex = PartitionExecutor(eng, max_workers=0)
+    pred = Col("a") < Param("v")
+    with PlanRecorder() as rec:
+        got = ex.scan(pred, pt, {"v": 5})   # prunes almost everything
+    assert np.array_equal(got, t.cols["a"] < 5)
+    assert eng.stats.carry_refused >= 1
+    stamped = [d for d in rec.decisions if d.fallback_from == "device"]
+    assert stamped and stamped[0].actual_s is not None
+
+
+# --------------------------------------------------------------------------- #
+# float32 key lane: order-preserving int32 keys instead of per-atom fallback
+# --------------------------------------------------------------------------- #
+def _f32_table():
+    rng = np.random.default_rng(40)
+    f = rng.normal(0, 100, N).astype(np.float32)
+    f[::13] = np.nan
+    f[1::97] = np.inf
+    f[2::97] = -np.inf
+    f[3::31] = -0.0
+    f[4::31] = 0.0
+    f[5::17] = np.float32(3.0)    # exact hits for the snapped thresholds
+    k = rng.integers(0, 100, N).astype(np.int32)
+    return Table({"f": f, "k": k}, {}, "t")
+
+
+_F32_THRESHOLDS = [
+    0.0, -0.0, 3.0, np.nan, np.inf, -np.inf,
+    # non-representable weak scalars: NEP 50 snaps them to float32 first
+    # (3.0000000001 -> 3.0, 1e40 -> inf) and the kernel must agree
+    3.0000000001, 1e40, -1e40,
+    # strong scalars compare in float64 -- a different answer than the
+    # weak spelling of the same digits
+    np.float64(3.0000000001), np.float64(1e40), np.int64(2**62),
+    np.float32(0.25), np.float16(0.5), np.bool_(True), True, 7,
+]
+
+
+@pytest.mark.parametrize("v", _F32_THRESHOLDS,
+                         ids=[f"{type(v).__name__}-{v}" for v in _F32_THRESHOLDS])
+def test_float32_lane_identical(v):
+    t = _f32_table()
+    for pred in (Col("f") < Param("p"), Col("f") <= Param("p"),
+                 Col("f") > Param("p"), Col("f") >= Param("p"),
+                 Col("f").eq(Param("p")), Col("f").ne(Param("p"))):
+        _check_all(pred, t, {"p": v})
+
+
+def test_float32_lane_engaged_not_fallback():
+    t = _f32_table()
+    eng = ScanEngine(backend="pallas", device_cutover=0)
+    m = eng.scan(land(Col("f") >= Param("p"), Col("k") < Lit(90)), t, {"p": -5.5})
+    assert eng.stats.float_lane_scans > 0
+    assert np.array_equal(
+        m, ScanEngine().scan(land(Col("f") >= Param("p"), Col("k") < Lit(90)),
+                             t, {"p": -5.5}))
+    # NaN rows never satisfy an order comparison through the key lane
+    assert not m[np.isnan(t.cols["f"])].any()
+
+
+def test_float64_still_falls_back():
+    # float64 columns stay outside the key-lane fragment (no exact int32
+    # key embedding); answers must still match through the host fallback
+    rng = np.random.default_rng(41)
+    t = Table({"f": rng.normal(size=N), "k": rng.integers(0, 9, N).astype(np.int32)},
+              {}, "t")
+    eng = ScanEngine(backend="pallas", device_cutover=0)
+    pred = land(Col("f") >= Param("p"), Col("k") < Lit(5))
+    assert np.array_equal(eng.scan(pred, t, {"p": 0.25}),
+                          ScanEngine().scan(pred, t, {"p": 0.25}))
+    assert eng.stats.float_lane_scans == 0
+
+
+# --------------------------------------------------------------------------- #
+# fused membership: in-grid binary search over device-resident sorted sets
+# --------------------------------------------------------------------------- #
+def test_membership_fused_engaged_and_identical():
+    rng = np.random.default_rng(42)
+    k = rng.integers(0, 500, N).astype(np.int32)
+    j = rng.integers(0, 100, N).astype(np.int32)
+    t = Table({"k": k, "j": j}, {}, "t")
+    vset = np.unique(rng.integers(0, 500, 40)).astype(np.int32)
+    pred = land(IsIn(Col("k"), Param("s")), Col("j") >= Param("p"))
+    eng = ScanEngine(backend="pallas", device_cutover=0)
+    got = eng.scan(pred, t, {"s": vset, "p": 20})
+    assert eng.stats.member_fused_scans > 0, "host probe ran instead of kernel"
+    assert np.array_equal(got, ScanEngine().scan(pred, t, {"s": vset, "p": 20}))
+    # pure-membership program (no comparison atom to ride on)
+    got2 = eng.scan(IsIn(Col("k"), Param("s")), t, {"s": vset})
+    assert np.array_equal(got2, np.isin(k, vset))
+
+
+def test_membership_fused_empty_and_disjoint_sets():
+    rng = np.random.default_rng(43)
+    k = rng.integers(0, 500, N).astype(np.int32)
+    t = Table({"k": k}, {}, "t")
+    for s in (np.array([], np.int32),            # empty -> all False
+              np.array([10**6], np.int64),       # disjoint from the column
+              np.array([-1, 10**9], np.int64)):  # straddles, still disjoint
+        pred = IsIn(Col("k"), Param("s"))
+        m = _check_all(pred, t, {"s": s})
+        assert not m.any()
+    # float-valued set on an integer column: only integral members can hit
+    mf = _check_all(IsIn(Col("k"), Param("s")), t,
+                    {"s": np.array([3.0, 3.5, 7.0])})
+    assert np.array_equal(mf, np.isin(k, [3, 7]))
+
+
+def test_membership_sets_straddle_partitions():
+    """Set values concentrated in a few partitions: the in-grid zone check
+    must keep exactly the blocks whose [min, max] intersects the set."""
+    from repro.core.distributed import PartitionExecutor
+
+    rng = np.random.default_rng(44)
+    n = 1 << 14
+    a = np.sort(rng.integers(0, 10_000, n)).astype(np.int32)
+    t = Table({"a": a}, {}, "t")
+    pt = partition_table(t, 16)
+    # values from the low and high tails plus one partition-boundary value
+    vset = np.array([int(a[0]), int(a[n // 16 - 1]), int(a[n // 16]),
+                     int(a[-1]), -5], np.int64)
+    pred = IsIn(Col("a"), Param("s"))
+    ex_np = PartitionExecutor(ScanEngine(), max_workers=0)
+    ex_dev = PartitionExecutor(ScanEngine(backend="pallas", device_cutover=0),
+                               max_workers=0)
+    m_np = ex_np.scan(pred, pt, {"s": vset})
+    m_dev = ex_dev.scan(pred, pt, {"s": vset})
+    assert np.array_equal(m_np, m_dev)
+    assert np.array_equal(m_dev, np.isin(a, vset))
+
+
+def test_batch_fused_heterogeneous_set_sizes():
+    """K coalesced bindings with different-size sets (including empty) on one
+    launch: the ragged [K, S] slab layout must answer each binding exactly as
+    K separate scans would."""
+    rng = np.random.default_rng(45)
+    k = rng.integers(0, 500, N).astype(np.int32)
+    j = rng.integers(0, 100, N).astype(np.int32)
+    t = Table({"k": k, "j": j}, {}, "t")
+    pred = land(IsIn(Col("k"), Param("s")), Col("j") < Param("q"))
+    base = [
+        {"s": np.array([7], np.int32), "q": 90},
+        {"s": np.unique(rng.integers(0, 500, 40)).astype(np.int64), "q": 50},
+        {"s": np.array([], np.int32), "q": 99},
+        {"s": np.unique(rng.integers(0, 500, 200)).astype(np.int32), "q": 10},
+    ]
+    be = PallasBackend(device_cutover=0, batch_cutover=0)
+    eng = ScanEngine(backend=be)
+    prog = eng.compile(pred)
+    masks = be.scan_batch_fused(prog, t, base)
+    assert masks is not None, "fused batch refused an in-fragment program"
+    for bd, m in zip(base, masks):
+        want = ScanEngine().scan(pred, t, bd)
+        assert np.array_equal(m, want)
+    assert not masks[2].any()
+
+
+def test_batch_fused_float_lane_bindings():
+    rng = np.random.default_rng(46)
+    f = rng.normal(0, 10, N).astype(np.float32)
+    f[::11] = np.nan
+    j = rng.integers(0, 100, N).astype(np.int32)
+    t = Table({"f": f, "j": j}, {}, "t")
+    pred = land(Col("f") >= Param("p"), Col("j") < Param("q"))
+    base = [{"p": -5.5, "q": 90}, {"p": np.nan, "q": 99},
+            {"p": 1e40, "q": 50}, {"p": np.float64(0.1), "q": 75}]
+    be = PallasBackend(device_cutover=0, batch_cutover=0)
+    eng = ScanEngine(backend=be)
+    masks = be.scan_batch_fused(eng.compile(pred), t, base)
+    assert masks is not None
+    for bd, m in zip(base, masks):
+        assert np.array_equal(m, ScanEngine().scan(pred, t, bd))
+    assert not masks[1].any()      # NaN threshold: order compare is empty
+
+
+def test_sorted_set_cache_reuse():
+    """The per-predicate sorted-set cache: re-probing the same array object
+    (as every partition of one scan does) reuses the sort."""
+    from repro.core.scan import _sorted_unique, sorted_set_counters
+
+    before = sorted_set_counters()["hits"]
+    s = np.array([5, 1, 3, 1, 5], np.int64)
+    a = _sorted_unique(s)
+    b = _sorted_unique(s)
+    assert a is b and np.array_equal(a, [1, 3, 5])
+    assert sorted_set_counters()["hits"] >= before + 1
+
+
+# --------------------------------------------------------------------------- #
+# run-space RLE scans and the widened encoded-int32 fragment
+# --------------------------------------------------------------------------- #
+def test_stored_rle_run_boundaries():
+    from repro.core.store import RLEColumn
+
+    # explicit runs with boundary-adjacent values: thresholds at, just
+    # below, and just above each run value exercise every off-by-one
+    arr = np.repeat(np.array([3, 9, 3, 15, 15, -2], np.int64),
+                    [4, 1, 3, 2, 6, 5])
+    enc = RLEColumn.encode(arr)
+    assert enc.kind == "rle", enc.kind
+    st = _stored("c", enc)
+    for v in (-3, -2, -1, 2, 3, 4, 8, 9, 10, 14, 15, 16, 2.5, 3.5, np.nan):
+        for pred in (Col("c").eq(Param("p")), Col("c").ne(Param("p")),
+                     Col("c") < Param("p"), Col("c") <= Param("p"),
+                     Col("c") > Param("p"), Col("c") >= Param("p")):
+            _assert_stored_matches(st, pred, {"p": v})
+
+
+def test_stored_rle_single_run_and_len_one_runs():
+    from repro.core.store import RLEColumn
+
+    # one giant run, then all length-1 runs: the two degenerate layouts
+    one = RLEColumn.encode(np.full(N, 42, np.int64))
+    alt = RLEColumn.encode(np.arange(64, dtype=np.int64))
+    for enc, vals in ((one, (41, 42, 43)), (alt, (0, 31, 63, 64))):
+        st = _stored("c", enc)
+        for v in vals:
+            _assert_stored_matches(st, Col("c") >= Param("p"), {"p": v})
+            _assert_stored_matches(st, Col("c").eq(Param("p")), {"p": v})
+
+
+def test_stored_delta_sorted_int64():
+    from repro.core.store import encode_column
+
+    rng = np.random.default_rng(50)
+    arr = np.sort(rng.integers(0, 10**7, N)).astype(np.int64)
+    enc = encode_column(arr)
+    assert enc.kind == "delta", enc.kind
+    st = _stored("c", enc)
+    lo, hi = int(arr.min()), int(arr.max())
+    for v in (lo, hi, (lo + hi) // 2, lo - 1, hi + 1, -10**7, 2 * 10**7, 0.5):
+        for pred in (Col("c") >= Param("p"), Col("c") < Param("p"),
+                     Col("c").eq(Param("p")), Col("c").ne(Param("p"))):
+            _assert_stored_matches(st, pred, {"p": v})
+
+
+def test_stored_scaled_two_decimal_float32():
+    from repro.core.store import encode_column
+
+    rng = np.random.default_rng(51)
+    arr = (rng.integers(-10_000, 10_000, N) / 100).astype(np.float32)
+    enc = encode_column(arr)
+    assert enc.kind == "scaled", enc.kind
+    st = _stored("c", enc)
+    # representable values, between-code values, weak vs strong scalars,
+    # and thresholds the verified-boundary walk must not mistranslate
+    for v in (0.01, -0.01, 0.005, 0.009999999999, 99.99, -99.995, 100.5,
+              np.float64(0.1), np.float32(0.25), 0, np.nan, np.inf, -np.inf):
+        for pred in (Col("c").eq(Param("p")), Col("c").ne(Param("p")),
+                     Col("c") < Param("p"), Col("c") <= Param("p"),
+                     Col("c") > Param("p"), Col("c") >= Param("p")):
+            _assert_stored_matches(st, pred, {"p": v})
+
+
+def test_store_dispatch_prefers_insitu_rle():
+    """An RLE-heavy stage scans in run space (no decode): the cost model
+    offers and picks the ``insitu_rle`` route and the store never decodes."""
+    from repro.core.store import IntermediateStore
+
+    rng = np.random.default_rng(52)
+    runs = rng.integers(50, 400, 2000)
+    vals = rng.integers(0, 40, runs.size)
+    a = np.repeat(vals, runs)[:200_000].astype(np.int64)
+    t = Table({"a": a}, {}, "t")
+    store = IntermediateStore()
+    st = store.put(7, t)
+    assert st.enc["a"].kind == "rle"
+    eng = ScanEngine(backend="pallas", device_cutover=0)
+    got = store.scan(7, Col("a") < Param("v"), {"v": 20}, eng)
+    assert np.array_equal(got, a < 20)
+    assert eng.stats.rle_insitu_chosen >= 1
+    assert eng.stats.rle_run_scans >= 1
+    assert eng.stats.decode_chosen == 0

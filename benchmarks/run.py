@@ -26,6 +26,7 @@ def main() -> None:
         common.set_seed(args.seed)
 
     from .explain_bench import bench_explain
+    from .incremental_bench import bench_incremental
     from .kernels_bench import bench_kernels
     from .paper_tables import (
         bench_coverage, bench_fpr, bench_inter_opt, bench_no_inter,
@@ -55,6 +56,7 @@ def main() -> None:
         "serve": bench_serve,             # concurrent service vs serial query()
         "udf": bench_udf,                 # annotation-driven UDF pushdown
         "explain": bench_explain,         # cost-model estimate accuracy
+        "incremental": bench_incremental, # delta-append vs cold full re-run
         "roofline": bench_roofline,       # §Roofline (reads dry-run artifacts)
     }
     selected = args.only.split(",") if args.only else list(benches)

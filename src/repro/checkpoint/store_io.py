@@ -135,6 +135,116 @@ def save_store(root, store: IntermediateStore, name: str = "store") -> Path:
     return final
 
 
+def _link_or_copy(src: Path, dst: Path) -> None:
+    """Reuse a payload file from the previous spill without copying bytes
+    when the filesystem allows it."""
+    try:
+        os.link(src, dst)
+    except OSError:
+        shutil.copy2(src, dst)
+
+
+def save_store_delta(root, store: IntermediateStore,
+                     name: str = "store") -> Path:
+    """Incrementally re-spill a store that grew by appended rows.
+
+    Append-only growth (:meth:`IntermediateStore.put_delta`) never changes
+    a *complete* partition's rows, and chunk encoding is deterministic — so
+    every chunk entirely below the previous spill's row watermark is
+    byte-identical on disk.  Those payload files are reused (hard-linked
+    into the staged directory, with their recorded hashes); only the
+    ragged-tail partition and the fresh partitions are re-encoded and
+    written, and the manifest + zone-map sidecars are rewritten.  Stages
+    without a reusable prior entry (unpartitioned, shrunk, or differently
+    chunked) are written in full, and a missing prior spill degrades to
+    :func:`save_store`.  The atomic promote flow is identical to
+    :func:`save_store`; the written manifest records the reuse counts under
+    ``"incremental"``."""
+    root = Path(root)
+    prev_path = _spill_path(root, name)
+    if not (prev_path / "manifest.json").exists():
+        return save_store(root, store, name)
+    prev_stages = json.loads(
+        (prev_path / "manifest.json").read_text())["stages"]
+    root.mkdir(parents=True, exist_ok=True)
+    tmp, final = root / f"{name}.tmp", root / name
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    reused = written = 0
+    manifest: Dict = {
+        "budget_bytes": store.budget_bytes,
+        "nbytes": store.nbytes(),
+        "raw_nbytes": store.raw_nbytes(),
+        "stages": {},
+    }
+    for nid, st in store.stages.items():
+        entry: Dict = {
+            "name": st.name,
+            "nrows": st.nrows,
+            "raw_nbytes": st.raw_nbytes,
+            "dicts": st.dicts,
+        }
+        zm = st.zone_maps
+        if zm is not None and zm.n_partitions > 1:
+            zmeta, zarrays = zm.state()
+            zfile = f"s{nid}_zones.npz"
+            np.savez(tmp / zfile, **zarrays)
+            entry["zone_maps"] = {
+                "meta": zmeta, "file": zfile, "sha": _hash_file(tmp / zfile),
+            }
+            entry["format"] = "chunks"
+            pm = prev_stages.get(str(nid))
+            first_dirty = 0
+            prev_chunks: list = []
+            if (pm is not None and pm.get("format") == "chunks"
+                    and pm["nrows"] <= st.nrows
+                    and pm.get("zone_maps", {}).get("meta", {})
+                          .get("part_rows") == zm.part_rows):
+                # chunks strictly below the old complete-partition watermark
+                # are unchanged by an append: reuse their files verbatim
+                first_dirty = min(pm["nrows"] // zm.part_rows,
+                                  zm.n_partitions)
+                prev_chunks = pm["chunks"]
+            chunks = []
+            for p in range(zm.n_partitions):
+                if p < first_dirty:
+                    cm = prev_chunks[p]
+                    for col_m in cm.values():
+                        for fm in col_m["arrays"].values():
+                            _link_or_copy(prev_path / fm["file"],
+                                          tmp / fm["file"])
+                    chunks.append(cm)
+                    reused += 1
+                else:
+                    lo, hi = zm.part_bounds(p)
+                    idx = np.arange(lo, hi, dtype=np.int64)
+                    chunk_enc = {
+                        col: encode_column(enc.gather(idx))
+                        for col, enc in st.enc.items()
+                    }
+                    chunks.append(
+                        _save_payloads(tmp, f"s{nid}_p{p}", chunk_enc))
+                    written += 1
+            entry["chunks"] = chunks
+        else:
+            entry["columns"] = _save_payloads(tmp, f"s{nid}", st.enc)
+            written += 1
+        manifest["stages"][str(nid)] = entry
+    manifest["incremental"] = {"reused_chunks": reused,
+                               "written_chunks": written}
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    old = root / f"{name}.old"
+    if final.exists():
+        if old.exists():
+            shutil.rmtree(old)
+        os.replace(final, old)
+    os.replace(tmp, final)
+    if old.exists():
+        shutil.rmtree(old)
+    return final
+
+
 def _spill_path(root, name: str) -> Path:
     """The live spill directory, falling back to the ``.old`` copy if a
     crash interrupted a re-spill between demote and promote."""

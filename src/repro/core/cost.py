@@ -103,6 +103,9 @@ _ROUTE_RATIO = {
     "device_member": MEMBER_RATIO,
     "device_float": DEVICE_RATIO_XLA,
     "insitu_rle": RLE_RATIO,
+    # per-unit cost identical to a serial host scan — the route wins because
+    # its work is delta_rows x atoms instead of total_rows x atoms
+    "delta_rescan": 1.0,
 }
 
 # route -> dispatch probe family invalidated when the route's estimates

@@ -42,7 +42,8 @@ from .expr import Expr
 from .iterative import IterativePlan, refine
 from .lineage import LineageAnswer
 from .scan import ScanEngine, default_engine
-from .table import PartitionedTable, Table, alive_runs, partition_table
+from .table import (PartitionedTable, Table, alive_runs, partition_table,
+                    table_uid)
 
 SENTINEL = np.int64(-(2**62))
 
@@ -133,7 +134,7 @@ class PartitionExecutor:
         # an explicit int is honored verbatim (tests pin 0 to force fan-out)
         self._min_parallel_rows = min_parallel_rows
         self._pool: Optional[ThreadPoolExecutor] = None
-        # id(table) -> (weakref, _DeviceTable); weakref eviction keeps dead
+        # table uid -> (weakref, _DeviceTable); weakref eviction keeps dead
         # tables from pinning device memory
         self._device: Dict[int, Tuple[weakref.ref, _DeviceTable]] = {}
         # reentrancy: scan() may be called from many service/request threads
@@ -361,7 +362,7 @@ class PartitionExecutor:
             )
 
     def _device_table(self, table: Table) -> _DeviceTable:
-        tk = id(table)
+        tk = table_uid(table)
         entry = self._device.get(tk)
         if entry is not None and entry[0]() is table:
             return entry[1]

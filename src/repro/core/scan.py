@@ -66,7 +66,7 @@ from .expr import (
     land,
     params_of,
 )
-from .table import PartitionedTable, Table, ZoneMaps, alive_runs
+from .table import PartitionedTable, Table, ZoneMaps, alive_runs, table_uid
 
 # op codes shared with kernels/pred_filter (0:== 1:!= 2:< 3:<= 4:> 5:>=)
 OPS = {"==": 0, "!=": 1, "<": 2, "<=": 3, ">": 4, ">=": 5}
@@ -129,6 +129,7 @@ class _GatherView:
         self.nrows = len(idx)
         self.dicts = table.dicts
         self.name = table.name
+        self.uid = table_uid(self)  # non-aliasing token for backend caches
 
     def has(self, col: str) -> bool:
         return col in self.cols
@@ -194,8 +195,11 @@ class LRUCache:
 
 # membership-set sort cache: zone-restrict overlap checks and the tuple-
 # membership evaluator consult the same value sets once per partition /
-# per atom; the sort+unique is hoisted here, keyed by array identity (the
-# strong ref in the entry keeps the id stable while cached)
+# per atom; the sort+unique is hoisted here.  Entries anchor the keyed
+# array with a weakref whose callback evicts on collection, so a recycled
+# id() can never find a stale entry; values that reject weakrefs (lists,
+# frozensets) are anchored by strong ref, which pins their id for the
+# entry's lifetime — either way the key cannot alias a different object.
 _SORTED_SETS: LRUCache = LRUCache(128)
 
 
@@ -204,12 +208,19 @@ def _sorted_unique(vals: np.ndarray) -> np.ndarray:
     repeated consults (per partition, per atom, per scan) sort once."""
     k = id(vals)
     ent = _SORTED_SETS.get(k)
-    if ent is not None and ent[0] is vals:
-        return ent[1]
+    if ent is not None:
+        anchor = ent[0]() if isinstance(ent[0], weakref.ref) else ent[0]
+        if anchor is vals:
+            return ent[1]
     u = np.unique(vals)
     if u.dtype.kind == "f":
         u = u[~np.isnan(u)]
-    _SORTED_SETS[k] = (vals, u)
+    try:
+        anchor = weakref.ref(
+            vals, lambda _, k=k: _SORTED_SETS.pop(k, None))
+    except TypeError:
+        anchor = vals
+    _SORTED_SETS[k] = (anchor, u)
     return u
 
 
@@ -883,7 +894,9 @@ class PallasBackend(NumpyBackend):
         self._device_cutover = device_cutover
         self._batch_cutover = batch_cutover if batch_cutover is not None \
             else device_cutover
-        # slab cache: id(table) -> (weakref, {cols tuple: _KernelSlab})
+        # slab cache: table uid -> (weakref, {cols tuple: _KernelSlab});
+        # uids are minted once per table and never recycled, so a dead
+        # table's key can't alias a new table the way id() can
         self._slabs: LRUCache = LRUCache(self.SLAB_CACHE)
         # per-(table, col) / per-encoding int32-representability verdict
         # (columns are immutable, so the O(N) range check runs once)
@@ -1034,10 +1047,14 @@ class PallasBackend(NumpyBackend):
         launch path on a synthetic slab (entry build amortized, as in real
         scans where the slab cache is warm)."""
         key = (id(slab), thr.shape)
-        entry = self._bench_slabs.get(key)
-        if entry is None:
+        ent = self._bench_slabs.get(key)
+        if ent is not None and ent[0] is slab:
+            entry = ent[1]
+        else:
             entry = self._build_entry(slab)
-            self._bench_slabs[key] = entry
+            # anchor the probe array: its id stays pinned while cached, so
+            # a recycled id can't hand a different probe this entry
+            self._bench_slabs[key] = (slab, entry)
         # op order must mirror the dispatch module's host ops: >= < > <=
         codes = (_GE, _LT, _GT, _LE)
         atoms = tuple((j, codes[j % 4]) for j in range(thr.shape[1]))
@@ -1050,10 +1067,12 @@ class PallasBackend(NumpyBackend):
         from ..kernels.pred_filter import search_iters
 
         key = ("member", id(vals), vals.shape)
-        entry = self._bench_slabs.get(key)
-        if entry is None:
+        ent = self._bench_slabs.get(key)
+        if ent is not None and ent[0] is vals:
+            entry = ent[1]
+        else:
             entry = self._build_entry(vals[None, :].astype(np.int32))
-            self._bench_slabs[key] = entry
+            self._bench_slabs[key] = (vals, entry)
         slab = np.unique(vset.astype(np.int32))
         ops = _SetOps((0,), slab, np.zeros((1, 1), np.int32),
                       np.full((1, 1), slab.size, np.int32),
@@ -1067,10 +1086,12 @@ class PallasBackend(NumpyBackend):
         """Measurement probe for ``dispatch.rle_scan_probe``: evaluate in
         run space on device, expand survivors on the host."""
         key = ("rle", id(rv), rv.shape)
-        entry = self._bench_slabs.get(key)
-        if entry is None:
+        ent = self._bench_slabs.get(key)
+        if ent is not None and ent[0] is rv:
+            entry = ent[1]
+        else:
             entry = self._build_entry(rv[None, :].astype(np.int32))
-            self._bench_slabs[key] = entry
+            self._bench_slabs[key] = (rv, entry)
         t = np.asarray([[thr]], dtype=np.int32)
         run_mask = self._launch(entry, ((0, _GE),), t, count_stats=False)[0]
         return np.repeat(run_mask, rl)
@@ -1342,7 +1363,7 @@ class PallasBackend(NumpyBackend):
     def _rle_lane_ok(self, enc) -> bool:
         """Can this RLE column evaluate in run space?  The run *values*
         must fit the int32 lanes (run lengths only drive the expansion)."""
-        ck = ("rle", id(enc))
+        ck = ("rle", table_uid(enc))
         entry = self._col_ok.get(ck)
         if entry is not None and entry[0]() is enc:
             return entry[1]
@@ -1393,7 +1414,7 @@ class PallasBackend(NumpyBackend):
     def _stored_lane_ok(self, enc) -> bool:
         """Can this encoding scan as an int32 code lane?  Cached per
         encoded-column object (immutable)."""
-        ck = ("enc", id(enc))
+        ck = ("enc", table_uid(enc))
         entry = self._col_ok.get(ck)
         if entry is not None and entry[0]() is enc:
             return entry[1]
@@ -1601,7 +1622,7 @@ class PallasBackend(NumpyBackend):
     def _int32_col(self, table: Table, col: str) -> bool:
         """Is a column exactly representable in the kernel's int32 lanes?
         Cached per (table, col) — the range scan runs once per table."""
-        ck = (id(table), col)
+        ck = (table_uid(table), col)
         entry = self._col_ok.get(ck)
         if entry is not None and entry[0]() is table:
             return entry[1]
@@ -1640,7 +1661,7 @@ class PallasBackend(NumpyBackend):
         """Is a column a float32 lane for the key-space kernel path?
         (float64 columns stay on the host oracle — no exact int64 key lane
         exists in the int32 kernel fragment)."""
-        ck = (id(table), col, "f32")
+        ck = (table_uid(table), col, "f32")
         entry = self._col_ok.get(ck)
         if entry is not None and entry[0]() is table:
             return entry[1]
@@ -1741,7 +1762,7 @@ class PallasBackend(NumpyBackend):
         return arr.astype(np.int32)
 
     def _slab_entry(self, table: Table, cols: Tuple[str, ...]) -> _KernelSlab:
-        tk = id(table)
+        tk = table_uid(table)
         entry = self._slabs.get(tk)
         if entry is not None and entry[0]() is table and cols in entry[1]:
             return entry[1][cols]
@@ -1761,7 +1782,7 @@ class PallasBackend(NumpyBackend):
         return built
 
     def _stored_entry(self, st, cols: Tuple[str, ...]) -> _KernelSlab:
-        tk = ("stored", id(st))
+        tk = ("stored", table_uid(st))
         entry = self._slabs.get(tk)
         if entry is not None and entry[0]() is st and cols in entry[1]:
             return entry[1][cols]
@@ -2234,7 +2255,7 @@ class ScanEngine:
         """Row-range view of ``table`` with stable identity: repeated scans of
         the same partition run reuse one slice object, so identity-keyed
         backend caches (slabs, sorted indexes) stay warm across queries."""
-        ck = (id(table), lo, hi)
+        ck = (table_uid(table), lo, hi)
         entry = self._slices.get(ck)
         if entry is not None and entry[0]() is table:
             return entry[1]
@@ -2512,7 +2533,7 @@ class ScanEngine:
     def _sorted_col(self, table: Table, col: str):
         """(order, sorted_values) for a column — the batch path's scan index,
         computed once per table/column and cached (tables are immutable)."""
-        ck = (id(table), col)
+        ck = (table_uid(table), col)
         entry = self._sorts.get(ck)
         if entry is not None and entry[0]() is table:
             return entry[1], entry[2]

@@ -24,7 +24,14 @@ algorithms themselves:
   ``Executor.run`` re-executes the pipeline or the
   :class:`~repro.core.store.IntermediateStore` mutates (``put``/``evict`` /
   spill-reload via ``attach_store``), so a re-run can never serve a stale
-  answer — it surfaces as a counted ``cache_stale`` miss instead.
+  answer — it surfaces as a counted ``cache_stale`` miss instead.  An
+  *append-only* ``run_delta`` moves only the token's row watermarks: cached
+  answers stay warm and are extended in place by
+  :meth:`PredTrace.query_delta` (counted ``delta_hits``), rescanning only
+  the appended partitions — zero rescans when the answer's pruned partition
+  set is untouched.  Tokens are re-checked at cache-insert time; a
+  run racing a scan drops the insert (``cache_race_drops``) instead of
+  caching a possibly inconsistent answer under a live token.
 
 Correctness contract: every answer is produced by the registered PredTrace's
 own ``query``/``query_batch`` (bit-identical by PR-1's batching invariant) or
@@ -48,7 +55,7 @@ from typing import Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
-from .lineage import LineageAnswer, PredTrace
+from .lineage import LineageAnswer, PredTrace, delta_compatible
 from .scan import LRUCache
 
 RowSpec = Union[int, Dict[str, object]]
@@ -194,6 +201,14 @@ class ServiceStats:
         self.cache_hits = 0
         self.cache_misses = 0
         self.cache_stale = 0          # generation-mismatch invalidations
+        # entries extended in place across an append-only delta run
+        # (PredTrace.query_delta): served warm, restamped under the new token
+        self.delta_hits = 0
+        # answers NOT cached because the generation token changed between
+        # the pre-query read and insert time (a run()/run_delta() raced the
+        # scan) — the insert-time re-check drops them instead of caching a
+        # potentially inconsistent answer under a live token
+        self.cache_race_drops = 0
         # answers whose per-table precise flags were not all True: budget
         # degradation or an unmaterialized opaque-UDF stage produced a
         # (well-defined) superset instead of exact lineage
@@ -308,6 +323,11 @@ class LineageService:
         self._closed = False
         self.stats = ServiceStats()
         self.stats.extra_provider = self._cost_stats
+        # test seam: called (with the pipeline key) on the dispatcher thread
+        # after the generation token is read and before the query dispatches —
+        # lets a race test hold the window open while another thread re-runs
+        # the pipeline, exercising the insert-time token re-check
+        self._pre_query_hook = None
         if isinstance(pipelines, PredTrace):
             self.register("default", pipelines)
         elif pipelines:
@@ -362,6 +382,40 @@ class LineageService:
         return self._pipelines[pipeline].explain(row)
 
     # ------------------------------------------------------------------ #
+    def _lookup(self, pt: PredTrace, ck: Tuple,
+                gen) -> Optional[LineageAnswer]:
+        """Answer-cache lookup with delta extension.  An exact token match
+        serves the entry as-is.  A :func:`delta_compatible` mismatch — the
+        same generation base, row watermarks only moved forward by an
+        append-only ``run_delta`` — is *extended* via
+        :meth:`PredTrace.query_delta` (rescanning only the delta
+        partitions), restamped under the current token, and served warm;
+        answers whose pruned partition set the append did not touch pay
+        zero rescans.  Anything else is popped as stale.  Returns the
+        served answer or None (caller counts the miss and re-queries)."""
+        entry = self._cache.get(ck)
+        if entry is None:
+            return None
+        if entry[0] == gen:
+            self.stats.bump(cache_hits=1)
+            return entry[1]
+        if delta_compatible(entry[0], gen):
+            try:
+                ext = pt.query_delta(entry[1], entry[0])
+            except Exception:
+                ext = None
+            if ext is not None:
+                # restamp only while the token still holds (a run racing
+                # the extension must not publish under a live token)
+                if pt.answer_generation() == gen:
+                    self._cache[ck] = (gen, ext)
+                self.stats.bump(cache_hits=1, delta_hits=1)
+                return ext
+        self.stats.bump(cache_stale=1)
+        self._cache.pop(ck)
+        return None
+
+    # ------------------------------------------------------------------ #
     def submit(self, row: RowSpec, pipeline: str = "default",
                timeout: Optional[float] = None) -> LineageRequest:
         """Enqueue a lineage question; returns a :class:`LineageRequest`.
@@ -381,10 +435,9 @@ class LineageService:
         pt = self._pipelines[pipeline]
         try:
             req.cache_key = _cache_key(pipeline, pt, row)
-            entry = self._cache.get(req.cache_key)
-            if entry is not None and entry[0] == pt.answer_generation():
-                self.stats.bump(cache_hits=1)
-                self._finish(req, entry[1], cached=True)
+            ans = self._lookup(pt, req.cache_key, pt.answer_generation())
+            if ans is not None:
+                self._finish(req, ans, cached=True)
                 return req
         except Exception:
             pass  # malformed rows fail on the dispatcher path, uniformly
@@ -413,10 +466,9 @@ class LineageService:
             out.append(req)
             try:
                 req.cache_key = _cache_key(pipeline, pt, row)
-                entry = self._cache.get(req.cache_key)
-                if entry is not None and entry[0] == gen:
-                    self.stats.bump(cache_hits=1)
-                    self._finish(req, entry[1], cached=True)
+                ans = self._lookup(pt, req.cache_key, gen)
+                if ans is not None:
+                    self._finish(req, ans, cached=True)
                     continue
             except Exception:
                 pass  # malformed rows fail on the dispatcher path
@@ -536,18 +588,17 @@ class LineageService:
                     if r._fail(e):
                         self.stats.bump(failed=1)
                     continue
-            entry = self._cache.get(ck)
-            if entry is not None and entry[0] == gen:
-                self.stats.bump(cache_hits=1)
-                self._finish(r, entry[1], cached=True)
+            ans = self._lookup(pt, ck, gen)
+            if ans is not None:
+                self._finish(r, ans, cached=True)
                 continue
-            if entry is not None:
-                self.stats.bump(cache_stale=1)
-                self._cache.pop(ck)
             self.stats.bump(cache_misses=1)
             misses.setdefault(ck, []).append(r)
         if not misses:
             return
+        hook = self._pre_query_hook
+        if hook is not None:
+            hook(key)
         groups = list(misses.items())
         rows = [grp[0].row for _, grp in groups]
         served = sum(len(grp) for _, grp in groups)
@@ -561,8 +612,17 @@ class LineageService:
                         self.stats.bump(failed=1)
             return
         self.stats.record_batch(requests=served, queries=len(rows))
+        # insert-time token re-check: a run()/run_delta() that raced the scan
+        # means these answers may mix pre- and post-run state — caching them
+        # under either token could serve a stale answer as current.  Fulfil
+        # the waiting requests (best effort, flagged) but drop the cache
+        # inserts; the next query recomputes under a settled token.
+        cacheable = pt.answer_generation() == gen
+        if not cacheable:
+            self.stats.bump(cache_race_drops=len(groups))
         for (ck, grp), ans in zip(groups, answers):
-            self._cache[ck] = (gen, ans)
+            if cacheable:
+                self._cache[ck] = (gen, ans)
             for r in grp:
                 self._finish(r, ans)
 

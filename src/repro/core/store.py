@@ -64,7 +64,8 @@ from .scan import (
     _is_setlike, partition_safe, prune_zone_maps,
 )
 from .table import (
-    RID, Table, ZoneMaps, build_zone_maps, resolve_part_rows, rows_of_alive,
+    RID, Table, ZoneMaps, build_zone_maps, next_table_uid, resolve_part_rows,
+    rows_of_alive,
 )
 
 _EQ, _NE = OPS["=="], OPS["!="]
@@ -671,6 +672,116 @@ def column_from_state(meta: Dict, arrays: Dict[str, np.ndarray]) -> EncodedColum
 
 
 # --------------------------------------------------------------------------- #
+# append-extension of encoded columns (the incremental runtime's store path)
+# --------------------------------------------------------------------------- #
+
+
+def _append_fast(enc: EncodedColumn, arr: np.ndarray) -> Optional[EncodedColumn]:
+    """Append-extended copy of ``enc`` without decoding its rows, or None
+    when the encoding has no cheap append path for these values."""
+    if isinstance(enc, PlainColumn):
+        return PlainColumn(np.concatenate([enc.values, arr]))
+    if isinstance(enc, RLEColumn):
+        tail = RLEColumn.encode(arr)
+        rv, rl = enc.run_values, enc.run_lengths
+        # merge the boundary run so the encoded form stays canonical
+        # (NaN != NaN keeps float NaN runs separate, matching encode())
+        if rv.size and tail.run_values.size and tail.run_values[0] == rv[-1]:
+            rl = rl.copy()
+            rl[-1] += tail.run_lengths[0]
+            rv2 = np.concatenate([rv, tail.run_values[1:]])
+            rl2 = np.concatenate([rl, tail.run_lengths[1:]])
+        else:
+            rv2 = np.concatenate([rv, tail.run_values])
+            rl2 = np.concatenate([rl, tail.run_lengths])
+        return RLEColumn(rv2, rl2)
+    if isinstance(enc, DictColumn):
+        if arr.dtype.kind == "f" and np.isnan(arr).any():
+            return None
+        nu = len(enc.values)
+        if nu == 0:
+            return None
+        pos = np.minimum(np.searchsorted(enc.values, arr), nu - 1)
+        if not bool((enc.values[pos] == arr).all()):
+            return None  # out-of-vocabulary values: re-encode
+        return DictColumn(
+            np.concatenate([enc.codes, pos.astype(enc.codes.dtype)]),
+            enc.values)
+    if isinstance(enc, FORColumn):
+        if arr.dtype.kind not in "iu":
+            return None
+        t = arr.astype(np.int64) - enc.base
+        lim = np.iinfo(enc.packed.dtype)
+        if t.size and (int(t.min()) < 0 or int(t.max()) > int(lim.max)):
+            return None  # leaves the frame: re-encode
+        return FORColumn(
+            np.concatenate([enc.packed, t.astype(enc.packed.dtype)]),
+            enc.base, enc.dtype)
+    if isinstance(enc, BitPackColumn):
+        if enc.n % 8:
+            return None  # unaligned tail byte: repack from scratch
+        return BitPackColumn(
+            np.concatenate([enc.bits, np.packbits(arr.astype(bool))]),
+            enc.n + len(arr))
+    if isinstance(enc, ScaledColumn):
+        if arr.dtype.kind != "f" or not bool(np.isfinite(arr).all()):
+            return None
+        scaled = np.round(arr * enc.scale)
+        if (float(np.abs(scaled).max(initial=0)) >= 2**31
+                or not np.array_equal(scaled / enc.scale, arr)):
+            return None  # delta rows aren't exactly k/scale: re-encode
+        inner = _append_fast(enc.inner, scaled.astype(enc.inner.dtype))
+        if inner is None:
+            return None
+        return ScaledColumn(inner, enc.scale, enc.dtype)
+    if isinstance(enc, DeltaColumn):
+        # the anchor binary-search needs global monotonicity, so only a
+        # nondecreasing tail that continues the sequence (rid columns, sorted
+        # keys) can extend in place; anything else re-encodes
+        if arr.dtype.kind not in "iu" or enc.n == 0:
+            return None
+        vals = arr.astype(np.int64)
+        nb = (enc.n + enc.block - 1) // enc.block
+        last = int(enc._block_vals(nb - 1)[enc.n - (nb - 1) * enc.block - 1])
+        d = np.empty(len(vals), dtype=np.int64)
+        d[0] = vals[0] - last
+        d[1:] = vals[1:] - vals[:-1]
+        if d.min(initial=0) < 0:
+            return None  # tail breaks sortedness
+        pos = enc.n + np.arange(len(vals))
+        starts = pos % enc.block == 0
+        d[starts] = 0  # anchors carry block-start absolute values
+        lim = np.iinfo(enc.deltas.dtype)
+        if int(d.max(initial=0)) > int(lim.max):
+            return None  # deltas outgrow the packed width: re-encode
+        return DeltaColumn(
+            np.concatenate([enc.anchors, arr[starts]]).astype(enc.dtype),
+            np.concatenate([enc.deltas, d.astype(enc.deltas.dtype)]),
+            enc.n + len(vals), enc.dtype, enc.block)
+    return None  # unknown encodings re-encode
+
+
+def append_encoded(enc: EncodedColumn, arr: np.ndarray) -> EncodedColumn:
+    """Append-extended copy of one encoded column.
+
+    Cheap per-kind paths (:func:`_append_fast`) extend the encoded form
+    without touching the old rows — plain concat, RLE boundary-run merge,
+    in-vocabulary dict codes, in-frame FOR packing, byte-aligned bitpack
+    concat, and scaled wrappers over any of those.  Anything else falls
+    back to re-encoding the decoded concatenation (which may also pick a
+    different encoding, exactly as a cold ``put`` would).  Always returns
+    a NEW column; the input is never mutated, so cached references to the
+    old encoding stay valid."""
+    arr = np.asarray(arr)
+    if len(arr) == 0:
+        return enc
+    out = _append_fast(enc, arr)
+    if out is not None:
+        return out
+    return encode_column(np.concatenate([enc.decode(), arr]))
+
+
+# --------------------------------------------------------------------------- #
 # stored tables
 # --------------------------------------------------------------------------- #
 
@@ -723,6 +834,9 @@ class StoredTable:
         self.name = name
         self._nrows = nrows
         self.raw_nbytes = raw_nbytes
+        # non-aliasing identity token for uid-keyed engine/backend caches
+        # (shared counter with Table; never recycled, unlike id())
+        self.uid = next_table_uid()
         # per-partition min/max/null stats built on the raw columns before
         # encoding; in-situ scans prune whole partitions against them
         self.zone_maps = zone_maps
@@ -1091,6 +1205,11 @@ class IntermediateStore:
         self.stages: Dict[int, StoredTable] = {}
         self.backend = InSituBackend()
         self.generation: int = next(_STORE_GENERATIONS)
+        # incremental-append diagnostics: stages extended in place by
+        # ``put_delta`` and how their columns grew (fast encoded append vs
+        # decode-and-re-encode) — surfaced by explain()/benchmarks
+        self.delta_stats: Dict[str, int] = {
+            "delta_puts": 0, "cols_fast": 0, "cols_reencoded": 0}
 
     # ------------------------------------------------------------------ #
     def put(self, node_id: int, table: Table) -> StoredTable:
@@ -1108,6 +1227,67 @@ class IntermediateStore:
         self.stages[node_id] = st
         self.generation = next(_STORE_GENERATIONS)
         return st
+
+    def put_delta(self, node_id: int, delta: Table) -> StoredTable:
+        """Append ``delta``'s rows to an existing stored stage.
+
+        The incremental runtime's store path: each encoded column grows via
+        :func:`append_encoded` (cheap encoded-form appends where the
+        encoding allows, re-encode otherwise), and partitioned stages extend
+        their zone maps tail-only — complete old partitions keep their
+        statistics byte-identical, with the ragged tail gathered from the
+        encoding rather than decoding whole columns.  The stage is replaced
+        by a NEW :class:`StoredTable` (fresh ``uid``, so uid-keyed engine
+        caches built against the old object can never alias it).
+
+        Unlike :meth:`put`, this does **not** bump ``generation``: an append
+        moves the stage's row-count watermark — visible in the lineage
+        answer token — while every answer computed over the old rows stays
+        valid.  An empty delta is a no-op returning the current stage.
+
+        Args:
+            node_id: plan-node id of an already-stored stage (KeyError if
+                absent — the caller decides between ``put`` and
+                ``put_delta``).
+            delta: decoded rows to append (must cover the stage's columns).
+        Returns:
+            StoredTable: the extended encoded stage now held by the store.
+        """
+        st = self.stages[node_id]
+        if delta.nrows == 0:
+            return st
+        missing = set(st.enc) - set(delta.cols)
+        if missing:
+            raise ValueError(f"put_delta: delta lacks columns {sorted(missing)}")
+        enc2: Dict[str, EncodedColumn] = {}
+        fast = 0
+        for c, e in st.enc.items():
+            arr = np.asarray(delta.cols[c])
+            out = _append_fast(e, arr)
+            if out is None:
+                out = encode_column(np.concatenate([e.decode(), arr]))
+            else:
+                fast += 1
+            enc2[c] = out
+        new_n = st.nrows + delta.nrows
+        zm = st.zone_maps
+        if zm is not None:
+            base = (zm.nrows // zm.part_rows) * zm.part_rows
+            tail_idx = np.arange(base, st.nrows, dtype=np.int64)
+            tail = {c: np.concatenate([st.enc[c].gather(tail_idx),
+                                       np.asarray(delta.cols[c])])
+                    for c in st.enc}
+            zm = zm.extend_tail(tail, new_n)
+        dicts = dict(st.dicts)
+        dicts.update({k: v for k, v in delta.dicts.items() if k in enc2})
+        st2 = StoredTable(enc2, dicts, st.name, new_n,
+                          st.raw_nbytes + delta.nbytes(), zm)
+        self.stages[node_id] = st2
+        ds = self.delta_stats
+        ds["delta_puts"] += 1
+        ds["cols_fast"] += fast
+        ds["cols_reencoded"] += len(enc2) - fast
+        return st2
 
     def __contains__(self, node_id: int) -> bool:
         return node_id in self.stages

@@ -314,7 +314,7 @@ def test_concurrent_pallas_slab_cache(scan_table):
 
     assert all(_hammer(8, worker, [(k,) for k in range(8)]))
     backend: PallasBackend = eng.backend
-    entry = backend._slabs.get(id(scan_table))
+    entry = backend._slabs.get(scan_table.uid)
     assert entry is not None and entry[0]() is scan_table
     # both kernel column sets survived (the unsynchronized install dropped
     # whichever slab lost the race)

@@ -28,6 +28,7 @@ def main() -> None:
     from .explain_bench import bench_explain
     from .incremental_bench import bench_incremental
     from .kernels_bench import bench_kernels
+    from .oocore_bench import bench_oocore
     from .paper_tables import (
         bench_coverage, bench_fpr, bench_inter_opt, bench_no_inter,
         bench_overhead, bench_query_scaling, bench_query_time,
@@ -52,6 +53,7 @@ def main() -> None:
         "kernels": bench_kernels,         # kernel-path scans
         "scan_engine": bench_scan_engine, # batched vs single-row query latency
         "store": bench_store,             # compressed store + budget planner
+        "oocore": bench_oocore,           # out-of-core disk tier
         "partition": bench_partition,     # zone-map pruning + parallel scans
         "serve": bench_serve,             # concurrent service vs serial query()
         "udf": bench_udf,                 # annotation-driven UDF pushdown

@@ -63,6 +63,53 @@ def _hash_file(path: Path) -> str:
     return hashlib.sha256(path.read_bytes()).hexdigest()[:16]
 
 
+def _fsync_file(path: Path) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _fsync_dir(path: Path) -> None:
+    # directory fsync is advisory on some platforms/filesystems; a refusal
+    # (EINVAL on some network mounts) must not fail the spill
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
+
+
+def _promote(root: Path, tmp: Path, final: Path, name: str) -> Path:
+    """Durably promote a staged spill: fsync every staged payload *before*
+    any rename (so a post-crash manifest never names torn chunks), swap the
+    previous spill aside, promote, and fsync the parent directory so the
+    renames themselves survive the crash."""
+    for f in tmp.iterdir():
+        if f.is_file():
+            _fsync_file(f)
+    _fsync_dir(tmp)
+    # never a window without a good spill: move the previous one aside,
+    # promote the staged write, then drop the old copy
+    old = root / f"{name}.old"
+    if final.exists():
+        if old.exists():
+            shutil.rmtree(old)
+        os.replace(final, old)
+        _fsync_dir(root)
+    os.replace(tmp, final)
+    _fsync_dir(root)
+    if old.exists():
+        shutil.rmtree(old)
+    return final
+
+
 def _save_payloads(tmp: Path, prefix: str, enc_cols) -> Dict:
     """One stage's (or chunk's) encoded columns -> manifest column dict."""
     cols = {}
@@ -122,26 +169,26 @@ def save_store(root, store: IntermediateStore, name: str = "store") -> Path:
             entry["columns"] = _save_payloads(tmp, f"s{nid}", st.enc)
         manifest["stages"][str(nid)] = entry
     (tmp / "manifest.json").write_text(json.dumps(manifest))
-    # never a window without a good spill: move the previous one aside,
-    # promote the staged write, then drop the old copy
-    old = root / f"{name}.old"
-    if final.exists():
-        if old.exists():
-            shutil.rmtree(old)
-        os.replace(final, old)
-    os.replace(tmp, final)
-    if old.exists():
-        shutil.rmtree(old)
-    return final
+    return _promote(root, tmp, final, name)
 
 
-def _link_or_copy(src: Path, dst: Path) -> None:
+def _link_or_copy(src: Path, dst: Path, sha: Optional[str] = None) -> str:
     """Reuse a payload file from the previous spill without copying bytes
-    when the filesystem allows it."""
+    when the filesystem allows it.  Hard links fail across filesystem
+    boundaries (``EXDEV``) and on link-refusing mounts; those fall back to
+    a copy verified against the manifest's recorded payload hash.  Returns
+    ``"linked"`` or ``"copied"``."""
     try:
         os.link(src, dst)
+        return "linked"
     except OSError:
         shutil.copy2(src, dst)
+        if sha is not None and _hash(np.load(dst)) != sha:
+            raise IOError(
+                f"delta spill reuse corrupt: copied payload {src.name} "
+                f"hash mismatch"
+            )
+        return "copied"
 
 
 def save_store_delta(root, store: IntermediateStore,
@@ -171,7 +218,7 @@ def save_store_delta(root, store: IntermediateStore,
     if tmp.exists():
         shutil.rmtree(tmp)
     tmp.mkdir(parents=True)
-    reused = written = 0
+    reused = written = linked = copied = 0
     manifest: Dict = {
         "budget_bytes": store.budget_bytes,
         "nbytes": store.nbytes(),
@@ -212,8 +259,12 @@ def save_store_delta(root, store: IntermediateStore,
                     cm = prev_chunks[p]
                     for col_m in cm.values():
                         for fm in col_m["arrays"].values():
-                            _link_or_copy(prev_path / fm["file"],
-                                          tmp / fm["file"])
+                            how = _link_or_copy(prev_path / fm["file"],
+                                                tmp / fm["file"], fm["sha"])
+                            if how == "linked":
+                                linked += 1
+                            else:
+                                copied += 1
                     chunks.append(cm)
                     reused += 1
                 else:
@@ -232,17 +283,10 @@ def save_store_delta(root, store: IntermediateStore,
             written += 1
         manifest["stages"][str(nid)] = entry
     manifest["incremental"] = {"reused_chunks": reused,
-                               "written_chunks": written}
+                               "written_chunks": written,
+                               "linked": linked, "copied": copied}
     (tmp / "manifest.json").write_text(json.dumps(manifest))
-    old = root / f"{name}.old"
-    if final.exists():
-        if old.exists():
-            shutil.rmtree(old)
-        os.replace(final, old)
-    os.replace(tmp, final)
-    if old.exists():
-        shutil.rmtree(old)
-    return final
+    return _promote(root, tmp, final, name)
 
 
 def _spill_path(root, name: str) -> Path:
@@ -256,12 +300,20 @@ def _spill_path(root, name: str) -> Path:
     return path
 
 
-def _load_payloads(path: Path, cols_manifest: Dict, verify: bool) -> Dict:
+def _load_payloads(path: Path, cols_manifest: Dict, verify: bool,
+                   mmap: bool = False) -> Dict:
+    """Rebuild one stage's (or chunk's) encoded columns from payload files.
+
+    ``mmap=True`` hands ``column_from_state`` read-only memmapped arrays —
+    payload bytes fault in lazily as scans touch them.  Verification reads
+    every byte, so disk-tier callers that just wrote (and fsynced) the
+    payloads pass ``verify=False`` to keep the open cheap."""
     enc = {}
+    mode = "r" if mmap else None
     for col, cm in cols_manifest.items():
         arrays = {}
         for aname, fm in cm["arrays"].items():
-            arr = np.load(path / fm["file"])
+            arr = np.load(path / fm["file"], mmap_mode=mode)
             if verify and _hash(arr) != fm["sha"]:
                 raise IOError(
                     f"store spill corrupt: column {col!r} payload "
@@ -283,13 +335,7 @@ def _load_zone_maps(path: Path, entry: Dict, verify: bool) -> Optional[ZoneMaps]
         return ZoneMaps.from_state(zinfo["meta"], dict(z))
 
 
-def load_store(root, name: str = "store", verify: bool = True) -> IntermediateStore:
-    """Reload a spilled store; encoded columns come back byte-identical, so
-    in-situ scans and lineage answers match the pre-spill store exactly.
-    Partition-wise stages are reassembled (chunk decode + re-encode — the
-    encoding choice is deterministic, so the result matches the pre-spill
-    encoding) with their zone maps restored."""
-    path = _spill_path(root, name)
+def _load_store_at(path: Path, verify: bool, mmap: bool) -> IntermediateStore:
     manifest = json.loads((path / "manifest.json").read_text())
     store = IntermediateStore(budget_bytes=manifest.get("budget_bytes"))
     for nid_s, sm in manifest["stages"].items():
@@ -300,13 +346,90 @@ def load_store(root, name: str = "store", verify: bool = True) -> IntermediateSt
             for col in parts[0]:
                 full = np.concatenate([p[col].decode() for p in parts])
                 enc[col] = encode_column(full)
+            tier = "ram"
         else:
-            enc = _load_payloads(path, sm["columns"], verify)
-        store.stages[int(nid_s)] = StoredTable(
+            enc = _load_payloads(path, sm["columns"], verify, mmap=mmap)
+            tier = "disk" if mmap else "ram"
+        st = StoredTable(
             enc, {k: list(v) for k, v in sm["dicts"].items()},
             sm["name"], sm["nrows"], sm["raw_nbytes"], zone_maps=zm,
         )
+        st.tier = tier
+        store.stages[int(nid_s)] = st
     return store
+
+
+def load_store(root, name: str = "store", verify: bool = True,
+               mmap: bool = False) -> IntermediateStore:
+    """Reload a spilled store; encoded columns come back byte-identical, so
+    in-situ scans and lineage answers match the pre-spill store exactly.
+    Partition-wise stages are reassembled (chunk decode + re-encode — the
+    encoding choice is deterministic, so the result matches the pre-spill
+    encoding) with their zone maps restored.
+
+    ``mmap=True`` opens unpartitioned stage payloads as read-only memmaps
+    (the out-of-core tier: bytes fault in on first scan touch) and marks
+    those stages ``tier == "disk"``; chunked stages still reassemble in RAM.
+
+    A sha256 mismatch in the live spill falls back to the ``.old`` copy when
+    one survives (a torn live spill must not lose the previous good one);
+    with no fallback available the corruption is re-raised."""
+    path = _spill_path(root, name)
+    try:
+        return _load_store_at(path, verify, mmap)
+    except IOError:
+        old = Path(root) / f"{name}.old"
+        if path != old and (old / "manifest.json").exists():
+            return _load_store_at(old, verify, mmap)
+        raise
+
+
+def save_stage(dirpath, nid: int, st: StoredTable, version: int = 0) -> Dict:
+    """Demote one stage to the out-of-core tier: write its encoded columns
+    as whole-column payload files under ``dirpath`` (fsynced before return)
+    and hand back the manifest entry :func:`open_stage` consumes.
+
+    Payloads are the *same bytes* the in-situ scan path reads in RAM — no
+    re-encode, no decode — so a memmapped reopen is bit-identical.  The
+    ``version`` counter keeps a re-demote after an append from overwriting
+    files an in-flight reader may still have mapped."""
+    dirpath = Path(dirpath)
+    dirpath.mkdir(parents=True, exist_ok=True)
+    cols = _save_payloads(dirpath, f"s{nid}_v{version}", st.enc)
+    for cm in cols.values():
+        for fm in cm["arrays"].values():
+            _fsync_file(dirpath / fm["file"])
+    _fsync_dir(dirpath)
+    return {"name": st.name, "nrows": st.nrows, "raw_nbytes": st.raw_nbytes,
+            "dicts": st.dicts, "columns": cols, "version": version}
+
+
+def open_stage(dirpath, entry: Dict, zone_maps=None, verify: bool = False,
+               mmap: bool = True) -> StoredTable:
+    """Reopen a stage written by :func:`save_stage` as a disk-tier
+    :class:`StoredTable`: payload arrays are read-only memmaps (bytes fault
+    lazily under scans), zone maps stay the caller's RAM-resident object so
+    pruning never touches disk."""
+    enc = _load_payloads(Path(dirpath), entry["columns"], verify, mmap=mmap)
+    st = StoredTable(
+        enc, {k: list(v) for k, v in entry["dicts"].items()},
+        entry["name"], entry["nrows"], entry["raw_nbytes"],
+        zone_maps=zone_maps,
+    )
+    st.tier = "disk"
+    return st
+
+
+def remove_stage_files(dirpath, entry: Dict) -> None:
+    """Best-effort cleanup of one demoted stage's payload files (an unlinked
+    file stays readable through any still-open memmap)."""
+    dirpath = Path(dirpath)
+    for cm in entry["columns"].values():
+        for fm in cm["arrays"].values():
+            try:
+                (dirpath / fm["file"]).unlink()
+            except OSError:
+                pass
 
 
 def load_stage_partitions(

@@ -73,6 +73,11 @@ MEMBER_RATIO = 0.5
 # run-space RLE scans touch one lane element per *run* and pay a final
 # np.repeat expansion; charged per row, that is far below a serial scan
 RLE_RATIO = 0.25
+# disk-tier in-situ scans run the same code-space compares over memmapped
+# payloads: cold pages fault in at storage bandwidth, so the seeded marginal
+# cost sits above the RAM in-situ slope (refined online like every route —
+# a warm page cache quickly pulls the learned slope back down)
+DISK_RATIO = 2.0
 # the parallel cutover was measured with a ~2-atom compare; charging the
 # crossover at cutover * PARALLEL_CAL_ATOMS of work keeps the seeded fan-out
 # threshold at the measured row count for typical predicates
@@ -106,6 +111,7 @@ _ROUTE_RATIO = {
     # per-unit cost identical to a serial host scan — the route wins because
     # its work is delta_rows x atoms instead of total_rows x atoms
     "delta_rescan": 1.0,
+    "disk_insitu": DISK_RATIO,
 }
 
 # route -> dispatch probe family invalidated when the route's estimates
@@ -121,6 +127,7 @@ _DISPATCH_KIND = {
     "insitu_heavy": "insitu",
     "insitu_rle": "rle",
     "decode": "insitu",
+    "disk_insitu": "disk",
 }
 
 
@@ -424,7 +431,12 @@ class CostModel:
                     (1.0 - ALPHA) * ln.b_obs + ALPHA * inst
                 )
                 ln.n_obs += 1
-            if est is not None and seconds > 0 and est > 0:
+            # overhead-dominated timings (below the work floor) are noise for
+            # the flag window too: a microsecond-scale scan whose fixed cost
+            # dwarfs its per-row work would otherwise flag the route and
+            # churn probe re-measurement without any real estimate error
+            if est is not None and seconds > 0 and est > 0 \
+                    and work >= WORK_FLOOR:
                 ratio = est / seconds
                 self._err_recent.append(abs(ratio - 1.0))
                 dq = self._errors.get(route)

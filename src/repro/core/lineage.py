@@ -315,6 +315,7 @@ class PredTrace:
         scan_engine: Optional[ScanEngine] = None,
         store: Union[bool, IntermediateStore, None] = None,
         budget_bytes: Optional[int] = None,
+        disk_budget_bytes: Optional[int] = 0,
         num_partitions: Optional[int] = None,
         partition_rows: Optional[int] = None,
         parallel: Union[bool, int, None] = None,
@@ -335,6 +336,11 @@ class PredTrace:
                 :class:`IntermediateStore`, or an existing store instance.
             budget_bytes: store byte budget (``None`` = keep everything,
                 ``0`` = keep nothing — pure iterative path).
+            disk_budget_bytes: second-tier byte budget for the out-of-core
+                store: stages that miss the RAM budget are *demoted* to
+                memmap-backed disk payloads (still scanned in situ, still
+                precise) instead of dropped, while they fit this budget
+                (``None`` = unlimited disk, ``0`` = tier disabled).
             num_partitions / partition_rows: fixed-size partition layout
                 with zone maps; lineage scans prune partitions first.
             parallel: fan surviving partitions over a thread pool
@@ -367,7 +373,9 @@ class PredTrace:
         # budget_bytes) materializes stages encoded (core/store.py); the
         # budget planner then drops stages that don't fit and their dependent
         # source predicates degrade to the iterative/superset path
-        if store is True or (store is None and budget_bytes is not None):
+        self._owns_store = store is True or (
+            store is None and budget_bytes is not None)
+        if self._owns_store:
             store = IntermediateStore(budget_bytes,
                                       num_partitions=num_partitions,
                                       part_rows=partition_rows)
@@ -375,6 +383,7 @@ class PredTrace:
             store if isinstance(store, IntermediateStore) else None
         )
         self.budget_bytes = budget_bytes
+        self.disk_budget_bytes = disk_budget_bytes
         # one scan entry point for every query path: the engine directly, or
         # a PartitionExecutor fanning surviving partitions over workers/mesh
         self.partition_exec = None
@@ -413,12 +422,15 @@ class PredTrace:
 
     # ------------------------------------------------------------------ #
     def close(self) -> None:
-        """Release the parallel partition executor's worker pool (no-op when
-        ``parallel``/``mesh`` wasn't requested).  Long-lived services that
-        build many PredTraces should call this, or use the instance as a
-        context manager."""
+        """Release the parallel partition executor's worker pool and — when
+        this PredTrace created its own store — the store's out-of-core spill
+        root (no-ops otherwise).  Long-lived services that build many
+        PredTraces should call this, or use the instance as a context
+        manager."""
         if self.partition_exec is not None:
             self.partition_exec.close()
+        if self._owns_store and self.store is not None:
+            self.store.close()
 
     def __enter__(self) -> "PredTrace":
         return self
@@ -531,12 +543,35 @@ class PredTrace:
                 partition_sizes=self.store.partition_sizes(),
                 prune_rates=self.store.prune_estimates(),
                 cost_model=self.scan_engine.cost_model,
+                disk_budget_bytes=self.disk_budget_bytes,
             )
             if self.mat_plan.dropped:
                 self.store.evict(self.mat_plan.dropped)
                 for nid in self.mat_plan.dropped:
                     self.exec_result.materialized.pop(nid, None)
+            self._apply_tiering()
         return self.exec_result
+
+    def _apply_tiering(self) -> None:
+        """Move stages between the RAM and disk tiers to match the current
+        materialization plan.  Demote/promote never bump the store
+        generation (rows are unchanged — only residency and scan cost
+        move), so cached lineage answers stay warm across a tier move; the
+        ``exec_result.materialized`` references are refreshed so the RAM
+        copy of a demoted stage isn't pinned alive."""
+        if self.store is None or self.mat_plan is None:
+            return
+        for nid in self.mat_plan.disk:
+            if nid in self.store.stages:
+                self.store.demote(nid)
+        for nid in self.mat_plan.kept:
+            if nid in self.store.stages \
+                    and self.store.stages[nid].tier == "disk":
+                self.store.promote(nid)
+        if self.exec_result is not None:
+            for nid, st in self.store.stages.items():
+                if nid in self.exec_result.materialized:
+                    self.exec_result.materialized[nid] = st
 
     def run_unmodified(self) -> ExecResult:
         """Run the pipeline as-is (no intermediate results)."""
@@ -600,11 +635,17 @@ class PredTrace:
                 partition_sizes=self.store.partition_sizes(),
                 prune_rates=self.store.prune_estimates(),
                 cost_model=self.scan_engine.cost_model,
+                disk_budget_bytes=self.disk_budget_bytes,
             )
             if self.mat_plan.dropped:
                 self.store.evict(self.mat_plan.dropped)
                 for nid in self.mat_plan.dropped:
                     self.exec_result.materialized.pop(nid, None)
+            self._apply_tiering()
+        elif self.store is not None:
+            # a pure append rebuilds extended stages in RAM (put_delta):
+            # re-demote the ones the plan holds on the disk tier
+            self._apply_tiering()
         return self.exec_result
 
     def attach_store(self, store: IntermediateStore) -> None:
@@ -627,11 +668,13 @@ class PredTrace:
             partition_sizes=store.partition_sizes(),
             prune_rates=store.prune_estimates(),
             cost_model=self.scan_engine.cost_model,
+            disk_budget_bytes=self.disk_budget_bytes,
         )
         if self.mat_plan.dropped:
             store.evict(self.mat_plan.dropped)
             for nid in self.mat_plan.dropped:
                 self.exec_result.materialized.pop(nid, None)
+        self._apply_tiering()
 
     # ------------------------------------------------------------------ #
     def _output_binding(
@@ -1080,6 +1123,13 @@ class PredTrace:
                        if self.lineage_plan is not None else 0),
             "stages_dropped": len(mp.dropped) if mp is not None else 0,
         }
+        if mp is not None and (mp.disk or mp.disk_budget_bytes != 0):
+            # out-of-core tier: which stages the planner demoted (still
+            # precise, memmap-scanned) and the store's residency/IO counters
+            pipeline["disk_budget_bytes"] = mp.disk_budget_bytes
+            pipeline["stages_disk"] = sorted(mp.disk)
+            if self.store is not None:
+                pipeline["tiers"] = self.store.tier_summary()
         if self.exec_result is not None and self.exec_result.delta is not None:
             # most recent run_delta: per-stage extend/rerun actions with the
             # append-unsafety reasons, and the store's fast-append counters

@@ -96,8 +96,11 @@ class MaterializationPlan:
     """Which :class:`LineagePlan` stages to actually keep under a byte budget.
 
     ``kept`` stages stay in the intermediate store (precise bindings);
-    ``dropped`` stages degrade the source predicates that depend on their
-    params to the iterative/superset path — per stage, not all-or-nothing.
+    ``disk`` stages don't fit RAM but fit the disk budget — they are
+    *demoted* to the out-of-core tier (memmap-backed, still scanned in situ,
+    still precise); ``dropped`` stages fit neither and degrade the source
+    predicates that depend on their params to the iterative/superset path —
+    per stage, not all-or-nothing.
 
     For partitioned stages the plan also records the partition layout and a
     prune-aware *scan cost*: ``scan_cost[nid]`` estimates the bytes a
@@ -112,10 +115,18 @@ class MaterializationPlan:
     sizes: Dict[int, int]
     partitions: Dict[int, int] = field(default_factory=dict)
     scan_cost: Dict[int, float] = field(default_factory=dict)
+    # out-of-core tier: stages demoted to disk, and the budget that admitted
+    # them (0 = tier disabled, None = unlimited disk)
+    disk: List[int] = field(default_factory=list)
+    disk_budget_bytes: Optional[int] = 0
 
     @property
     def kept_bytes(self) -> int:
         return int(sum(self.sizes.get(nid, 0) for nid in self.kept))
+
+    @property
+    def disk_bytes(self) -> int:
+        return int(sum(self.sizes.get(nid, 0) for nid in self.disk))
 
     @property
     def degraded(self) -> bool:
@@ -151,6 +162,7 @@ def plan_materialization(
     partition_sizes: Optional[Dict[int, List[int]]] = None,
     prune_rates: Optional[Dict[int, float]] = None,
     cost_model=None,
+    disk_budget_bytes: Optional[int] = 0,
 ) -> MaterializationPlan:
     """Choose which stages fit a byte budget (compressed, column-projected
     sizes from the store's stats pass).
@@ -162,6 +174,14 @@ def plan_materialization(
     pure Algorithm-3 path).  ``unavailable`` marks stages the store cannot
     serve at all (e.g. evicted before a spill) — they are dropped regardless
     of budget, along with everything depending on them.
+
+    ``disk_budget_bytes`` opens the out-of-core second tier: a stage that
+    doesn't fit the RAM budget is *demoted* to disk (recorded in ``disk``)
+    instead of dropped, as long as it fits the cumulative disk budget
+    (``None`` = unlimited disk, ``0`` = tier disabled).  Disk stages stay
+    fully available to the query phase — memmap-backed, scanned in situ,
+    answers precise and bit-identical — so they never degrade dependents;
+    only stages fitting *neither* budget fall to the superset path.
 
     ``partition_sizes`` (per-partition encoded bytes) makes the budget
     accounting partition-granular — a stage's footprint is the sum of its
@@ -199,12 +219,17 @@ def plan_materialization(
     }
     if budget_bytes is None and not unavailable:
         return MaterializationPlan(None, [s.node_id for s in lp.stages], set(),
-                                   dict(sizes), partitions, scan_cost)
+                                   dict(sizes), partitions, scan_cost,
+                                   disk_budget_bytes=disk_budget_bytes)
     budget = float("inf") if budget_bytes is None else budget_bytes
+    disk_budget = (float("inf") if disk_budget_bytes is None
+                   else disk_budget_bytes)
     deps = stage_param_deps(lp)
     kept: List[int] = []
+    disk: List[int] = []
     dropped: Set[int] = set()
     total = 0
+    disk_total = 0
     for st in lp.stages:
         sz = stage_bytes(st.node_id)
         if st.node_id in unavailable or deps[st.node_id] & dropped:
@@ -213,10 +238,14 @@ def plan_materialization(
         if total + sz <= budget:
             kept.append(st.node_id)
             total += sz
+        elif disk_total + sz <= disk_budget:
+            disk.append(st.node_id)
+            disk_total += sz
         else:
             dropped.add(st.node_id)
     return MaterializationPlan(budget_bytes, kept, dropped, dict(sizes),
-                               partitions, scan_cost)
+                               partitions, scan_cost, disk=disk,
+                               disk_budget_bytes=disk_budget_bytes)
 
 
 # --------------------------------------------------------------------------- #

@@ -1362,8 +1362,10 @@ class PallasBackend(NumpyBackend):
 
     def _rle_lane_ok(self, enc) -> bool:
         """Can this RLE column evaluate in run space?  The run *values*
-        must fit the int32 lanes (run lengths only drive the expansion)."""
-        ck = ("rle", table_uid(enc))
+        must fit the int32 lanes (run lengths only drive the expansion).
+        Keyed by (uid, row watermark): a column that grows rows under a
+        stable identity can never serve its pre-growth verdict."""
+        ck = ("rle", table_uid(enc), int(enc.n))
         entry = self._col_ok.get(ck)
         if entry is not None and entry[0]() is enc:
             return entry[1]
@@ -1413,8 +1415,9 @@ class PallasBackend(NumpyBackend):
 
     def _stored_lane_ok(self, enc) -> bool:
         """Can this encoding scan as an int32 code lane?  Cached per
-        encoded-column object (immutable)."""
-        ck = ("enc", table_uid(enc))
+        (encoded-column object, row watermark) — appends build new columns,
+        but the watermark guards even an in-place grower."""
+        ck = ("enc", table_uid(enc), int(enc.n))
         entry = self._col_ok.get(ck)
         if entry is not None and entry[0]() is enc:
             return entry[1]
@@ -1621,8 +1624,9 @@ class PallasBackend(NumpyBackend):
     # ------------------------------------------------------------------ #
     def _int32_col(self, table: Table, col: str) -> bool:
         """Is a column exactly representable in the kernel's int32 lanes?
-        Cached per (table, col) — the range scan runs once per table."""
-        ck = (table_uid(table), col)
+        Cached per (table, row watermark, col) — the range scan runs once
+        per table, and growth under a stable identity misses."""
+        ck = (table_uid(table), int(table.nrows), col)
         entry = self._col_ok.get(ck)
         if entry is not None and entry[0]() is table:
             return entry[1]
@@ -1661,7 +1665,7 @@ class PallasBackend(NumpyBackend):
         """Is a column a float32 lane for the key-space kernel path?
         (float64 columns stay on the host oracle — no exact int64 key lane
         exists in the int32 kernel fragment)."""
-        ck = (table_uid(table), col, "f32")
+        ck = (table_uid(table), int(table.nrows), col, "f32")
         entry = self._col_ok.get(ck)
         if entry is not None and entry[0]() is table:
             return entry[1]
@@ -1762,10 +1766,16 @@ class PallasBackend(NumpyBackend):
         return arr.astype(np.int32)
 
     def _slab_entry(self, table: Table, cols: Tuple[str, ...]) -> _KernelSlab:
+        # per-colset values carry the row watermark: a slab built before an
+        # append is never served for the grown table, even though the table's
+        # identity (uid) is stable across in-place appends
         tk = table_uid(table)
+        n = int(table.nrows)
         entry = self._slabs.get(tk)
-        if entry is not None and entry[0]() is table and cols in entry[1]:
-            return entry[1][cols]
+        if entry is not None and entry[0]() is table:
+            hit = entry[1].get(cols)
+            if hit is not None and hit[0] == n:
+                return hit[1]
         slab = np.stack([self._table_lane(table, c) for c in cols])
         built = self._build_entry(slab)
         with self._lock:
@@ -1775,17 +1785,23 @@ class PallasBackend(NumpyBackend):
                 # dead tables don't pin their slabs for the engine's lifetime
                 ref = weakref.ref(table,
                                   lambda _, k=tk, d=self._slabs: d.pop(k, None))
-                self._slabs[tk] = (ref, {cols: built})
+                self._slabs[tk] = (ref, {cols: (n, built)})
             else:
-                entry[1].setdefault(cols, built)
-                built = entry[1][cols]
+                cur = entry[1].get(cols)
+                if cur is not None and cur[0] == n:
+                    built = cur[1]
+                else:
+                    entry[1][cols] = (n, built)
         return built
 
     def _stored_entry(self, st, cols: Tuple[str, ...]) -> _KernelSlab:
         tk = ("stored", table_uid(st))
+        n = int(st.nrows)
         entry = self._slabs.get(tk)
-        if entry is not None and entry[0]() is st and cols in entry[1]:
-            return entry[1][cols]
+        if entry is not None and entry[0]() is st:
+            hit = entry[1].get(cols)
+            if hit is not None and hit[0] == n:
+                return hit[1]
         slab = np.stack([self._stored_lane_for(st, c) for c in cols])
         built = self._build_entry(slab)
         with self._lock:
@@ -1793,10 +1809,13 @@ class PallasBackend(NumpyBackend):
             if entry is None or entry[0]() is not st:
                 ref = weakref.ref(st,
                                   lambda _, k=tk, d=self._slabs: d.pop(k, None))
-                self._slabs[tk] = (ref, {cols: built})
+                self._slabs[tk] = (ref, {cols: (n, built)})
             else:
-                entry[1].setdefault(cols, built)
-                built = entry[1][cols]
+                cur = entry[1].get(cols)
+                if cur is not None and cur[0] == n:
+                    built = cur[1]
+                else:
+                    entry[1][cols] = (n, built)
         return built
 
     def _launch(self, entry: _KernelSlab, static_atoms: Tuple[Tuple[int, int], ...],
@@ -2005,6 +2024,8 @@ class ScanStats:
     device_chosen: int = 0
     insitu_chosen: int = 0
     decode_chosen: int = 0
+    # disk-tier (memmap-backed) stages answered in situ without promotion
+    disk_insitu_chosen: int = 0
     # scans the worker pool actually fanned out (surviving work cleared the
     # measured cutover); zero means the parallel path ran serial throughout
     fanout_scans: int = 0
@@ -2255,7 +2276,7 @@ class ScanEngine:
         """Row-range view of ``table`` with stable identity: repeated scans of
         the same partition run reuse one slice object, so identity-keyed
         backend caches (slabs, sorted indexes) stay warm across queries."""
-        ck = (table_uid(table), lo, hi)
+        ck = (table_uid(table), int(table.nrows), lo, hi)
         entry = self._slices.get(ck)
         if entry is not None and entry[0]() is table:
             return entry[1]
@@ -2532,8 +2553,8 @@ class ScanEngine:
 
     def _sorted_col(self, table: Table, col: str):
         """(order, sorted_values) for a column — the batch path's scan index,
-        computed once per table/column and cached (tables are immutable)."""
-        ck = (table_uid(table), col)
+        computed once per (table, row watermark)/column and cached."""
+        ck = (table_uid(table), int(table.nrows), col)
         entry = self._sorts.get(ck)
         if entry is not None and entry[0]() is table:
             return entry[1], entry[2]

@@ -213,6 +213,9 @@ class ServiceStats:
         # degradation or an unmaterialized opaque-UDF stage produced a
         # (well-defined) superset instead of exact lineage
         self.superset_answers = 0
+        # answers served while at least one queried stage lived on the
+        # out-of-core (memmap) tier — still precise, paid at disk bandwidth
+        self.disk_tier_answers = 0
         self._latencies = deque(maxlen=self.RESERVOIR)
 
     def bump(self, **deltas: int) -> None:
@@ -234,6 +237,9 @@ class ServiceStats:
     # optional zero-arg callable merged into the snapshot under "cost_model"
     # (the LineageService wires this to its pipelines' cost-model snapshots)
     extra_provider = None
+    # optional zero-arg callable merged under "store_tiers": per-pipeline
+    # RAM/disk residency summaries from the out-of-core store tier
+    tier_provider = None
 
     def snapshot(self) -> Dict[str, object]:
         with self._lock:
@@ -257,6 +263,10 @@ class ServiceStats:
             out["latency_ms_p50"] = out["latency_ms_p99"] = 0.0
         if self.extra_provider is not None:
             out["cost_model"] = self.extra_provider()
+        if self.tier_provider is not None:
+            tiers = self.tier_provider()
+            if tiers:
+                out["store_tiers"] = tiers
         return out
 
     __call__ = snapshot
@@ -323,6 +333,7 @@ class LineageService:
         self._closed = False
         self.stats = ServiceStats()
         self.stats.extra_provider = self._cost_stats
+        self.stats.tier_provider = self._tier_stats
         # test seam: called (with the pipeline key) on the dispatcher thread
         # after the generation token is read and before the query dispatches —
         # lets a race test hold the window open while another thread re-runs
@@ -357,6 +368,17 @@ class LineageService:
         return {
             key: pt.scan_engine.cost_model.snapshot()
             for key, pt in sorted(self._pipelines.items())
+        }
+
+    def _tier_stats(self) -> Dict[str, object]:
+        """Per-pipeline store-tier residency (stage counts and bytes on the
+        RAM vs out-of-core tiers, plus demotion/promotion counters) — merged
+        into ``stats()`` as ``store_tiers``.  Pipelines without an attached
+        store are omitted."""
+        return {
+            key: pt.store.tier_summary()
+            for key, pt in sorted(self._pipelines.items())
+            if pt.store is not None
         }
 
     def explain(self, row: RowSpec, pipeline: str = "default"):
@@ -612,6 +634,11 @@ class LineageService:
                         self.stats.bump(failed=1)
             return
         self.stats.record_batch(requests=served, queries=len(rows))
+        if pt.store is not None and pt.store.disk_stages():
+            # answered while stages sat on the out-of-core tier: precise,
+            # but paid at memmap (page-fault) bandwidth — tracked so tier
+            # pressure is visible in stats() alongside superset_rate
+            self.stats.bump(disk_tier_answers=len(rows))
         # insert-time token re-check: a run()/run_delta() that raced the scan
         # means these answers may mix pre- and post-run state — caching them
         # under either token could serve a stale answer as current.  Fulfil

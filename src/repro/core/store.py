@@ -51,6 +51,8 @@ decoded table.
 from __future__ import annotations
 
 import itertools
+import shutil
+import tempfile
 import threading
 import time
 from dataclasses import dataclass
@@ -837,6 +839,10 @@ class StoredTable:
         # non-aliasing identity token for uid-keyed engine/backend caches
         # (shared counter with Table; never recycled, unlike id())
         self.uid = next_table_uid()
+        # residency tier: "ram" (arrays resident) or "disk" (payload arrays
+        # are read-only memmaps over spilled files — bytes fault in lazily
+        # as scans touch them; zone maps stay RAM-eager either way)
+        self.tier = "ram"
         # per-partition min/max/null stats built on the raw columns before
         # encoding; in-situ scans prune whole partitions against them
         self.zone_maps = zone_maps
@@ -1210,6 +1216,14 @@ class IntermediateStore:
         # decode-and-re-encode) — surfaced by explain()/benchmarks
         self.delta_stats: Dict[str, int] = {
             "delta_puts": 0, "cols_fast": 0, "cols_reencoded": 0}
+        # out-of-core tier state: spill root (created on first demote, owned
+        # by this store, removed by close()), the manifest entry per demoted
+        # stage, and a per-stage version counter so a re-demote after an
+        # append never overwrites files an open memmap may still read
+        self._spill_dir: Optional[str] = None
+        self._disk_entries: Dict[int, Dict] = {}
+        self._disk_versions: Dict[int, int] = {}
+        self.tier_stats: Dict[str, int] = {"demotions": 0, "promotions": 0}
 
     # ------------------------------------------------------------------ #
     def put(self, node_id: int, table: Table) -> StoredTable:
@@ -1310,6 +1324,115 @@ class IntermediateStore:
             self.generation = next(_STORE_GENERATIONS)
 
     # ------------------------------------------------------------------ #
+    # out-of-core tier: demote cold stages to disk instead of dropping them
+    # ------------------------------------------------------------------ #
+    def _spill_root(self) -> str:
+        if self._spill_dir is None:
+            self._spill_dir = tempfile.mkdtemp(prefix="predtrace-oocore-")
+        return self._spill_dir
+
+    def demote(self, node_id: int) -> StoredTable:
+        """Move one stage to the disk tier.
+
+        The stage's encoded payload arrays are written to the store's spill
+        root (fsynced, same bytes as the RAM form — no re-encode) and the
+        stage is replaced by a memmap-backed :class:`StoredTable`: zone maps
+        stay RAM-resident for pruning, payload bytes fault in lazily as
+        scans touch them, and every scan route (in-situ atoms, candidate
+        gathers, decode fallback) answers bit-identically to the RAM tier.
+
+        Does **not** bump ``generation``: the stage's rows are unchanged,
+        so every cached lineage answer computed against it stays valid —
+        only the residency (and therefore the scan cost) moved.
+
+        Args:
+            node_id: plan-node id of a stored stage (KeyError if absent).
+        Returns:
+            StoredTable: the disk-tier stage now held by the store (the
+            stage itself when it already lives on disk).
+        """
+        from ..checkpoint import store_io
+
+        st = self.stages[node_id]
+        if st.tier == "disk":
+            return st
+        root = self._spill_root()
+        version = self._disk_versions.get(node_id, -1) + 1
+        self._disk_versions[node_id] = version
+        entry = store_io.save_stage(root, node_id, st, version=version)
+        st2 = store_io.open_stage(root, entry, zone_maps=st.zone_maps)
+        stale = self._disk_entries.get(node_id)
+        self._disk_entries[node_id] = entry
+        self.stages[node_id] = st2
+        if stale is not None:
+            store_io.remove_stage_files(root, stale)
+        self.tier_stats["demotions"] += 1
+        return st2
+
+    def promote(self, node_id: int) -> StoredTable:
+        """Bring a disk-tier stage back to RAM (payload arrays copied out of
+        the memmaps; the spilled files are unlinked).  Like :meth:`demote`
+        this never bumps ``generation`` — answers stay valid across tier
+        moves.  A RAM-tier stage is returned unchanged."""
+        from ..checkpoint import store_io
+
+        st = self.stages[node_id]
+        if st.tier != "disk":
+            return st
+        enc: Dict[str, EncodedColumn] = {}
+        for c, e in st.enc.items():
+            meta, arrays = e.state()
+            enc[c] = column_from_state(
+                meta, {k: np.array(v, copy=True) for k, v in arrays.items()})
+        st2 = StoredTable(enc, {k: list(v) for k, v in st.dicts.items()},
+                          st.name, st.nrows, st.raw_nbytes, st.zone_maps)
+        self.stages[node_id] = st2
+        entry = self._disk_entries.pop(node_id, None)
+        if entry is not None and self._spill_dir is not None:
+            store_io.remove_stage_files(self._spill_dir, entry)
+        self.tier_stats["promotions"] += 1
+        return st2
+
+    def disk_stages(self) -> List[int]:
+        """Node ids of stages currently resident on the disk tier."""
+        return sorted(nid for nid, st in self.stages.items()
+                      if st.tier == "disk")
+
+    def disk_nbytes(self) -> int:
+        """Encoded bytes of disk-tier stages (counted against the disk
+        budget, not the RAM budget)."""
+        return int(sum(st.nbytes() for st in self.stages.values()
+                       if st.tier == "disk"))
+
+    def tier_summary(self) -> Dict[str, object]:
+        """Residency snapshot for explain()/ServiceStats: stage ids and
+        bytes per tier plus cumulative demote/promote counts."""
+        disk = self.disk_stages()
+        return {
+            "ram_stages": sorted(nid for nid in self.stages
+                                 if nid not in set(disk)),
+            "disk_stages": disk,
+            "ram_bytes": self.nbytes() - self.disk_nbytes(),
+            "disk_bytes": self.disk_nbytes(),
+            **self.tier_stats,
+        }
+
+    def close(self) -> None:
+        """Release the out-of-core spill root (all demoted stages' files).
+        Disk-tier stages already open keep working through their memmaps
+        until dropped; reopening demoted stages is no longer possible."""
+        d, self._spill_dir = self._spill_dir, None
+        self._disk_entries.clear()
+        if d is not None:
+            shutil.rmtree(d, ignore_errors=True)
+
+    def __del__(self):  # best-effort: close() is the real contract
+        try:
+            self.close()
+        except Exception:
+            pass
+
+    # ------------------------------------------------------------------ #
     def scan(self, node_id: int, pred, binding: Optional[Dict[str, object]],
              engine: ScanEngine) -> np.ndarray:
         """In-situ boolean mask of ``pred`` over a stored stage, using the
@@ -1372,12 +1495,25 @@ class IntermediateStore:
                 seed_fn = getattr(engine.backend, "_device_seed", None)
                 cands.append(("device_insitu", w_full,
                               seed_fn() if seed_fn is not None else {}))
-        cands.append(("decode", w_full))
-        # a cached decoded view makes the decode cost sunk — the in-situ
-        # path can no longer win, so it isn't offered as a candidate
-        if st._table is None:
-            route, kw = self._insitu_candidate(st, prog)
-            cands.append((route, w_full, kw))
+        if st.tier == "disk":
+            # reload-then-decode pays the same page faults PLUS a full
+            # decode of every column, so a demoted stage offers only the
+            # page-fault-bound mmap in-situ route (same atom programs,
+            # its own seeded bandwidth slope; per-column fallbacks inside
+            # the backend still decode lazily when an encoding defers)
+            from .dispatch import disk_scan_probe
+
+            probe = disk_scan_probe()
+            cands.append(("disk_insitu", w_full,
+                          {"cutover": float(probe.value),
+                           "confidence": probe.confidence}))
+        else:
+            cands.append(("decode", w_full))
+            # a cached decoded view makes the decode cost sunk — the
+            # in-situ path can no longer win, so it isn't offered then
+            if st._table is None:
+                route, kw = self._insitu_candidate(st, prog)
+                cands.append((route, w_full, kw))
         meta = {"rows": int(n), "atoms": int(A)}
         if alive is not None:
             meta.update(partitions=P, alive=ns)
@@ -1403,9 +1539,17 @@ class IntermediateStore:
                     engine.stats.bump(scans=1, insitu_scans=1,
                                       device_chosen=1)
             elif route == "decode":
-                mask = engine.backend.scan(prog, st.to_table(), binding)
+                # a demoted stage must not pin its full decode in RAM — the
+                # planner put it on disk because RAM is what's scarce
+                mask = engine.backend.scan(
+                    prog, st.to_table(cache=st.tier != "disk"), binding)
                 self._note_unpruned(engine, alive, P)
                 engine.stats.bump(scans=1, insitu_scans=1, decode_chosen=1)
+            elif route == "disk_insitu":
+                mask = self.backend.scan(prog, st, binding)
+                self._note_unpruned(engine, alive, P)
+                engine.stats.bump(scans=1, insitu_scans=1,
+                                  disk_insitu_chosen=1)
             else:  # insitu / insitu_heavy
                 mask = self.backend.scan(prog, st, binding)
                 self._note_unpruned(engine, alive, P)

@@ -1,0 +1,395 @@
+"""Out-of-core store tier: demote/promote, the two-tier budget planner,
+the ``disk_insitu`` scan route, and end-to-end precision with every stage
+demoted to memmap-backed disk payloads.
+
+Differential guarantees:
+  1. ``demote()``/``promote()`` round-trip a stage bit-exactly, never bump
+     the store generation, and leave zone maps RAM-eager.
+  2. In-situ scans over a disk-tier stage == ScanEngine over the raw table
+     for every compiled predicate shape (partitioned or not).
+  3. ``plan_materialization`` with a disk budget demotes instead of
+     dropping; only stages fitting neither budget degrade.
+  4. With ``budget_bytes=0`` and ``disk_budget_bytes=None`` every TPC-H
+     pipeline answers precise and bit-identical to the RAM-resident path.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import Executor, PredTrace, ScanEngine
+from repro.core.dispatch import disk_scan_probe, probe_info, reset_for_tests
+from repro.core.expr import Col, IsIn, Param, land, lor
+from repro.core.plan import plan_materialization
+from repro.core.store import InSituBackend, IntermediateStore
+from repro.core.table import Table
+from repro.tpch import ALL_QUERIES
+
+from conftest import lineage_sets
+
+
+def _rng():
+    return np.random.default_rng(11)
+
+
+def _scan_table(n):
+    rng = _rng()
+    return Table.from_dict(
+        {
+            "a": rng.integers(0, 50, n).astype(np.int32),
+            "b": np.sort(rng.integers(0, 10**7, n)).astype(np.int64),
+            "c": rng.integers(0, 200, n).astype(np.int64),
+            "d": rng.normal(size=n),
+            "e": np.round(rng.uniform(0, 100, n) * 100) / 100,
+        },
+        name="t",
+    )
+
+
+def _preds(t):
+    n = t.nrows
+    return [
+        (Col("a") >= 10, {}),
+        (land(Col("b").eq(Param("v")), Col("c") < 100),
+         {"v": int(t.cols["b"][n // 2])}),
+        (Col("b").eq(Param("v")), {"v": t.cols["b"][:50]}),
+        (IsIn(Col("a"), (1, 2, 3)), {}),
+        (land(Col("a") < Col("c"), Col("b") >= 5 * 10**6), {}),
+        (lor(Col("a") < 2, Col("c") > 190), {}),
+        (Col("e").eq(Param("w")), {"w": float(t.cols["e"][17])}),
+    ]
+
+
+# --------------------------------------------------------------------------- #
+# 1. demote / promote round-trip
+# --------------------------------------------------------------------------- #
+
+
+def test_demote_promote_roundtrip():
+    t = _scan_table(4000)
+    store = IntermediateStore()
+    store.put(1, t)
+    gen = store.generation
+    ram = {c: np.array(v, copy=True) for c, v in store.table(1).cols.items()}
+
+    st = store.demote(1)
+    assert st.tier == "disk"
+    assert store.disk_stages() == [1]
+    assert store.tier_stats["demotions"] == 1
+    # demotion is a residency move, not a data change: answers stay warm
+    assert store.generation == gen
+    for c, want in ram.items():
+        got = np.asarray(st.to_table(cache=False).cols[c])
+        assert np.array_equal(got, want, equal_nan=True), c
+
+    st2 = store.promote(1)
+    assert st2.tier == "ram"
+    assert store.disk_stages() == []
+    assert store.tier_stats["promotions"] == 1
+    assert store.generation == gen
+    for c, want in ram.items():
+        assert np.array_equal(np.asarray(st2.to_table().cols[c]), want,
+                              equal_nan=True), c
+    # promoted arrays must be real RAM copies, not views over spill files
+    summ = store.tier_summary()
+    assert summ["disk_stages"] == [] and summ["disk_bytes"] == 0
+    store.close()
+
+
+def test_demote_idempotent_and_promote_noop():
+    t = _scan_table(500)
+    store = IntermediateStore()
+    store.put(1, t)
+    store.demote(1)
+    store.demote(1)  # already on disk: no second spill
+    assert store.tier_stats["demotions"] == 1
+    store.promote(1)
+    store.promote(1)  # already in RAM: no-op
+    assert store.tier_stats["promotions"] == 1
+    store.close()
+
+
+def test_close_removes_spill_root():
+    import os
+
+    t = _scan_table(300)
+    store = IntermediateStore()
+    store.put(1, t)
+    store.demote(1)
+    root = store._spill_dir
+    assert root is not None and os.path.isdir(root)
+    store.close()
+    assert not os.path.exists(root)
+
+
+# --------------------------------------------------------------------------- #
+# 2. disk-tier scans == engine over raw tables
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("part_rows", [None, 1024])
+def test_disk_tier_scan_matches_engine(part_rows):
+    t = _scan_table(8000)
+    store = IntermediateStore(part_rows=part_rows)
+    store.put(1, t)
+    store.demote(1)
+    st = store.get(1)
+    assert st.tier == "disk"
+    if part_rows:
+        # zone maps stay RAM-eager on the demoted stage
+        assert st.zone_maps is not None and st.zone_maps.n_partitions > 1
+    eng = ScanEngine()
+    be = InSituBackend()
+    for pred, binding in _preds(t):
+        got = be.scan(eng.compile(pred), st, binding)
+        want = eng.scan(pred, t, binding)
+        assert np.array_equal(got, want), pred
+    store.close()
+
+
+def test_store_scan_routes_disk_insitu():
+    t = _scan_table(8000)
+    store = IntermediateStore()
+    store.put(1, t)
+    store.demote(1)
+    eng = ScanEngine()
+    pred, binding = _preds(t)[0]
+    got = store.scan(1, pred, binding, eng)
+    want = eng.scan(pred, t, binding)
+    assert np.array_equal(got, want)
+    assert eng.stats.disk_insitu_chosen >= 1
+    store.close()
+
+
+def test_disk_tier_put_delta_then_scan():
+    """An append to a demoted stage reads through the memmap, produces a
+    fresh RAM-tier stage, and scans over the grown rows stay exact."""
+    t = _scan_table(3000)
+    t2 = _scan_table(4000)
+    delta = Table.from_dict(
+        {c: np.asarray(v)[3000:] for c, v in t2.cols.items()}, name="t")
+    store = IntermediateStore()
+    store.put(1, t)
+    store.demote(1)
+    st2 = store.put_delta(1, delta)
+    assert st2.nrows == 4000
+    assert st2.tier == "ram"
+    full = {c: np.concatenate([np.asarray(t.cols[c]), np.asarray(delta.cols[c])])
+            for c in t.cols}
+    ft = Table.from_dict(full, name="t")
+    eng = ScanEngine()
+    be = InSituBackend()
+    for pred, binding in _preds(t):
+        got = be.scan(eng.compile(pred), st2, binding)
+        want = eng.scan(pred, ft, binding)
+        assert np.array_equal(got, want), pred
+    store.close()
+
+
+def test_device_route_survives_append():
+    """Regression (stale slab cache): a device-route scan, then an append,
+    then a rescan must see the grown rows — a kernel slab built before the
+    append can never answer for the grown table."""
+    n = 4096
+    t = _scan_table(n)
+    store = IntermediateStore()
+    store.put(1, t)
+    eng = ScanEngine(backend="pallas", device_cutover=0)
+    pred, binding = (Col("a") >= 10, {})
+    prog = eng.compile(pred)
+    st = store.get(1)
+    got1 = eng.backend.scan_stored(prog, st, binding, force=True)
+    if got1 is None:
+        pytest.skip("device code-space path unavailable for this layout")
+    assert np.array_equal(got1, np.asarray(t.cols["a"]) >= 10)
+
+    delta = Table.from_dict(
+        {c: np.asarray(v)[: n // 4] for c, v in t.cols.items()}, name="t")
+    st2 = store.put_delta(1, delta)
+    want = np.concatenate(
+        [np.asarray(t.cols["a"]) >= 10, np.asarray(delta.cols["a"]) >= 10])
+    got2 = eng.backend.scan_stored(prog, st2, binding, force=True)
+    if got2 is None:
+        got2 = InSituBackend().scan(prog, st2, binding)
+    assert got2.shape[0] == st2.nrows
+    assert np.array_equal(got2, want)
+    store.close()
+
+
+# --------------------------------------------------------------------------- #
+# 3. two-tier budget planner
+# --------------------------------------------------------------------------- #
+
+
+def _planned(tpch_db, qname, **kw):
+    plan = ALL_QUERIES[qname](tpch_db)
+    res = Executor(tpch_db).run(plan)
+    pt = PredTrace(tpch_db, plan, store=True, **kw)
+    pt.infer(stats=res.stats)
+    pt.run()
+    return pt, res
+
+
+def test_planner_demotes_instead_of_dropping(tpch_db):
+    pt, _ = _planned(tpch_db, "q3", budget_bytes=0, disk_budget_bytes=None)
+    mp = pt.mat_plan
+    assert mp is not None
+    assert mp.kept == []
+    assert not mp.dropped, "unlimited disk: nothing may degrade"
+    assert mp.disk, "expected stages on the disk tier"
+    assert set(pt.store.disk_stages()) == set(mp.disk)
+    assert mp.disk_bytes > 0
+    pt.close()
+
+
+def test_planner_disk_budget_zero_is_seed_behaviour(tpch_db):
+    pt0, _ = _planned(tpch_db, "q3", budget_bytes=0)  # disk tier defaults off
+    mp = pt0.mat_plan
+    assert mp.disk == [] and mp.kept == []
+    assert mp.dropped, "no disk tier: tight RAM budget still drops"
+    pt0.close()
+
+
+def test_planner_partial_disk_budget(tpch_db):
+    # find the per-stage sizes, then admit exactly the first stage to disk
+    probe, _ = _planned(tpch_db, "q3", budget_bytes=0, disk_budget_bytes=None)
+    mp = probe.mat_plan
+    sizes = [mp.sizes.get(nid, 0) for nid in mp.disk]
+    probe.close()
+    if len(sizes) < 2:
+        pytest.skip("q3 materializes fewer than two stages at this sf")
+    part = sizes[0]
+    pt, _ = _planned(tpch_db, "q3", budget_bytes=0, disk_budget_bytes=part)
+    mp2 = pt.mat_plan
+    assert mp2.disk and mp2.disk_bytes <= part
+    assert mp2.dropped, "stages beyond the disk budget degrade"
+    pt.close()
+
+
+def test_planner_unit_two_tier():
+    """Direct planner semantics on a synthetic LineagePlan."""
+    from repro.core.plan import LineagePlan, Stage
+
+    def mk_stage(nid):
+        return Stage(node_id=nid, run_pred=Col("x") > 0, params_out={})
+
+    lp = LineagePlan.__new__(LineagePlan)
+    lp.stages = [mk_stage(1), mk_stage(2), mk_stage(3)]
+    sizes = {1: 100, 2: 100, 3: 100}
+    mp = plan_materialization(lp, sizes, budget_bytes=100,
+                              disk_budget_bytes=100)
+    assert mp.kept == [1] and mp.disk == [2] and mp.dropped == {3}
+    # budget_bytes=None keeps everything in RAM regardless of disk budget
+    mp2 = plan_materialization(lp, sizes, budget_bytes=None,
+                               disk_budget_bytes=0)
+    assert mp2.kept == [1, 2, 3] and mp2.disk == [] and not mp2.dropped
+    # unlimited disk: nothing drops
+    mp3 = plan_materialization(lp, sizes, budget_bytes=0,
+                               disk_budget_bytes=None)
+    assert mp3.kept == [] and mp3.disk == [1, 2, 3] and not mp3.dropped
+    assert mp3.disk_bytes == 300
+
+
+# --------------------------------------------------------------------------- #
+# 4. end-to-end: precise under budget 0 with unlimited disk
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("qname", ["q3", "q5", "q10"])
+def test_budget_zero_disk_unlimited_is_precise(tpch_db, qname):
+    plan = ALL_QUERIES[qname](tpch_db)
+    res = Executor(tpch_db).run(plan)
+    if res.output.nrows == 0:
+        pytest.skip(f"{qname} empty at this scale factor")
+    pt_ram = PredTrace(tpch_db, plan, store=True)
+    pt_ram.infer(stats=res.stats)
+    pt_ram.run()
+    pt_disk = PredTrace(tpch_db, plan, store=True,
+                        budget_bytes=0, disk_budget_bytes=None)
+    pt_disk.infer(stats=res.stats)
+    pt_disk.run()
+    assert pt_disk.store.disk_stages(), "expected demoted stages"
+    assert pt_disk.precision_token()[1] == (), "no dropped stages"
+    n = min(6, res.output.nrows)
+    for r in range(n):
+        a_ram = pt_ram.query(r)
+        a_disk = pt_disk.query(r)
+        assert a_disk.all_precise(), (qname, r)
+        assert lineage_sets(a_ram.lineage) == lineage_sets(a_disk.lineage), \
+            (qname, r)
+        # bit-identical row sets, not just set-equal
+        for tname in a_ram.lineage:
+            assert np.array_equal(np.sort(np.asarray(a_ram.lineage[tname])),
+                                  np.sort(np.asarray(a_disk.lineage[tname])))
+    # report surfaces the tier decision
+    rep = pt_disk.explain(0)
+    pipe = rep.pipeline if isinstance(rep.pipeline, dict) else {}
+    assert pipe.get("disk_budget_bytes", 0) is None
+    assert pipe.get("stages_disk")
+    assert len(pipe.get("tiers", {}).get("disk_stages", [])) >= 1
+    pt_ram.close()
+    pt_disk.close()
+
+
+def test_answer_generation_stable_across_tier_moves(tpch_db):
+    pt, res = _planned(tpch_db, "q3")
+    if res.output.nrows == 0:
+        pytest.skip("q3 empty at this scale factor")
+    gen = pt.answer_generation()
+    for nid in list(pt.store.stages):
+        pt.store.demote(nid)
+    assert pt.answer_generation() == gen
+    for nid in list(pt.store.stages):
+        pt.store.promote(nid)
+    assert pt.answer_generation() == gen
+    pt.close()
+
+
+def test_service_surfaces_tier_residency(tpch_db):
+    from repro.core.service import LineageService
+
+    plan = ALL_QUERIES["q3"](tpch_db)
+    res = Executor(tpch_db).run(plan)
+    if res.output.nrows == 0:
+        pytest.skip("q3 empty at this scale factor")
+    pt = PredTrace(tpch_db, plan, store=True,
+                   budget_bytes=0, disk_budget_bytes=None)
+    pt.infer(stats=res.stats)
+    pt.run()
+    svc = LineageService(pt)
+    try:
+        ans = svc.submit(0).result(timeout=30)
+        assert ans.all_precise()
+        stats = svc.stats()
+        assert stats["disk_tier_answers"] >= 1
+        tiers = stats["store_tiers"]["default"]
+        assert len(tiers["disk_stages"]) >= 1 and tiers["ram_stages"] == []
+    finally:
+        svc.close()
+        pt.close()
+
+
+# --------------------------------------------------------------------------- #
+# 5. disk_insitu dispatch probe
+# --------------------------------------------------------------------------- #
+
+
+def test_disk_probe_env_override(monkeypatch):
+    monkeypatch.setenv("PREDTRACE_DISK_CUTOVER", "12345")
+    reset_for_tests()
+    try:
+        p = disk_scan_probe()
+        assert p.value == 12345 and p.source == "env"
+    finally:
+        reset_for_tests()
+
+
+def test_disk_probe_measures_and_caches(monkeypatch):
+    monkeypatch.delenv("PREDTRACE_DISK_CUTOVER", raising=False)
+    reset_for_tests()
+    try:
+        p = disk_scan_probe()
+        assert 256 <= p.value <= (1 << 20)
+        assert disk_scan_probe() is p  # cached
+        assert probe_info()["disk"]["value"] == p.value
+    finally:
+        reset_for_tests()

@@ -390,6 +390,65 @@ def test_atomic_save_replaces_previous(tmp_path):
     assert set(load_store(tmp_path).stages) == {1, 2}
 
 
+@pytest.mark.parametrize("part_rows", [None, 1024])
+@pytest.mark.parametrize("n", [1000, 40000])
+def test_disk_tier_insitu_matches_ram_and_decode(n, part_rows):
+    """mmap differential: a demoted (memmap-backed) stage answers every
+    compiled predicate shape bit-identically to the RAM-resident in-situ
+    path AND to decode-then-scan, partitioned or not."""
+    from repro.core.store import IntermediateStore
+
+    t = _scan_table(n)
+    store = IntermediateStore(part_rows=part_rows)
+    store.put(1, t)
+    ram_st = store.get(1)
+    eng = ScanEngine()
+    be = InSituBackend()
+    progs = [(eng.compile(p), p, b) for p, b in _preds(t)]
+    ram = [be.scan(pr, ram_st, b) for pr, _, b in progs]
+    store.demote(1)
+    disk_st = store.get(1)
+    assert disk_st.tier == "disk"
+    for (pr, p, b), want in zip(progs, ram):
+        got = be.scan(pr, disk_st, b)
+        assert np.array_equal(got, want), p
+        dec = eng.scan(p, disk_st.to_table(cache=False), b)
+        assert np.array_equal(dec, want), p
+    store.close()
+
+
+@pytest.mark.parametrize("budget_key", ["zero", "partial", "none"])
+def test_budget_sweep_disk_tier_matches_ram(tpch_db, budget_key):
+    """Across RAM budgets {0, partial, None} with unlimited disk, lineage
+    answers stay precise and bit-identical to the unbudgeted RAM path."""
+    plan = ALL_QUERIES["q3"](tpch_db)
+    res = Executor(tpch_db).run(plan)
+    if res.output.nrows == 0:
+        pytest.skip("q3 empty at this scale factor")
+    ref = PredTrace(tpch_db, plan, store=True)
+    ref.infer(stats=res.stats)
+    ref.run()
+    total = ref.store.nbytes()
+    budget = {"zero": 0, "partial": max(total // 2, 1),
+              "none": None}[budget_key]
+    pt = PredTrace(tpch_db, plan, store=True, budget_bytes=budget,
+                   disk_budget_bytes=None)
+    pt.infer(stats=res.stats)
+    pt.run()
+    assert not pt.mat_plan.dropped, "unlimited disk: nothing degrades"
+    if budget_key == "zero":
+        assert pt.store.disk_stages()
+    elif budget_key == "none":
+        assert not pt.store.disk_stages()
+    for r in range(min(6, res.output.nrows)):
+        a_ref, a = ref.query(r), pt.query(r)
+        assert a.all_precise(), (budget_key, r)
+        assert lineage_sets(a_ref.lineage) == lineage_sets(a.lineage), \
+            (budget_key, r)
+    pt.close()
+    ref.close()
+
+
 def test_analyze_column_stats_shape():
     arr = np.sort(_rng().integers(0, 1000, 2000)).astype(np.int64)
     st = analyze_column(arr)

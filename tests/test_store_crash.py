@@ -1,0 +1,286 @@
+"""Crash injection for the spill path (checkpoint/store_io.py).
+
+A simulated crash is a raised ``_Crash`` at one of the kill points between
+the first staged byte and the final cleanup: payload writes, the manifest
+write, the pre-rename fsyncs, the demote rename (``store`` -> ``store.old``),
+the promote rename (``store.tmp`` -> ``store``), and the old-spill cleanup.
+After every crash the invariant is the same: ``load_store`` must return a
+complete, hash-verified store equal to either the OLD contents or the NEW
+contents — never a torn mix, never an error.
+"""
+
+import shutil
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import store_io
+from repro.checkpoint.store_io import load_store, save_store, save_store_delta
+from repro.core.store import IntermediateStore
+from repro.core.table import Table
+
+
+class _Crash(RuntimeError):
+    """Simulated process death at a spill kill point."""
+
+
+def _crash_after(real, k):
+    """Wrapper that performs ``real`` for the first ``k`` calls, then dies."""
+    state = {"n": 0}
+
+    def wrapper(*a, **kw):
+        if state["n"] >= k:
+            raise _Crash(f"injected crash at call {k}")
+        state["n"] += 1
+        return real(*a, **kw)
+
+    return wrapper
+
+
+def _table(n, seed=3):
+    rng = np.random.default_rng(seed)
+    return Table.from_dict(
+        {
+            "a": rng.integers(0, 50, n).astype(np.int32),
+            "b": np.sort(rng.integers(0, 10**6, n)).astype(np.int64),
+            "c": rng.normal(size=n),
+        },
+        name="t",
+    )
+
+
+def _snapshot(store):
+    return {
+        nid: {c: np.array(v, copy=True) for c, v in st.to_table().cols.items()}
+        for nid, st in store.stages.items()
+    }
+
+
+def _assert_old_or_new(tmp_path, old, new):
+    """The recovery contract: a reload after any crash equals one of the two
+    consistent states, bit-exactly, under full hash verification."""
+    loaded = load_store(tmp_path)
+    for want in (old, new):
+        if set(loaded.stages) != set(want):
+            continue
+        ok = all(
+            np.array_equal(np.asarray(loaded.table(nid).cols[c]), arr,
+                           equal_nan=True)
+            for nid, cols in want.items() for c, arr in cols.items()
+        )
+        if ok:
+            return "old" if want is old else "new"
+    raise AssertionError(
+        f"reloaded store matches neither state: stages={sorted(loaded.stages)}"
+    )
+
+
+@pytest.fixture()
+def two_spills(tmp_path):
+    """A committed spill of stage {1}, plus a store grown to {1, 2} whose
+    re-spill the test crashes."""
+    store = IntermediateStore()
+    store.put(1, _table(700))
+    save_store(tmp_path, store)
+    old = _snapshot(store)
+    store.put(2, _table(900, seed=5))
+    new = _snapshot(store)
+    return store, old, new
+
+
+# every np.save call during a save (payloads) is a kill point
+@pytest.mark.parametrize("k", [0, 1, 2])
+def test_crash_during_payload_write(two_spills, tmp_path, monkeypatch, k):
+    store, old, new = two_spills
+    monkeypatch.setattr(store_io.np, "save", _crash_after(np.save, k))
+    with pytest.raises(_Crash):
+        save_store(tmp_path, store)
+    monkeypatch.undo()
+    assert _assert_old_or_new(tmp_path, old, new) == "old"
+
+
+def test_crash_during_manifest_write(two_spills, tmp_path, monkeypatch):
+    store, old, new = two_spills
+    monkeypatch.setattr(store_io.json, "dumps", _crash_after(None, 0))
+    with pytest.raises(_Crash):
+        save_store(tmp_path, store)
+    monkeypatch.undo()
+    assert _assert_old_or_new(tmp_path, old, new) == "old"
+
+
+def test_crash_during_staged_fsync(two_spills, tmp_path, monkeypatch):
+    store, old, new = two_spills
+    monkeypatch.setattr(store_io, "_fsync_file",
+                        _crash_after(store_io._fsync_file, 1))
+    with pytest.raises(_Crash):
+        save_store(tmp_path, store)
+    monkeypatch.undo()
+    assert _assert_old_or_new(tmp_path, old, new) == "old"
+
+
+def test_crash_between_demote_and_promote(two_spills, tmp_path, monkeypatch):
+    """Death after ``store`` -> ``store.old`` but before ``store.tmp`` ->
+    ``store``: only ``store.old`` is complete, and reload recovers from it."""
+    store, old, new = two_spills
+    import os
+
+    monkeypatch.setattr(store_io.os, "replace", _crash_after(os.replace, 1))
+    with pytest.raises(_Crash):
+        save_store(tmp_path, store)
+    monkeypatch.undo()
+    assert not (tmp_path / "store" / "manifest.json").exists()
+    assert _assert_old_or_new(tmp_path, old, new) == "old"
+
+
+def test_crash_before_old_cleanup(two_spills, tmp_path, monkeypatch):
+    """Death after the promote rename but before removing ``store.old``:
+    the NEW spill is committed; the stale old copy is ignored."""
+    store, old, new = two_spills
+    monkeypatch.setattr(store_io.shutil, "rmtree",
+                        _crash_after(shutil.rmtree, 0))
+    with pytest.raises(_Crash):
+        save_store(tmp_path, store)
+    monkeypatch.undo()
+    assert (tmp_path / "store.old").exists()
+    assert _assert_old_or_new(tmp_path, old, new) == "new"
+    # the next successful save clears the leftover .old
+    save_store(tmp_path, store)
+    assert not (tmp_path / "store.old").exists()
+
+
+def test_crash_during_delta_reuse(tmp_path, monkeypatch):
+    """Death while hard-linking reused chunks of an incremental re-spill
+    leaves only a partial tmp; reload yields the previous spill."""
+    import os
+
+    store = IntermediateStore(part_rows=128)
+    store.put(1, _table(1000))
+    save_store(tmp_path, store)
+    old = _snapshot(store)
+    t2 = _table(1300, seed=9)
+    delta = Table.from_dict(
+        {c: np.asarray(v)[1000:] for c, v in t2.cols.items()}, name="t")
+    store.put_delta(1, delta)
+    new = _snapshot(store)
+    monkeypatch.setattr(store_io.os, "link", _crash_after(os.link, 2))
+    with pytest.raises(_Crash):
+        save_store_delta(tmp_path, store)
+    monkeypatch.undo()
+    assert _assert_old_or_new(tmp_path, old, new) == "old"
+    # and the retry (no injection) commits the new state
+    save_store_delta(tmp_path, store)
+    assert _assert_old_or_new(tmp_path, old, new) == "new"
+
+
+def test_corrupt_current_falls_back_to_old(tmp_path):
+    """Satellite: a hash mismatch in the live spill with an intact ``.old``
+    recovers from the old manifest instead of raising."""
+    store = IntermediateStore()
+    store.put(1, _table(400))
+    save_store(tmp_path, store)
+    old = _snapshot(store)
+    # simulate a crash that left .old behind...
+    shutil.copytree(tmp_path / "store", tmp_path / "store.old")
+    store.put(2, _table(300, seed=8))
+    new = _snapshot(store)
+    # ...then a torn/corrupted live spill (bypassing the atomic writer)
+    import json
+
+    save_store(tmp_path / "scratch", store)
+    shutil.rmtree(tmp_path / "store")
+    shutil.copytree(tmp_path / "scratch" / "store", tmp_path / "store")
+    victim = next(p for p in (tmp_path / "store").iterdir()
+                  if p.suffix == ".npy")
+    data = bytearray(victim.read_bytes())
+    data[-1] ^= 0xFF
+    victim.write_bytes(bytes(data))
+    assert _assert_old_or_new(tmp_path, old, new) == "old"
+
+
+def test_corrupt_without_old_still_raises(tmp_path):
+    """No ``.old`` to fall back to: corruption stays a hard error."""
+    store = IntermediateStore()
+    store.put(1, _table(300))
+    save_store(tmp_path, store)
+    victim = next(p for p in (tmp_path / "store").iterdir()
+                  if p.suffix == ".npy")
+    data = bytearray(victim.read_bytes())
+    data[-1] ^= 0xFF
+    victim.write_bytes(bytes(data))
+    with pytest.raises(IOError):
+        load_store(tmp_path)
+
+
+def test_delta_spill_counts_link_vs_copy(tmp_path, monkeypatch):
+    """Satellite: chunk reuse is counted as linked vs copied, and a
+    link-refusing filesystem (EXDEV et al.) degrades to verified copies."""
+    import json
+    import os
+
+    store = IntermediateStore(part_rows=128)
+    store.put(1, _table(1000))
+    save_store(tmp_path, store)
+    t2 = _table(1300, seed=9)
+    delta = Table.from_dict(
+        {c: np.asarray(v)[1000:] for c, v in t2.cols.items()}, name="t")
+    store.put_delta(1, delta)
+    save_store_delta(tmp_path, store)
+    man = json.loads((tmp_path / "store" / "manifest.json").read_text())
+    inc = man["incremental"]
+    assert inc["reused_chunks"] > 0
+    assert inc["linked"] > 0 and inc["copied"] == 0
+
+    # link always refused -> every reused chunk copies, with verification
+    t3 = _table(1600, seed=10)
+    delta2 = Table.from_dict(
+        {c: np.asarray(v)[1300:] for c, v in t3.cols.items()}, name="t")
+    store.put_delta(1, delta2)
+
+    def refuse(*a, **kw):
+        raise OSError(18, "Invalid cross-device link")
+
+    monkeypatch.setattr(store_io.os, "link", refuse)
+    save_store_delta(tmp_path, store)
+    monkeypatch.undo()
+    man2 = json.loads((tmp_path / "store" / "manifest.json").read_text())
+    inc2 = man2["incremental"]
+    assert inc2["reused_chunks"] > 0
+    assert inc2["linked"] == 0 and inc2["copied"] > 0
+    # the copied payloads verified against the manifest hashes on reload too
+    loaded = load_store(tmp_path)
+    assert np.array_equal(np.asarray(loaded.table(1).cols["a"]),
+                          np.asarray(store.table(1).cols["a"]))
+
+
+def test_copied_chunk_detects_corruption(tmp_path, monkeypatch):
+    """A copy that lands wrong (bit rot, short write) fails the inline
+    hash check instead of being promoted silently."""
+    import os
+
+    store = IntermediateStore(part_rows=128)
+    store.put(1, _table(1000))
+    save_store(tmp_path, store)
+    t2 = _table(1300, seed=9)
+    delta = Table.from_dict(
+        {c: np.asarray(v)[1000:] for c, v in t2.cols.items()}, name="t")
+    store.put_delta(1, delta)
+
+    def refuse(*a, **kw):
+        raise OSError(18, "Invalid cross-device link")
+
+    real_copy = store_io.shutil.copy2
+
+    def corrupt_copy(src, dst, **kw):
+        out = real_copy(src, dst, **kw)
+        from pathlib import Path
+
+        p = Path(dst)
+        data = bytearray(p.read_bytes())
+        data[-1] ^= 0xFF
+        p.write_bytes(bytes(data))
+        return out
+
+    monkeypatch.setattr(store_io.os, "link", refuse)
+    monkeypatch.setattr(store_io.shutil, "copy2", corrupt_copy)
+    with pytest.raises(IOError):
+        save_store_delta(tmp_path, store)
